@@ -1,0 +1,133 @@
+"""Roofline report generator: reads experiments/dryrun/*.json and derives
+the three per-cell roofline terms (TPU v5e constants):
+
+  compute    = HLO_FLOPs_per_chip / 197e12 FLOP/s
+  memory     = HLO_bytes_per_chip / 819e9  B/s
+  collective = weighted_collective_bytes_per_chip / 50e9 B/s/link
+
+plus the MODEL_FLOPS / HLO_FLOPS "useful compute" ratio and the dominant
+bottleneck.  ``python -m benchmarks.roofline`` prints the table and
+writes experiments/roofline.json / .md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # B/s per chip
+LINK_BW = 50e9          # B/s per ICI link
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "roofline.json")
+
+# ring-traffic weights per payload byte (send+recv for all-reduce)
+_COLL_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def load_records(dryrun_dir=DRYRUN_DIR):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def roofline_terms(rec):
+    ex = rec.get("extrapolated")
+    if ex is None:
+        return None
+    coll_bytes = sum(_COLL_WEIGHT[k] * v for k, v in ex["coll"].items())
+    t_compute = ex["flops"] / PEAK_FLOPS
+    t_memory = ex["bytes"] / HBM_BW
+    t_coll = coll_bytes / LINK_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    bound = max(t_compute, t_memory, t_coll)
+    out = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "roofline_fraction": t_compute / bound if bound > 0 else 0.0,
+        "collective_bytes": coll_bytes,
+    }
+    mf = rec.get("model_flops")
+    if mf:
+        # cost_analysis is per partitioned (per-chip) module
+        out["useful_flops_ratio"] = mf / (ex["flops"] * rec["chips"])
+    mem = rec.get("full", {}).get("memory")
+    if mem:
+        hbm = (mem["argument_bytes"] + mem["temp_bytes"]
+               + max(mem["output_bytes"] - mem["alias_bytes"], 0))
+        out["hbm_gb"] = hbm / 2**30
+        out["fits_16g"] = hbm <= 16 * 2**30
+    return out
+
+
+def analyze(dryrun_dir=DRYRUN_DIR):
+    rows = []
+    for rec in load_records(dryrun_dir):
+        row = {k: rec.get(k) for k in
+               ("arch", "cell", "mesh", "chips", "family", "basis",
+                "variant")}
+        if "skipped" in rec:
+            row["skipped"] = rec["skipped"]
+        else:
+            terms = roofline_terms(rec)
+            if terms:
+                row.update(terms)
+        rows.append(row)
+    return rows
+
+
+def format_table(rows, mesh="single", variants=False):
+    hdr = (f"{'arch':<22} {'cell':<14} {'comp ms':>9} {'mem ms':>9} "
+           f"{'coll ms':>9} {'bound':<10} {'frac':>5} {'useful':>6} "
+           f"{'HBM GB':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if variants != bool(r.get("variant")):
+            continue
+        name = r["arch"] + (":" + r["variant"] if r.get("variant") else "")
+        if "skipped" in r:
+            lines.append(f"{name:<22} {r['cell']:<14} "
+                         f"{'— skipped: ' + r['skipped'][:60]}")
+            continue
+        if "compute_s" not in r:
+            continue
+        lines.append(
+            f"{name:<22} {r['cell']:<14} "
+            f"{r['compute_s']*1e3:9.2f} {r['memory_s']*1e3:9.2f} "
+            f"{r['collective_s']*1e3:9.2f} {r['dominant']:<10} "
+            f"{r['roofline_fraction']:5.2f} "
+            f"{r.get('useful_flops_ratio', float('nan')):6.2f} "
+            f"{r.get('hbm_gb', float('nan')):7.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    rows = analyze()
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump(rows, f, indent=1)
+    for mesh in ("single", "multi"):
+        print(f"\n=== roofline ({mesh}-pod, baselines) ===")
+        print(format_table(rows, mesh))
+    print("\n=== perf variants (hillclimb; see EXPERIMENTS.md §Perf) ===")
+    print(format_table(rows, "single", variants=True))
+    print(format_table(rows, "multi", variants=True))
+    n_ok = sum(1 for r in rows if "compute_s" in r)
+    n_skip = sum(1 for r in rows if "skipped" in r)
+    print(f"\n{n_ok} analyzed, {n_skip} skipped, "
+          f"{len(rows) - n_ok - n_skip} missing/failed")
+
+
+if __name__ == "__main__":
+    main()

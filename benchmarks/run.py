@@ -1,0 +1,240 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Outputs ``name,us_per_call,derived`` CSV rows (plus a human-readable
+report).  Laptop-scale stand-ins for the paper's instances:
+
+  table2   Per-instance adaptive-sampling statistics (paper Table II):
+           epochs, samples, time, per-epoch aggregate volume, on a
+           road-like grid, an R-MAT social-like graph and a random
+           hyperbolic graph.
+  fig2     Phase breakdown (diameter / calibration / sampling) and the
+           aggregation-mode comparison (hierarchical vs flat vs
+           reduce-to-root) — paper Fig. 2b + §IV-E/F.
+  fig3     Sampling throughput (samples/s) single-device and the
+           per-epoch sample growth across mesh sizes (paper Fig. 3).
+           NOTE: this container has ONE physical core — fake devices
+           serialize, so multi-device rows report *work structure*
+           (samples/epoch, epochs) rather than wall-clock speedup; the
+           roofline report covers projected parallel behavior.
+  fig4     Adaptive-sampling time vs graph size on R-MAT and hyperbolic
+           graphs (paper Fig. 4), laptop scales.
+  kernels  Pallas-kernel oracle microbenches (XLA path timings; the
+           Pallas path is interpret-mode on CPU and not timed).
+
+``python -m benchmarks.run`` runs everything at quick settings;
+``--full`` enlarges instances.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CSV_ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    CSV_ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def _time_call(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Table II analogue
+# ---------------------------------------------------------------------------
+
+def bench_table2(full: bool):
+    from repro.core import (AdaptiveConfig, grid_graph, hyperbolic_graph,
+                            rmat_graph, run_kadabra)
+    scale = 12 if full else 10
+    instances = [
+        ("grid-road", grid_graph(48 if full else 24, 32 if full else 16)),
+        ("rmat-social", rmat_graph(scale, 8, seed=1)),
+        ("hyperbolic", hyperbolic_graph(1 << (scale - 1), 12.0, seed=2)),
+    ]
+    print("\n== Table II analogue: per-instance adaptive-sampling stats ==")
+    print(f"{'instance':<14}{'|V|':>8}{'|E|':>9}{'Ep.':>5}{'Samples':>9}"
+          f"{'Com. MiB/ep':>12}{'Time s':>8}")
+    for name, g in instances:
+        cfg = AdaptiveConfig(eps=0.05, delta=0.1, n0_base=400)
+        t0 = time.perf_counter()
+        res = run_kadabra(g, config=cfg, key=jax.random.PRNGKey(0))
+        dt = time.perf_counter() - t0
+        com_mib = (g.n_nodes + 1) * 4 / 2**20  # one frame per epoch
+        print(f"{name:<14}{g.n_nodes:>8}{g.n_edges_undirected:>9}"
+              f"{res.n_epochs:>5}{res.tau:>9}{com_mib:>12.2f}"
+              f"{res.phase_seconds['sampling']:>8.2f}")
+        emit(f"table2.{name}", dt * 1e6,
+             f"epochs={res.n_epochs};samples={res.tau};"
+             f"omega={res.omega:.0f};converged={res.converged}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 2 analogue: phases + aggregation modes
+# ---------------------------------------------------------------------------
+
+_AGG_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time, jax
+from repro.core import AdaptiveConfig, rmat_graph, run_kadabra
+g = rmat_graph(9, 8, seed=1)
+for agg in ["hierarchical", "flat", "root"]:
+    cfg = AdaptiveConfig(eps=0.08, delta=0.1, aggregation=agg, n0_base=400)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    t0 = time.perf_counter()
+    res = run_kadabra(g, mesh=mesh, config=cfg, key=jax.random.PRNGKey(0))
+    print(f"AGG {agg} {time.perf_counter()-t0:.3f} {res.tau} {res.n_epochs}")
+"""
+
+
+def bench_fig2(full: bool):
+    from repro.core import AdaptiveConfig, rmat_graph, run_kadabra
+    g = rmat_graph(11 if full else 9, 8, seed=1)
+    cfg = AdaptiveConfig(eps=0.05, delta=0.1, n0_base=400)
+    res = run_kadabra(g, config=cfg, key=jax.random.PRNGKey(0))
+    total = sum(res.phase_seconds.values())
+    print("\n== Fig 2b analogue: phase breakdown (single device) ==")
+    for phase, sec in res.phase_seconds.items():
+        print(f"  {phase:<12} {sec:7.2f}s  ({100*sec/max(total,1e-9):4.1f}%)")
+        emit(f"fig2.phase.{phase}", sec * 1e6,
+             f"pct={100*sec/max(total,1e-9):.1f}")
+
+    print("\n== §IV-E/F analogue: aggregation modes on a 2x2x2 mesh ==")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", _AGG_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    if out.returncode:
+        print("  subprocess failed:", out.stderr[-400:])
+        return
+    for line in out.stdout.splitlines():
+        if line.startswith("AGG"):
+            _tag, agg, sec, tau, ep = line.split()
+            print(f"  {agg:<13} {float(sec):6.2f}s  tau={tau} epochs={ep}")
+            emit(f"fig2.agg.{agg}", float(sec) * 1e6,
+                 f"tau={tau};epochs={ep}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 3 analogue: sampling throughput + epoch structure
+# ---------------------------------------------------------------------------
+
+def bench_fig3(full: bool):
+    from repro.core import rmat_graph
+    from repro.core.sampler import sample_batch
+    from repro.core.epoch import epoch_length
+    g = rmat_graph(11 if full else 9, 8, seed=3)
+    n = 64
+    fn = jax.jit(lambda k: sample_batch(g, k, n))
+    us = _time_call(fn, jax.random.PRNGKey(0))
+    rate = n / (us / 1e6)
+    print(f"\n== Fig 3 analogue: sampling throughput ==")
+    print(f"  single device: {rate:,.0f} samples/s "
+          f"(|V|={g.n_nodes}, |E|={g.n_edges_undirected})")
+    emit("fig3.samples_per_s", us / n, f"rate={rate:.0f}")
+    print("  epoch length schedule n0 = 1000/(PT)^1.33 (paper §IV-D):")
+    for devs in [1, 8, 64, 256, 512]:
+        print(f"    devices={devs:<5} n0/device={epoch_length(devs):>5} "
+              f"samples/epoch={devs * epoch_length(devs):>6}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 4 analogue: scaling with graph size
+# ---------------------------------------------------------------------------
+
+def bench_fig4(full: bool):
+    from repro.core import AdaptiveConfig, hyperbolic_graph, rmat_graph, \
+        run_kadabra
+    scales = [8, 9, 10, 11] if full else [8, 9, 10]
+    print("\n== Fig 4 analogue: adaptive sampling time vs graph size ==")
+    for fam, make in [("rmat", lambda s: rmat_graph(s, 8, seed=s)),
+                      ("hyperbolic",
+                       lambda s: hyperbolic_graph(1 << (s - 1), 12.0,
+                                                  seed=s))]:
+        for s in scales:
+            g = make(s)
+            cfg = AdaptiveConfig(eps=0.08, delta=0.1, n0_base=400)
+            res = run_kadabra(g, config=cfg, key=jax.random.PRNGKey(1))
+            samp = res.phase_seconds["sampling"]
+            per_v = samp / g.n_nodes * 1e6
+            print(f"  {fam:<11} |V|={g.n_nodes:<7} |E|="
+                  f"{g.n_edges_undirected:<8} sampling={samp:6.2f}s "
+                  f"({per_v:.2f} us/vertex)")
+            emit(f"fig4.{fam}.s{s}", samp * 1e6,
+                 f"V={g.n_nodes};us_per_vertex={per_v:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Kernel microbenches
+# ---------------------------------------------------------------------------
+
+def bench_kernels(full: bool):
+    from repro.core import erdos_renyi_graph
+    from repro.core.bfs import bfs_sssp
+    from repro.kernels.frontier import frontier_expand_ref
+    from repro.kernels.segsum import gather_segment_sum_ref
+    from repro.kernels.stopcheck import stopcheck_ref
+    print("\n== kernel oracle timings (XLA path; Pallas = interpret) ==")
+    g = erdos_renyi_graph(20000 if full else 5000, 16.0, seed=0)
+    res = bfs_sssp(g, 0)
+    fe = jax.jit(lambda: frontier_expand_ref(g.src, g.dst, res.dist,
+                                             res.sigma, 2))
+    us = _time_call(fe)
+    emit("kernel.frontier.xla", us, f"edges={g.e_pad}")
+
+    rng = np.random.default_rng(0)
+    n, v, d, s = (65536, 4096, 128, 1024) if full else (8192, 1024, 128, 256)
+    ids = jnp.asarray(rng.integers(0, v, n), jnp.int32)
+    seg = jnp.asarray(rng.integers(0, s, n), jnp.int32)
+    w = jnp.ones((n,), jnp.float32)
+    table = jnp.asarray(rng.standard_normal((v, d)), jnp.float32)
+    ss = jax.jit(lambda: gather_segment_sum_ref(ids, seg, w, table, s))
+    emit("kernel.segsum.xla", _time_call(ss), f"N={n};D={d}")
+
+    vv = 200000 if full else 50000
+    counts = jnp.asarray(rng.integers(0, 50, vv), jnp.float32)
+    lil = jnp.asarray(rng.random(vv) * 10 + 0.1, jnp.float32)
+    sc = jax.jit(lambda: stopcheck_ref(counts, 500, lil, lil, 1e5))
+    emit("kernel.stopcheck.xla", _time_call(sc), f"V={vv}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    choices=[None, "table2", "fig2", "fig3", "fig4",
+                             "kernels"])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    jobs = {
+        "table2": bench_table2, "fig2": bench_fig2, "fig3": bench_fig3,
+        "fig4": bench_fig4, "kernels": bench_kernels,
+    }
+    for name, fn in jobs.items():
+        if args.only and name != args.only:
+            continue
+        fn(args.full)
+    print("\n== CSV summary ==")
+    print("name,us_per_call,derived")
+    for row in CSV_ROWS:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")
+
+
+if __name__ == "__main__":
+    main()

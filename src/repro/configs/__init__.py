@@ -1,0 +1,31 @@
+"""Per-architecture configs (one module per assigned architecture).
+
+Importing this package and calling :func:`load_all` registers every
+ArchDef in ``repro.models.registry.REGISTRY``.
+"""
+import importlib
+
+_ARCH_MODULES = [
+    "granite_moe_3b_a800m",
+    "moonshot_v1_16b_a3b",
+    "gemma3_27b",
+    "llama3_2_3b",
+    "qwen2_7b",
+    "graphsage_reddit",
+    "egnn",
+    "nequip",
+    "mace",
+    "mind",
+    "betweenness",
+]
+
+_loaded = False
+
+
+def load_all():
+    global _loaded
+    if _loaded:
+        return
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _loaded = True

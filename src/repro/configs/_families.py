@@ -1,0 +1,308 @@
+"""Family-level cell builders (LM / GNN / recsys) used by the per-arch
+config modules.  Each builder returns a :class:`registry.Built` for one
+(cell, loop-config, mesh) combination."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import registry as R
+from ..models.common import LoopConfig
+from ..models.gnn.message_passing import GraphBatch
+from ..models.recsys import mind as mind_mod
+from ..models.transformer import (TransformerConfig, decode_step, init_cache,
+                                  init_params as lm_init, lm_loss,
+                                  param_specs as lm_specs, prefill_step)
+from ..optim.adamw import AdamWConfig, init_state, state_specs
+from ..train.step import make_train_step
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256),
+    "prefill_32k": dict(seq=32768, batch=32),
+    "decode_32k": dict(seq=32768, batch=128),
+    "long_500k": dict(seq=524288, batch=1),
+}
+
+
+def lm_cells(long_ctx_ok: bool):
+    skip = (None if long_ctx_ok else
+            "pure full-attention arch: 500k-token decode requires the "
+            "sub-quadratic / local-attention support the published "
+            "architecture lacks (DESIGN.md §Arch-applicability)")
+    return {
+        "train_4k": R.Cell("train_4k", "train", basis="kc"),
+        "prefill_32k": R.Cell("prefill_32k", "prefill", basis="kc"),
+        "decode_32k": R.Cell("decode_32k", "decode", basis="k"),
+        "long_500k": R.Cell("long_500k", "decode", basis="k", skip=skip),
+    }
+
+
+def lm_builder(cfg: TransformerConfig, cell_name: str, *, loop: LoopConfig,
+               mesh_axes: Sequence[str], opt: AdamWConfig) -> R.Built:
+    da = tuple(a for a in cfg.batch_axes if a in mesh_axes) or \
+        R.data_axes(mesh_axes)
+    shp = LM_SHAPES[cell_name]
+    pspecs = lm_specs(cfg, loop)
+    params = R.abstract_params(lambda k, c: lm_init(k, c, loop), cfg)
+    n_groups = (loop.layer_groups if loop.layer_groups is not None
+                else cfg.n_groups)
+    n_chunks = max(1, min(shp["seq"],
+                          loop.attn_chunks * cfg.attn_chunk
+                          if loop.attn_chunks else shp["seq"])
+                   // cfg.attn_chunk)
+
+    if cell_name == "train_4k":
+        batch = {"tokens": R.tok_struct(shp["batch"], shp["seq"]),
+                 "targets": R.tok_struct(shp["batch"], shp["seq"])}
+        bspec = {"tokens": P(da, None), "targets": P(da, None)}
+        compress = opt.compress is not None
+        opt_state = jax.eval_shape(partial(init_state, compress=compress),
+                                   params)
+        # production: 4 accumulation slices keep remat-saved activations
+        # inside HBM; measurement compiles run microbatch=1 (identical HLO
+        # totals — every cost is linear in batch rows)
+        micro = 1 if loop.unroll else cfg.train_microbatch
+        fn = make_train_step(lambda p, b: lm_loss(p, b, cfg, loop), opt,
+                             microbatch=micro)
+        return R.Built(fn, (params, opt_state, batch),
+                       (pspecs, state_specs(pspecs, compress), bspec),
+                       donate=(0, 1), n_groups=max(cfg.n_groups, 1),
+                       n_chunks=shp["seq"] // cfg.attn_chunk)
+
+    if cell_name == "prefill_32k":
+        tokens = R.tok_struct(shp["batch"], shp["seq"])
+        fn = lambda p, t: prefill_step(p, t, cfg, loop)
+        return R.Built(fn, (params, tokens), (pspecs, P(da, None)),
+                       donate=(), n_groups=max(cfg.n_groups, 1),
+                       n_chunks=shp["seq"] // cfg.attn_chunk)
+
+    # decode cells: one token against a full cache
+    b, s = shp["batch"], shp["seq"]
+    cache = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    cache = dict(cache, len=jax.ShapeDtypeStruct((), jnp.int32))
+    kv_div = cfg.n_kv_heads % 16 == 0
+    if cell_name == "long_500k":
+        # batch=1: sequence-parallel — shard the cache over the data tier
+        # and kv-heads over the model axis (split-K decode on the
+        # partitioner; DESIGN.md §Serving)
+        kvspec = P(None, None, da, "model" if kv_div else None, None)
+    elif kv_div:
+        # batch over the data tier, kv heads over "model" (gemma/moonshot)
+        kvspec = P(None, da, None, "model", None)
+    else:
+        # kv heads (4/8) don't divide the model axis: sequence-shard the
+        # cache instead (split-K on the partitioner)
+        kvspec = P(None, da, "model", None, None)
+    cspec = {"k": kvspec, "v": kvspec, "len": P()}
+    tokens = R.tok_struct(b, 1)
+    tspec = P(da if b > 1 else None, None)
+    fn = lambda p, c, t: decode_step(p, c, t, cfg, loop)
+    return R.Built(fn, (params, cache, tokens), (pspecs, cspec, tspec),
+                   donate=(1,), n_groups=max(cfg.n_groups, 1), n_chunks=1)
+
+
+def make_lm_archdef(arch_id, source, make_config, make_smoke, long_ctx_ok):
+    cfg_probe = make_config()
+    return R.ArchDef(
+        arch_id=arch_id, family="lm", source=source,
+        make_config=make_config, make_smoke_config=make_smoke,
+        cells=lm_cells(long_ctx_ok), builder=lm_builder,
+        param_count=lambda c: c.active_params(),
+        model_flops=lambda c, cell: _lm_model_flops(c, cell),
+    )
+
+
+def _lm_model_flops(cfg: TransformerConfig, cell_name: str) -> float:
+    """Analytic MODEL_FLOPS per step: 6*N_active*D for training,
+    2*N_active*D for a forward-only step (decode counts one token)."""
+    shp = LM_SHAPES[cell_name]
+    tokens = shp["batch"] * (shp["seq"] if cell_name in
+                             ("train_4k", "prefill_32k") else 1)
+    per_tok = cfg.flops_per_token_fwd()
+    mult = 3.0 if cell_name == "train_4k" else 1.0
+    return mult * per_tok * tokens
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+# (nodes_pad, edges_pad, d_feat, n_classes, n_graphs, task)
+GNN_SHAPES = {
+    # cora-scale full batch: 2708 nodes / 10556 und. edges (x2 directed)
+    "full_graph_sm": dict(nodes=3072, edges=21504, d_feat=1433, classes=7,
+                          graphs=1, task="cls",
+                          logical="n_nodes=2,708 n_edges=10,556"),
+    # reddit neighbor-sampled: 1024 seeds, fanout 15-10
+    "minibatch_lg": dict(nodes=169984, edges=168960, d_feat=602, classes=41,
+                         graphs=1, task="cls",
+                         logical="n_nodes=232,965 n_edges=114,615,892 "
+                                 "batch_nodes=1,024 fanout=15-10"),
+    # ogbn-products full batch
+    "ogb_products": dict(nodes=2449408, edges=61865984, d_feat=100,
+                         classes=47, graphs=1, task="cls",
+                         logical="n_nodes=2,449,029 n_edges=61,859,140"),
+    # 128 molecules x 30 atoms / 64 edges
+    "molecule": dict(nodes=4096, edges=8192, d_feat=1, classes=0,
+                     graphs=128, task="reg",
+                     logical="n_nodes=30 n_edges=64 batch=128"),
+}
+
+
+def gnn_cells():
+    return {name: R.Cell(name, "train", basis="exact")
+            for name in GNN_SHAPES}
+
+
+def gnn_abstract_batch(shape: dict):
+    n, e, g = shape["nodes"], shape["edges"], shape["graphs"]
+    f = jnp.float32
+    return GraphBatch(
+        x=jax.ShapeDtypeStruct((n, shape["d_feat"]), f),
+        z=jax.ShapeDtypeStruct((n,), jnp.int32),
+        pos=jax.ShapeDtypeStruct((n, 3), f),
+        src=jax.ShapeDtypeStruct((e,), jnp.int32),
+        dst=jax.ShapeDtypeStruct((e,), jnp.int32),
+        edge_mask=jax.ShapeDtypeStruct((e,), f),
+        node_mask=jax.ShapeDtypeStruct((n,), f),
+        labels=jax.ShapeDtypeStruct((n,), jnp.int32),
+        graph_id=jax.ShapeDtypeStruct((n,), jnp.int32),
+        y=jax.ShapeDtypeStruct((g,), f),
+        n_graphs=g,
+    )
+
+
+def gnn_batch_specs(mesh_axes, abstract_batch: GraphBatch,
+                    replicated_nodes: bool = False):
+    da = None if replicated_nodes else R.data_axes(mesh_axes)
+    # nodes over the data tier (or replicated); edges over every axis
+    alla = tuple(mesh_axes)
+    spec_leaves = (P(da, None), P(da), P(da, None),           # x, z, pos
+                   P(alla), P(alla), P(alla),                 # src, dst, mask
+                   P(da), P(da), P(da), P(None))              # nm, lbl, gid, y
+    treedef = jax.tree.structure(abstract_batch)
+    return jax.tree.unflatten(treedef, spec_leaves)
+
+
+def make_gnn_archdef(arch_id, source, make_config, make_smoke,
+                     init_fn, loss_fn, cfg_for_shape):
+    """cfg_for_shape(cfg, shape) adapts d_in / n_classes to the cell."""
+
+    def builder(cfg, cell_name, *, loop, mesh_axes, opt):
+        shape = GNN_SHAPES[cell_name]
+        ccfg = cfg_for_shape(cfg, shape)
+        params = R.abstract_params(init_fn, ccfg)
+        batch = gnn_abstract_batch(shape)
+        partitioned = getattr(ccfg, "partitioned", False)
+        if partitioned:
+            # explicit-collective mode: node arrays row-sharded over ALL
+            # axes (matching the shard_map specs inside the model)
+            alla = tuple(mesh_axes)
+            leaves = (P(alla, None), P(alla), P(alla, None),
+                      P(alla), P(alla), P(alla),
+                      P(alla), P(alla), P(alla), P(None))
+            bspec = jax.tree.unflatten(jax.tree.structure(batch), leaves)
+        else:
+            bspec = gnn_batch_specs(
+                mesh_axes, batch,
+                replicated_nodes=getattr(ccfg, "node_sharding",
+                                         "sharded") == "replicated")
+        pspec = jax.tree.map(lambda _: P(), params)
+        compress = opt.compress is not None
+        opt_state = jax.eval_shape(partial(init_state, compress=compress),
+                                   params)
+
+        def loss(p, b):
+            if partitioned:
+                from ..models.common import _ACTIVE_MESH
+                mesh = _ACTIVE_MESH[-1] if _ACTIVE_MESH else None
+                return loss_fn(p, b, ccfg, mesh=mesh)
+            return loss_fn(p, b, ccfg)
+
+        fn = make_train_step(loss, opt)
+        return R.Built(fn, (params, opt_state, batch),
+                       (pspec, state_specs(pspec, compress), bspec),
+                       donate=(0, 1), n_groups=1, n_chunks=1)
+
+    return R.ArchDef(arch_id=arch_id, family="gnn", source=source,
+                     make_config=make_config, make_smoke_config=make_smoke,
+                     cells=gnn_cells(), builder=builder)
+
+
+# ---------------------------------------------------------------------------
+# recsys family (MIND)
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, candidates=1000448, kind="retrieval",
+                           logical="n_candidates=1,000,000"),
+}
+
+
+def recsys_cells():
+    return {
+        "train_batch": R.Cell("train_batch", "train", basis="exact"),
+        "serve_p99": R.Cell("serve_p99", "serve", basis="exact"),
+        "serve_bulk": R.Cell("serve_bulk", "serve", basis="exact"),
+        "retrieval_cand": R.Cell("retrieval_cand", "retrieval",
+                                 basis="exact"),
+    }
+
+
+def recsys_builder(cfg: mind_mod.MindConfig, cell_name, *, loop, mesh_axes,
+                   opt):
+    da = R.data_axes(mesh_axes)
+    alla = tuple(mesh_axes)
+    shape = RECSYS_SHAPES[cell_name]
+    params = R.abstract_params(mind_mod.init_params, cfg)
+    pspec = mind_mod.param_specs(cfg)
+    b = shape["batch"]
+    hist = jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.int32)
+    mask = jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.float32)
+    hspec = P(da, None) if b > 1 else P(None, None)
+
+    if cell_name == "train_batch":
+        batch = {"hist": hist, "hist_mask": mask,
+                 "target": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        bspec = {"hist": hspec, "hist_mask": hspec, "target": P(da)}
+        compress = opt.compress is not None
+        opt_state = jax.eval_shape(partial(init_state, compress=compress),
+                                   params)
+        fn = make_train_step(
+            lambda p, bb: mind_mod.train_loss(p, bb, cfg), opt)
+        return R.Built(fn, (params, opt_state, batch),
+                       (pspec, state_specs(pspec, compress), bspec),
+                       donate=(0, 1), n_groups=1, n_chunks=1)
+
+    if cell_name == "retrieval_cand":
+        batch = {"hist": hist, "hist_mask": mask,
+                 "candidates": jax.ShapeDtypeStruct(
+                     (shape["candidates"],), jnp.int32)}
+        bspec = {"hist": hspec, "hist_mask": hspec, "candidates": P(alla)}
+        fn = lambda p, bb: mind_mod.retrieval_scores(p, bb, cfg)
+        return R.Built(fn, (params, batch), (pspec, bspec), donate=(),
+                       n_groups=1, n_chunks=1)
+
+    batch = {"hist": hist, "hist_mask": mask}
+    bspec = {"hist": hspec, "hist_mask": hspec}
+    fn = lambda p, bb: mind_mod.serve_interests(p, bb, cfg)
+    return R.Built(fn, (params, batch), (pspec, bspec), donate=(),
+                   n_groups=1, n_chunks=1)
+
+
+def make_recsys_archdef(arch_id, source, make_config, make_smoke):
+    return R.ArchDef(arch_id=arch_id, family="recsys", source=source,
+                     make_config=make_config, make_smoke_config=make_smoke,
+                     cells=recsys_cells(), builder=recsys_builder)

@@ -1,0 +1,49 @@
+"""The paper's own workload: epoch-based adaptive betweenness sampling.
+
+Not part of the 40 assigned cells — registered so the launcher /
+benchmarks can drive it through the same interface, and so the dry-run
+can lower one SPMD epoch step on the production mesh (EXPERIMENTS.md
+§Dry-run, bonus row).  Graph scale: R-MAT 2^20 x 30 for laptop runs;
+the dry-run lowers abstract edge arrays at scale 2^22 (the 16 GiB HBM of
+a v5e bounds a *replicated* graph at ~1.5 B directed edges — DESIGN.md
+§Hardware adaptation discusses the edge-sharded mode beyond that)."""
+import dataclasses
+
+from repro.core.adaptive import AdaptiveConfig
+from repro.models.registry import ArchDef, Cell, register
+
+
+@dataclasses.dataclass(frozen=True)
+class BetweennessConfig:
+    rmat_scale: int = 20
+    edge_factor: int = 30
+    eps: float = 0.01
+    delta: float = 0.1
+    adaptive: AdaptiveConfig = dataclasses.field(
+        default_factory=lambda: AdaptiveConfig(eps=0.01, delta=0.1))
+
+
+def make_config():
+    return BetweennessConfig()
+
+
+def make_smoke_config():
+    return BetweennessConfig(rmat_scale=8, edge_factor=4, eps=0.1,
+                             adaptive=AdaptiveConfig(eps=0.1, delta=0.1,
+                                                     n0_base=64))
+
+
+def _builder(cfg, cell_name, *, loop, mesh_axes, opt):
+    raise NotImplementedError(
+        "betweenness lowers through repro.launch.dryrun.lower_betweenness "
+        "(the epoch step is a shard_map program over a concrete mesh, not "
+        "a pjit cell)")
+
+
+ARCH = register(ArchDef(
+    arch_id="betweenness", family="graph-sampling",
+    source="this paper (van der Grinten & Meyerhenke 2019)",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    cells={"epoch_rmat22": Cell("epoch_rmat22", "sampling", basis="exact",
+                                note="SPMD epoch step, R-MAT scale 22")},
+    builder=_builder))

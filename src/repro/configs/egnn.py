@@ -1,0 +1,25 @@
+"""egnn [gnn] — 4 layers, d_hidden=64, E(n) equivariance.
+[arXiv:2102.09844]"""
+import dataclasses
+
+from repro.configs._families import make_gnn_archdef
+from repro.models.gnn.models import EgnnConfig, egnn_init, egnn_loss
+from repro.models.registry import register
+
+
+def make_config():
+    return EgnnConfig(n_layers=4, d_hidden=64)
+
+
+def make_smoke_config():
+    return EgnnConfig(n_layers=2, d_hidden=16)
+
+
+def cfg_for_shape(cfg, shape):
+    return dataclasses.replace(cfg, d_in=shape["d_feat"],
+                               n_classes=shape["classes"])
+
+
+ARCH = register(make_gnn_archdef(
+    "egnn", "arXiv:2102.09844", make_config, make_smoke_config,
+    egnn_init, egnn_loss, cfg_for_shape))

@@ -1,0 +1,31 @@
+"""gemma3-27b [dense] — 62L d_model=5376 32H (GQA kv=16) d_ff=21504,
+vocab=262144, 5:1 local:global attention (window 1024), 128k context.
+[hf:google/gemma-3-27b family]  The hybrid local/global pattern makes
+this the one LM arch that serves the long_500k cell."""
+from repro.configs._families import make_lm_archdef
+from repro.models.registry import register
+from repro.models.transformer import TransformerConfig
+
+
+def make_config():
+    return TransformerConfig(
+        name="gemma3-27b", n_layers=62, d_model=5376, n_heads=32,
+        n_kv_heads=16, d_ff=21504, vocab=262144, head_dim=128,
+        layer_pattern=("local", "local", "local", "local", "local",
+                       "global"),
+        window=1024, rope_theta=1_000_000.0,
+    )
+
+
+def make_smoke_config():
+    import jax.numpy as jnp
+    return TransformerConfig(
+        name="gemma3-smoke", n_layers=7, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=211,
+        layer_pattern=("local", "local", "global"), window=8,
+        dtype=jnp.float32, attn_impl="dense", remat=False)
+
+
+ARCH = register(make_lm_archdef(
+    "gemma3-27b", "hf:google/gemma-3-27b (cfg per assignment; unverified)",
+    make_config, make_smoke_config, long_ctx_ok=True))

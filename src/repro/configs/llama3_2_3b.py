@@ -1,0 +1,26 @@
+"""llama3.2-3b [dense] — 28L d_model=3072 24H (GQA kv=8) d_ff=8192,
+vocab=128256.  [hf:meta-llama/Llama-3.2-3B]"""
+from repro.configs._families import make_lm_archdef
+from repro.models.registry import register
+from repro.models.transformer import TransformerConfig
+
+
+def make_config():
+    return TransformerConfig(
+        name="llama3.2-3b", n_layers=28, d_model=3072, n_heads=24,
+        n_kv_heads=8, d_ff=8192, vocab=128256, head_dim=128,
+        rope_theta=500_000.0,
+    )
+
+
+def make_smoke_config():
+    import jax.numpy as jnp
+    return TransformerConfig(
+        name="llama-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=211, dtype=jnp.float32, attn_impl="dense",
+        remat=False)
+
+
+ARCH = register(make_lm_archdef(
+    "llama3.2-3b", "hf:meta-llama/Llama-3.2-3B (unverified tier)",
+    make_config, make_smoke_config, long_ctx_ok=False))

@@ -1,0 +1,23 @@
+"""mind [recsys] — embed_dim=64, n_interests=4, capsule_iters=3,
+multi-interest dynamic routing.  [arXiv:1904.08030]
+Item vocabulary: 2^21 rows (the paper's industrial deployment used 10^8+;
+2M keeps the replicated-free row-sharded table within one v5e pod's HBM
+budget while preserving the sharded-gather communication pattern)."""
+from repro.configs._families import make_recsys_archdef
+from repro.models.recsys.mind import MindConfig
+from repro.models.registry import register
+
+
+def make_config():
+    return MindConfig(n_items=2_097_152, embed_dim=64, n_interests=4,
+                      capsule_iters=3, hist_len=50)
+
+
+def make_smoke_config():
+    return MindConfig(n_items=1024, embed_dim=16, n_interests=4,
+                      capsule_iters=3, hist_len=10)
+
+
+ARCH = register(make_recsys_archdef(
+    "mind", "arXiv:1904.08030 (unverified tier)", make_config,
+    make_smoke_config))

@@ -1,0 +1,31 @@
+"""moonshot-v1-16b-a3b [moe] — 48L d_model=2048 16H (GQA kv=16 = MHA)
+d_ff=1408/expert, vocab=163840, MoE 64 experts top-6.
+[hf:moonshotai/Moonlight-16B-A3B]  Shared-expert variants of the public
+checkpoint are folded into the routed experts (DESIGN.md)."""
+from repro.configs._families import make_lm_archdef
+from repro.models.moe import MoEConfig
+from repro.models.registry import register
+from repro.models.transformer import TransformerConfig
+
+
+def make_config():
+    return TransformerConfig(
+        name="moonshot-v1-16b-a3b", n_layers=48, d_model=2048, n_heads=16,
+        n_kv_heads=16, d_ff=0, vocab=163840,
+        moe=MoEConfig(n_experts=64, top_k=6, d_model=2048, d_ff=1408),
+        rope_theta=50_000.0,
+    )
+
+
+def make_smoke_config():
+    import jax.numpy as jnp
+    return TransformerConfig(
+        name="moonshot-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=0, vocab=211,
+        moe=MoEConfig(n_experts=8, top_k=2, d_model=64, d_ff=48),
+        dtype=jnp.float32, attn_impl="dense", remat=False)
+
+
+ARCH = register(make_lm_archdef(
+    "moonshot-v1-16b-a3b", "hf:moonshotai/Moonlight-16B-A3B",
+    make_config, make_smoke_config, long_ctx_ok=False))

@@ -1,0 +1,27 @@
+"""nequip [gnn] — 5 layers, d_hidden=32, l_max=2, n_rbf=8, cutoff=5,
+E(3) tensor-product messages.  [arXiv:2101.03164]
+Non-geometric cells (cora/reddit/products) get synthetic coordinates —
+the arch runs on every assigned shape (DESIGN.md §Arch-applicability)."""
+import dataclasses
+
+from repro.configs._families import make_gnn_archdef
+from repro.models.gnn.models import NequipConfig, nequip_init, nequip_loss
+from repro.models.registry import register
+
+
+def make_config():
+    return NequipConfig(n_layers=5, d_hidden=32, l_max=2, n_rbf=8,
+                        cutoff=5.0)
+
+
+def make_smoke_config():
+    return NequipConfig(n_layers=2, d_hidden=8)
+
+
+def cfg_for_shape(cfg, shape):
+    return dataclasses.replace(cfg, n_classes=shape["classes"])
+
+
+ARCH = register(make_gnn_archdef(
+    "nequip", "arXiv:2101.03164", make_config, make_smoke_config,
+    nequip_init, nequip_loss, cfg_for_shape))

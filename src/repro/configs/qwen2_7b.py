@@ -1,0 +1,26 @@
+"""qwen2-7b [dense] — 28L d_model=3584 28H (GQA kv=4) d_ff=18944,
+vocab=152064, QKV bias.  [arXiv:2407.10671]"""
+from repro.configs._families import make_lm_archdef
+from repro.models.registry import register
+from repro.models.transformer import TransformerConfig
+
+
+def make_config():
+    return TransformerConfig(
+        name="qwen2-7b", n_layers=28, d_model=3584, n_heads=28,
+        n_kv_heads=4, d_ff=18944, vocab=152064, head_dim=128,
+        qkv_bias=True, rope_theta=1_000_000.0,
+    )
+
+
+def make_smoke_config():
+    import jax.numpy as jnp
+    return TransformerConfig(
+        name="qwen-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=211, qkv_bias=True, dtype=jnp.float32,
+        attn_impl="dense", remat=False)
+
+
+ARCH = register(make_lm_archdef(
+    "qwen2-7b", "arXiv:2407.10671", make_config, make_smoke_config,
+    long_ctx_ok=False))

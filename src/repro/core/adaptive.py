@@ -1,0 +1,348 @@
+"""The adaptive sampling engine (paper's Algorithm 2 on a TPU mesh).
+
+Drives the full KADABRA pipeline:
+
+  phase 1  diameter        — double-sweep BFS bounds (repro.core.diameter)
+  phase 2  calibration     — fixed number of samples, *blocking* reduce
+                             (paper: MPI_Reduce), then the per-vertex
+                             delta allocation (repro.core.kadabra)
+  phase 3  adaptive loop   — per epoch: aggregate the previous frame
+                             hierarchically while sampling the next one,
+                             then evaluate the stopping condition on the
+                             aggregated consistent snapshot.
+
+The engine is generic over the *sampler*: betweenness plugs in
+``repro.core.sampler.sample_batch``; any adaptive sampling algorithm whose
+state is a (counts, tau) frame and whose stop rule reads an aggregated
+frame fits the same driver (the paper's closing claim).  The stopping rule
+is a callback as well.
+
+Two execution paths share the epoch logic:
+
+  * ``mesh=None`` — single-device (the "shared-memory competitor" lane,
+    used by unit tests and the laptop benchmarks);
+  * ``mesh=...``  — SPMD via shard_map; frames carry a leading device
+    axis sharded over all mesh axes; aggregation is the hierarchical
+    reduce of repro.core.distributed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import distributed as dist
+from .diameter import estimate_diameter
+from .epoch import StateFrame, epoch_length, zero_frame
+from .graph import Graph
+from .kadabra import (KadabraParams, calibrate_deltas, check_stop,
+                      compute_omega)
+from .sampler import sample_batch
+
+__all__ = ["AdaptiveConfig", "BetweennessResult", "EpochStats",
+           "run_kadabra", "run_fixed_sampling"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaptiveConfig:
+    eps: float = 0.01
+    delta: float = 0.1
+    calib_samples_per_device: int = 32
+    n0_base: int = 1000
+    n0_exponent: float = 1.33
+    max_epochs: int = 10_000
+    diameter_sweeps: int = 2
+    aggregation: str = "hierarchical"  # "hierarchical" | "flat" | "root"
+
+
+class EpochStats(NamedTuple):
+    epoch: int
+    tau: int
+    max_f: float
+    max_g: float
+    seconds: float
+
+
+class BetweennessResult(NamedTuple):
+    btilde: np.ndarray          # (V,) approximate betweenness
+    tau: int                    # total samples
+    n_epochs: int
+    converged: bool
+    omega: float
+    vertex_diameter: int
+    stats: list                 # list[EpochStats]
+    phase_seconds: dict         # diameter / calibration / sampling
+
+
+def _pad_len(v: int, n_dev: int) -> int:
+    """counts length: V+1 (sink) padded so psum_scatter tiles evenly."""
+    base = v + 1
+    return ((base + n_dev - 1) // n_dev) * n_dev
+
+
+def _make_params(graph, cfg, vd, btilde0) -> KadabraParams:
+    omega = compute_omega(vd, cfg.eps, cfg.delta)
+    lil, liu, _tau_star = calibrate_deltas(btilde0, cfg.eps, cfg.delta, omega)
+    return KadabraParams(cfg.eps, cfg.delta, omega, lil, liu)
+
+
+def _check(agg: StateFrame, params: KadabraParams, n_nodes: int):
+    return check_stop(agg.counts[:n_nodes], agg.tau, params)
+
+
+# ---------------------------------------------------------------------------
+# Single-device lane
+# ---------------------------------------------------------------------------
+
+def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
+    v_pad = _pad_len(graph.n_nodes, 1)
+    t0 = time.perf_counter()
+    diam = jax.jit(partial(estimate_diameter, n_sweeps=cfg.diameter_sweeps))(
+        graph)
+    vd = int(diam.vertex_diameter)
+    t_diam = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    key, k_cal = jax.random.split(key)
+    counts0, tau0 = jax.jit(partial(sample_batch,
+                                    n_samples=cfg.calib_samples_per_device))(
+        graph, k_cal)
+    btilde0 = (counts0[: graph.n_nodes]
+               / jnp.maximum(tau0.astype(jnp.float32), 1.0))
+    params = jax.jit(partial(_make_params, cfg=cfg))(graph, vd=vd,
+                                                     btilde0=btilde0)
+    t_cal = time.perf_counter() - t0
+
+    n0 = epoch_length(1, base=cfg.n0_base, exponent=cfg.n0_exponent)
+
+    @jax.jit
+    def epoch_step(agg_counts, agg_tau, frame_counts, frame_tau, k):
+        agg_counts = agg_counts + frame_counts
+        agg_tau = agg_tau + frame_tau
+        c, t = sample_batch(graph, k, n0)
+        new_counts = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
+        agg = StateFrame(agg_counts, agg_tau)
+        done, mf, mg = _check(agg, params, graph.n_nodes)
+        return agg_counts, agg_tau, new_counts, t, done, mf, mg
+
+    agg = zero_frame(v_pad)
+    frame = zero_frame(v_pad)
+    # seed the pipeline: the calibration samples are *not* reused for the
+    # adaptive estimate (they informed the deltas; reusing them would break
+    # the martingale argument) — matching NetworKit's implementation.
+    stats = []
+    t0 = time.perf_counter()
+    done = False
+    epoch = 0
+    k = key
+    while not done and epoch < cfg.max_epochs:
+        te = time.perf_counter()
+        k, ke = jax.random.split(k)
+        ac, at, fc, ft, done_dev, mf, mg = epoch_step(
+            agg.counts, agg.tau, frame.counts, frame.tau, ke)
+        agg = StateFrame(ac, at)
+        frame = StateFrame(fc, ft)
+        done = bool(done_dev)
+        epoch += 1
+        stats.append(EpochStats(epoch, int(agg.tau), float(mf), float(mg),
+                                time.perf_counter() - te))
+    # final flush: the frame sampled during the last epoch still counts
+    agg = agg + frame
+    t_samp = time.perf_counter() - t0
+
+    tau = int(agg.tau)
+    btilde = np.asarray(agg.counts[: graph.n_nodes]) / max(tau, 1)
+    return BetweennessResult(
+        btilde, tau, epoch, bool(done), float(params.omega), vd, stats,
+        {"diameter": t_diam, "calibration": t_cal, "sampling": t_samp})
+
+
+# ---------------------------------------------------------------------------
+# SPMD lane (shard_map over the production mesh)
+# ---------------------------------------------------------------------------
+
+def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
+              mesh: Mesh) -> BetweennessResult:
+    all_axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod(mesh.devices.shape))
+    local_axes, global_axes = dist.sampler_axes(mesh)
+    v_pad = _pad_len(graph.n_nodes, n_dev)
+
+    agg_fn = make_agg_fn(mesh, cfg.aggregation)
+
+    rep = P()
+    frame_spec = P(all_axes, None)
+    key_spec = P(all_axes)
+    gspec = jax.tree.map(lambda _: rep, graph)
+
+    t0 = time.perf_counter()
+    diam = jax.jit(partial(estimate_diameter, n_sweeps=cfg.diameter_sweeps))(
+        graph)
+    vd = int(diam.vertex_diameter)
+    t_diam = time.perf_counter() - t0
+
+    # ---- calibration: pleasingly parallel sampling + blocking reduce ----
+    @partial(jax.shard_map, mesh=mesh, in_specs=(gspec, key_spec),
+             out_specs=(rep, rep), check_vma=False)
+    def calib_step(g, keys):
+        c, t = sample_batch(g, keys[0], cfg.calib_samples_per_device)
+        cp = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
+        return dist.flat_allreduce(cp, all_axes), dist.flat_allreduce(
+            t, all_axes)
+
+    t0 = time.perf_counter()
+    key, k_cal = jax.random.split(key)
+    dev_keys = jax.random.split(k_cal, n_dev)
+    counts0, tau0 = jax.jit(calib_step)(graph, dev_keys)
+    btilde0 = (counts0[: graph.n_nodes]
+               / jnp.maximum(tau0.astype(jnp.float32), 1.0))
+    params = jax.jit(partial(_make_params, cfg=cfg))(graph, vd=vd,
+                                                     btilde0=btilde0)
+    t_cal = time.perf_counter() - t0
+
+    n0 = epoch_length(n_dev, base=cfg.n0_base, exponent=cfg.n0_exponent)
+
+    # ---- adaptive epochs --------------------------------------------------
+    epoch_step = make_epoch_step_spmd(mesh, cfg.aggregation,
+                                      graph.n_nodes, v_pad, n0)
+    epoch_jit = jax.jit(epoch_step)
+
+    zero_counts = jnp.zeros((v_pad,), jnp.float32)
+    agg_counts, agg_tau = zero_counts, jnp.int32(0)
+    frame_counts = jax.device_put(
+        jnp.zeros((n_dev, v_pad), jnp.float32),
+        NamedSharding(mesh, frame_spec))
+    frame_tau = jnp.int32(0)
+
+    stats = []
+    t0 = time.perf_counter()
+    done = False
+    epoch = 0
+    k = key
+    while not done and epoch < cfg.max_epochs:
+        te = time.perf_counter()
+        k, ke = jax.random.split(k)
+        dev_keys = jax.device_put(jax.random.split(ke, n_dev),
+                                  NamedSharding(mesh, key_spec))
+        agg_counts, agg_tau, frame_counts, frame_tau, done_dev, mf, mg = \
+            epoch_jit(graph, params, agg_counts, agg_tau, frame_counts,
+                      frame_tau, dev_keys)
+        done = bool(done_dev)
+        epoch += 1
+        stats.append(EpochStats(epoch, int(agg_tau), float(mf), float(mg),
+                                time.perf_counter() - te))
+
+    # final flush of the in-flight frame
+    @partial(jax.shard_map, mesh=mesh, in_specs=(frame_spec, rep),
+             out_specs=(rep, rep), check_vma=False)
+    def flush(frame_counts, frame_tau):
+        return (agg_fn(frame_counts[0]),
+                dist.flat_allreduce(frame_tau, all_axes))
+
+    inc_c, inc_t = jax.jit(flush)(frame_counts, frame_tau)
+    agg_counts = agg_counts + inc_c
+    agg_tau = agg_tau + inc_t
+    t_samp = time.perf_counter() - t0
+
+    tau = int(agg_tau)
+    btilde = np.asarray(agg_counts[: graph.n_nodes]) / max(tau, 1)
+    return BetweennessResult(
+        btilde, tau, epoch, bool(done), float(params.omega), vd, stats,
+        {"diameter": t_diam, "calibration": t_cal, "sampling": t_samp})
+
+
+def make_agg_fn(mesh, aggregation: str):
+    all_axes = tuple(mesh.axis_names)
+    local_axes, global_axes = dist.sampler_axes(mesh)
+    if aggregation == "hierarchical":
+        return lambda x: dist.hierarchical_allreduce(x, local_axes,
+                                                     global_axes)
+    if aggregation == "flat":
+        return lambda x: dist.flat_allreduce(x, all_axes)
+    return lambda x: dist.reduce_to_root_and_broadcast(x, all_axes)
+
+
+def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
+                         n0: int):
+    """One jit-able SPMD epoch (paper Alg. 2): aggregate the previous
+    frame (collectives) while sampling the next one, then evaluate the
+    stop rule on the consistent snapshot.  Exposed at module level so the
+    multi-pod dry-run can .lower()/.compile() it on the production mesh
+    and extract its roofline terms (EXPERIMENTS.md §Perf, cell #3).
+
+    Signature of the returned fn:
+      (graph, params: KadabraParams, agg_counts (V_pad,), agg_tau (),
+       frame_counts (n_dev, V_pad) sharded, frame_tau (), keys (n_dev, 2))
+      -> (agg_counts, agg_tau, new_frame, new_tau, done, max_f, max_g)
+    """
+    all_axes = tuple(mesh.axis_names)
+    agg_fn = make_agg_fn(mesh, aggregation)
+    rep = P()
+    frame_spec = P(all_axes, None)
+    key_spec = P(all_axes)
+
+    def epoch_step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
+                   keys):
+        gspec = jax.tree.map(lambda _: rep, g)
+        pspec = jax.tree.map(lambda _: rep, params)
+
+        @partial(jax.shard_map, mesh=mesh,
+                 in_specs=(gspec, pspec, rep, rep, frame_spec, rep,
+                           key_spec),
+                 out_specs=(rep, rep, frame_spec, rep, rep, rep, rep),
+                 check_vma=False)
+        def _step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
+                  keys):
+            # 1. hand the previous frame to the (async) reduction
+            inc_counts = agg_fn(frame_counts[0])
+            inc_tau = dist.flat_allreduce(frame_tau, all_axes)
+            # 2. sample the next frame — no data dependency on the
+            #    collective, so the scheduler overlaps it (paper Alg. 2,
+            #    lines 15/21/27)
+            c, t = sample_batch(g, keys[0], n0)
+            new_counts = jnp.zeros((1, v_pad),
+                                   jnp.float32).at[0, : c.shape[0]].set(c)
+            # 3. thread-0-equivalent: stop rule on the consistent snapshot
+            agg_counts = agg_counts + inc_counts
+            agg_tau = agg_tau + inc_tau
+            done, mf, mg = _check(StateFrame(agg_counts, agg_tau), params,
+                                  n_nodes)
+            return agg_counts, agg_tau, new_counts, t, done, mf, mg
+
+        return _step(g, params, agg_counts, agg_tau, frame_counts,
+                     frame_tau, keys)
+
+    return epoch_step
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def run_kadabra(graph: Graph, *, eps: float = 0.01, delta: float = 0.1,
+                key=None, mesh: Optional[Mesh] = None,
+                config: Optional[AdaptiveConfig] = None) -> BetweennessResult:
+    """Approximate betweenness with the paper's parallel KADABRA."""
+    cfg = config or AdaptiveConfig(eps=eps, delta=delta)
+    if config is None:
+        cfg = dataclasses.replace(cfg, eps=eps, delta=delta)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if mesh is None or int(np.prod(mesh.devices.shape)) == 1:
+        return _run_single(graph, cfg, key)
+    return _run_spmd(graph, cfg, key, mesh)
+
+
+def run_fixed_sampling(graph: Graph, n_samples: int, *, key=None):
+    """Non-adaptive baseline (RK-style fixed sample count, no stop rule)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    counts, tau = jax.jit(partial(sample_batch, n_samples=n_samples))(
+        graph, key)
+    return np.asarray(counts[: graph.n_nodes]) / max(int(tau), 1)

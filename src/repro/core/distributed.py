@@ -1,0 +1,102 @@
+"""Hierarchical aggregation of sampling state — the paper's MPI layer on TPU.
+
+The paper aggregates per-thread state frames in three tiers:
+
+  threads in a process      -> epoch-based shared-memory frames   [Ref. 24]
+  processes on a node       -> MPI RMA over the *local* communicator
+  first process per node    -> MPI_Ibarrier + MPI_Reduce over the *global*
+                               communicator (overlapped with sampling)
+
+The TPU-native mapping (DESIGN.md §Hardware adaptation):
+
+  devices inside a pod      -> mesh axes ("data", "model"): fast ICI links
+                               == the local communicator
+  pods                      -> mesh axis "pod": DCI/optical links
+                               == the global communicator
+
+``hierarchical_allreduce`` is the bandwidth-optimal composition
+reduce_scatter(intra-pod) -> all_reduce(inter-pod) -> all_gather(intra-pod):
+each shard crosses the slow inter-pod links exactly once, which is the same
+communication-volume argument the paper makes for reducing over the local
+communicator before the global one.  XLA lowers each stage to an async
+collective (`*-start`/`*-done`), so the sampling computation scheduled
+between start and done overlaps communication exactly like the paper's
+MPI_Ibarrier/MPI_Ireduce overlap — but driven by the compiler's latency
+hiding scheduler instead of hand-written progress loops.
+
+All functions take explicit axis names so the same code runs on the
+single-pod mesh ("data", "model"), the multi-pod mesh ("pod", "data",
+"model"), and inside tests on a 1-device mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "hierarchical_allreduce",
+    "flat_allreduce",
+    "reduce_to_root_and_broadcast",
+    "sampler_axes",
+]
+
+
+def sampler_axes(mesh: Mesh) -> tuple[Sequence[str], Sequence[str]]:
+    """Split mesh axes into (local, global) tiers, paper-style.
+
+    The "pod" axis (if present) is the global tier; every other axis is
+    the local tier.  For betweenness sampling every device of the mesh is
+    a sampler (the paper runs one sampling thread per core), so both tiers
+    participate in the reduction of the count vectors.
+    """
+    names = tuple(mesh.axis_names)
+    global_axes = tuple(n for n in names if n == "pod")
+    local_axes = tuple(n for n in names if n != "pod")
+    return local_axes, global_axes
+
+
+def hierarchical_allreduce(x: jax.Array, local_axes: Sequence[str],
+                           global_axes: Sequence[str]) -> jax.Array:
+    """reduce_scatter(local) -> all_reduce(global) -> all_gather(local).
+
+    Equivalent to a full psum over local+global axes, but each element
+    crosses the inter-pod links exactly once (vs. naive all_reduce over
+    the combined axes which, on a ring schedule, would move the full
+    vector across the slow tier).  Must be called inside shard_map.
+    """
+    local_axes = tuple(local_axes)
+    global_axes = tuple(global_axes)
+    if not local_axes:
+        return jax.lax.psum(x, global_axes) if global_axes else x
+    # reduce_scatter over the flattened local tier
+    scattered = jax.lax.psum_scatter(
+        x, local_axes, scatter_dimension=0, tiled=True)
+    if global_axes:
+        scattered = jax.lax.psum(scattered, global_axes)
+    return jax.lax.all_gather(scattered, local_axes, axis=0, tiled=True)
+
+
+def flat_allreduce(x: jax.Array, axes: Sequence[str]) -> jax.Array:
+    """Single-tier psum over all axes — the 'Algorithm 1' baseline."""
+    return jax.lax.psum(x, tuple(axes))
+
+
+def reduce_to_root_and_broadcast(x: jax.Array, axes: Sequence[str]):
+    """Literal port of the paper's reduce-to-p0 + broadcast(d) pattern.
+
+    On TPU this is strictly worse than an all_reduce (the result already
+    lands everywhere), so the production path uses
+    :func:`hierarchical_allreduce`; this exists for the benchmark that
+    quantifies the difference (EXPERIMENTS.md §Perf, baseline row).
+    """
+    summed = jax.lax.psum(x, tuple(axes))
+    # emulate "only root holds the result": zero everywhere except the
+    # single device with flattened mesh index 0, then re-psum (the
+    # "broadcast")
+    idx = jax.lax.axis_index(tuple(axes)) if axes else 0
+    rooted = jnp.where(idx == 0, summed, jnp.zeros_like(summed))
+    return jax.lax.psum(rooted, tuple(axes))

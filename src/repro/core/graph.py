@@ -1,0 +1,229 @@
+"""Graph data structure for sampling-based centrality on accelerators.
+
+The paper (van der Grinten & Meyerhenke, 2019) assumes the graph is
+*replicated* on every compute node: each thread takes samples (one
+bidirectional BFS per sample) locally without communication.  We keep the
+same assumption: the graph lives as a pair of dense index arrays (CSR) that
+is replicated across every device of the mesh.  Only the *sampling state*
+(the per-device count vectors, i.e. the "state frames" of the paper) is
+ever communicated.
+
+Two edge layouts are kept side by side:
+
+* CSR (``indptr``/``indices``) — used by the backward path-sampling walk
+  (per-node neighbor slices) and by the neighbor sampler.
+* COO (``src``/``dst``) — used by the edge-centric BFS relaxation which is
+  the TPU-friendly formulation of the frontier expansion (a
+  ``segment_sum`` over the edge list; the Pallas kernel in
+  ``repro.kernels.frontier`` implements the same contract with explicit
+  VMEM tiling).
+
+All arrays are padded to a multiple of ``pad_to`` so BlockSpec tilings in
+the Pallas kernels stay aligned.  Padded edges point ``src = dst =
+n_nodes`` (a sink row) and are masked out by construction: the sink row is
+never part of a frontier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "build_graph",
+    "from_edge_list",
+    "rmat_graph",
+    "hyperbolic_graph",
+    "grid_graph",
+    "erdos_renyi_graph",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An undirected, unweighted graph in CSR + COO form (JAX arrays).
+
+    ``n_nodes``/``n_edges`` are the *logical* sizes; array shapes may be
+    padded.  ``indices`` stores both directions of every undirected edge
+    (as does ``src``/``dst``), exactly like NetworKit's storage that the
+    paper uses (graph + transpose for bidirectional BFS).
+    """
+
+    indptr: jax.Array      # (V+1,) int32 — CSR row pointers
+    indices: jax.Array     # (E_pad,) int32 — CSR column indices
+    src: jax.Array         # (E_pad,) int32 — COO sources (sorted by src)
+    dst: jax.Array         # (E_pad,) int32 — COO destinations
+    degree: jax.Array      # (V,) int32
+    n_nodes: int           # static
+    n_edges: int           # static: directed edge slots actually used
+    max_degree: int        # static
+
+    # -- pytree plumbing (static ints live in aux data) -------------------
+    def tree_flatten(self):
+        leaves = (self.indptr, self.indices, self.src, self.dst, self.degree)
+        aux = (self.n_nodes, self.n_edges, self.max_degree)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        indptr, indices, src, dst, degree = leaves
+        n_nodes, n_edges, max_degree = aux
+        return cls(indptr, indices, src, dst, degree, n_nodes, n_edges, max_degree)
+
+    @property
+    def n_edges_undirected(self) -> int:
+        return self.n_edges // 2
+
+    @property
+    def e_pad(self) -> int:
+        return int(self.indices.shape[0])
+
+
+def from_edge_list(edges: np.ndarray, n_nodes: int | None = None, *,
+                   pad_to: int = 128) -> Graph:
+    """Build a :class:`Graph` from an (M, 2) array of undirected edges.
+
+    Self-loops and duplicate edges are removed.  Vertex ids must be in
+    ``[0, n_nodes)``.
+    """
+    edges = np.asarray(edges, dtype=np.int64)
+    if edges.ndim != 2 or edges.shape[1] != 2:
+        raise ValueError(f"edges must be (M, 2), got {edges.shape}")
+    if n_nodes is None:
+        n_nodes = int(edges.max()) + 1 if edges.size else 1
+    # canonicalize: u < v, drop self loops, dedupe
+    u = np.minimum(edges[:, 0], edges[:, 1])
+    v = np.maximum(edges[:, 0], edges[:, 1])
+    keep = u != v
+    u, v = u[keep], v[keep]
+    uv = np.unique(u * np.int64(n_nodes) + v)
+    u, v = uv // n_nodes, uv % n_nodes
+    # symmetrize
+    s = np.concatenate([u, v])
+    d = np.concatenate([v, u])
+    return build_graph(s, d, n_nodes, pad_to=pad_to)
+
+
+def build_graph(src: np.ndarray, dst: np.ndarray, n_nodes: int, *,
+                pad_to: int = 128) -> Graph:
+    """Build from a *directed* (already symmetrized) edge list."""
+    order = np.argsort(src, kind="stable")
+    src = np.asarray(src)[order].astype(np.int32)
+    dst = np.asarray(dst)[order].astype(np.int32)
+    n_edges = int(src.shape[0])
+    degree = np.bincount(src, minlength=n_nodes).astype(np.int32)
+    indptr = np.zeros(n_nodes + 1, dtype=np.int32)
+    np.cumsum(degree, out=indptr[1:])
+    # Always leave at least one full pad block after the last real edge so
+    # fixed-size dynamic slices over the neighbor lists never clamp.
+    e_pad = (n_edges // pad_to + 2) * pad_to
+    pad = e_pad - n_edges
+    # Padded slots point at the sink row ``n_nodes`` (never in a frontier).
+    src_p = np.concatenate([src, np.full(pad, n_nodes, np.int32)])
+    dst_p = np.concatenate([dst, np.full(pad, n_nodes, np.int32)])
+    idx_p = np.concatenate([dst, np.full(pad, n_nodes, np.int32)])
+    max_degree = int(degree.max()) if n_nodes else 0
+    return Graph(
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(idx_p),
+        src=jnp.asarray(src_p),
+        dst=jnp.asarray(dst_p),
+        degree=jnp.asarray(degree),
+        n_nodes=int(n_nodes),
+        n_edges=n_edges,
+        max_degree=max_degree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Generators (the paper's synthetic instances: R-MAT and random hyperbolic;
+# plus grid graphs standing in for the high-diameter road networks).
+# ---------------------------------------------------------------------------
+
+def rmat_graph(scale: int, edge_factor: int = 30, *,
+               a: float = 0.57, b: float = 0.19, c: float = 0.19,
+               seed: int = 0, pad_to: int = 128) -> Graph:
+    """R-MAT generator with the paper's (Graph500) parameters.
+
+    The paper uses (a, b, c, d) = (0.57, 0.19, 0.19, 0.05) and
+    ``|E| = 30 |V|``.  ``scale`` is log2(n_nodes).
+    """
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = edge_factor * n
+    srcs = np.zeros(m, dtype=np.int64)
+    dsts = np.zeros(m, dtype=np.int64)
+    # vectorized R-MAT: one random quadrant decision per bit level
+    for lvl in range(scale):
+        r = rng.random(m)
+        go_right = (r >= a + b) & (r < a + b + c) | (r >= a + b + c)
+        go_down = ((r >= a) & (r < a + b)) | (r >= a + b + c)
+        srcs |= (go_right.astype(np.int64) << lvl)
+        dsts |= (go_down.astype(np.int64) << lvl)
+    edges = np.stack([srcs, dsts], axis=1)
+    return from_edge_list(edges, n, pad_to=pad_to)
+
+
+def hyperbolic_graph(n: int, avg_degree: float = 60.0, *, gamma: float = 3.0,
+                     seed: int = 0, pad_to: int = 128) -> Graph:
+    """Random hyperbolic graph (threshold model), power-law exponent gamma.
+
+    A faithful-in-spirit O(n^2 / bands) generator: nodes sit on a
+    hyperbolic disk of radius R; two nodes connect iff their hyperbolic
+    distance is < R.  Matches the paper's second synthetic family
+    (power-law exponent 3).  Intended for laptop-scale n.
+    """
+    rng = np.random.default_rng(seed)
+    alpha = (gamma - 1.0) / 2.0
+    # Calibrate R so the expected average degree is roughly ``avg_degree``.
+    R = 2.0 * np.log(8.0 * n * alpha**2 /
+                     (np.pi * avg_degree * (alpha - 0.5) ** 2))
+    # radial CDF F(r) = cosh(alpha r) - 1 / (cosh(alpha R) - 1)
+    u = rng.random(n)
+    r = np.arccosh(1.0 + u * (np.cosh(alpha * R) - 1.0)) / alpha
+    phi = rng.random(n) * 2.0 * np.pi
+    # brute-force pairwise hyperbolic distance in angular chunks
+    edges = []
+    chunk = max(1, 2_000_000 // max(n, 1))
+    for i0 in range(0, n, chunk):
+        i1 = min(n, i0 + chunk)
+        dphi = np.abs(phi[i0:i1, None] - phi[None, :])
+        dphi = np.minimum(dphi, 2.0 * np.pi - dphi)
+        ch = (np.cosh(r[i0:i1, None]) * np.cosh(r[None, :])
+              - np.sinh(r[i0:i1, None]) * np.sinh(r[None, :]) * np.cos(dphi))
+        d = np.arccosh(np.maximum(ch, 1.0))
+        ii, jj = np.nonzero(d < R)
+        ii = ii + i0
+        keep = ii < jj
+        edges.append(np.stack([ii[keep], jj[keep]], axis=1))
+    edges = np.concatenate(edges) if edges else np.zeros((0, 2), np.int64)
+    return from_edge_list(edges, n, pad_to=pad_to)
+
+
+def grid_graph(width: int, height: int, *, pad_to: int = 128,
+               diag_p: float = 0.0, seed: int = 0) -> Graph:
+    """2D grid — a stand-in for the paper's high-diameter road networks."""
+    ii, jj = np.meshgrid(np.arange(height), np.arange(width), indexing="ij")
+    nid = (ii * width + jj).astype(np.int64)
+    right = np.stack([nid[:, :-1].ravel(), nid[:, 1:].ravel()], axis=1)
+    down = np.stack([nid[:-1, :].ravel(), nid[1:, :].ravel()], axis=1)
+    edges = [right, down]
+    if diag_p > 0:
+        rng = np.random.default_rng(seed)
+        diag = np.stack([nid[:-1, :-1].ravel(), nid[1:, 1:].ravel()], axis=1)
+        edges.append(diag[rng.random(len(diag)) < diag_p])
+    return from_edge_list(np.concatenate(edges), width * height, pad_to=pad_to)
+
+
+def erdos_renyi_graph(n: int, avg_degree: float = 8.0, *, seed: int = 0,
+                      pad_to: int = 128) -> Graph:
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_degree / 2)
+    e = rng.integers(0, n, size=(int(m * 1.2), 2))
+    return from_edge_list(e, n, pad_to=pad_to)

@@ -1,0 +1,154 @@
+"""KADABRA statistics: sample cap omega, stopping condition, calibration.
+
+Follows Borassi & Natale (ESA'16) as used by the paper:
+
+  * omega = c/eps^2 * (floor(log2(VD - 2)) + 1 + ln(2/delta)),  c = 0.5
+    (VD = vertex diameter; the BFS-sampler's range space has
+    VC-dimension bounded via log2 VD, Riondato-Kornaropoulos style).
+
+  * adaptive stop: for every vertex x with b~ = c~(x)/tau,
+        f(b~, dL, w, t) = ln(1/dL)/t * ( -(w/t - 1/3)
+                           + sqrt((w/t - 1/3)^2 + 2 b~ w / ln(1/dL)) )
+        g(b~, dU, w, t) = ln(1/dU)/t * (  (w/t + 1/3)
+                           + sqrt((w/t + 1/3)^2 + 2 b~ w / ln(1/dU)) )
+    stop iff max_x f < eps and max_x g < eps.  f and g are NOT monotone
+    in (c~, tau), hence the check must see a *consistent* snapshot — the
+    whole reason for the paper's epoch machinery.
+
+  * calibration: per-vertex failure budgets delta_L(x), delta_U(x) with
+    sum_x (delta_L + delta_U) <= delta (union bound).  The exact split
+    only affects running time, not correctness (paper, footnote 2).  We
+    use a closed-form waterfilling: for a trial stopping time tau*, invert
+    f and g for the smallest required ln(1/delta) per vertex, then bisect
+    tau* until the total budget is exactly delta.  This replaces
+    NetworKit's computeDeltaGuess binary search with an equivalent
+    jit-friendly one (documented in DESIGN.md).
+
+All functions are pure jnp and jit/vmap/shard_map-safe.  The fused Pallas
+version of the stopping check lives in ``repro.kernels.stopcheck``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "compute_omega", "f_term", "g_term", "check_stop", "calibrate_deltas",
+    "KadabraParams",
+]
+
+
+class KadabraParams(NamedTuple):
+    eps: float
+    delta: float
+    omega: jax.Array            # () float32 — static max samples
+    log_inv_delta_l: jax.Array  # (V,) float32 — ln(1/delta_L(x))
+    log_inv_delta_u: jax.Array  # (V,) float32 — ln(1/delta_U(x))
+
+
+def compute_omega(vertex_diameter, eps: float, delta: float,
+                  c: float = 0.5):
+    """Static sample-size cap (KADABRA eq. for omega)."""
+    vd = jnp.maximum(jnp.asarray(vertex_diameter, jnp.float32), 4.0)
+    log2_term = jnp.floor(jnp.log2(vd - 2.0)) + 1.0
+    return (c / (eps * eps)) * (log2_term + math.log(2.0 / delta))
+
+
+def f_term(btilde, log_inv_delta_l, omega, tau):
+    """Lower-side deviation bound f (must fall below eps)."""
+    tau = jnp.maximum(tau.astype(jnp.float32), 1.0)
+    ell = jnp.maximum(log_inv_delta_l, 1e-8)
+    a = omega / tau - 1.0 / 3.0
+    return (ell / tau) * (-a + jnp.sqrt(a * a + 2.0 * btilde * omega / ell))
+
+
+def g_term(btilde, log_inv_delta_u, omega, tau):
+    """Upper-side deviation bound g (must fall below eps)."""
+    tau = jnp.maximum(tau.astype(jnp.float32), 1.0)
+    ell = jnp.maximum(log_inv_delta_u, 1e-8)
+    b = omega / tau + 1.0 / 3.0
+    return (ell / tau) * (b + jnp.sqrt(b * b + 2.0 * btilde * omega / ell))
+
+
+def check_stop(counts, tau, params: KadabraParams):
+    """Evaluate the stopping condition on a consistent (counts, tau).
+
+    Returns (done, max_f, max_g).  ``counts`` is the aggregated c~ vector
+    (V,); the padding sink row must be stripped by the caller.
+    """
+    tauf = jnp.maximum(jnp.asarray(tau, jnp.float32), 1.0)
+    btilde = counts / tauf
+    f = f_term(btilde, params.log_inv_delta_l, params.omega, tauf)
+    g = g_term(btilde, params.log_inv_delta_u, params.omega, tauf)
+    max_f = jnp.max(f)
+    max_g = jnp.max(g)
+    done = (max_f < params.eps) & (max_g < params.eps)
+    # the static cap: never exceed omega samples in total
+    done = done | (tauf >= params.omega)
+    return done, max_f, max_g
+
+
+def _required_log_inv_delta(btilde, eps: float, omega, tau):
+    """Smallest ln(1/delta) budgets so that f < eps and g < eps at tau.
+
+    Closed-form inversions (derivation in DESIGN.md):
+      f: x_f = eps^2 tau^2 / (2 b~ w - 2 eps tau (w/tau - 1/3)) when the
+         denominator is positive, else +inf (f < eps for every delta —
+         that vertex consumes no budget).
+      g: x_g = eps^2 tau^2 / (2 b~ w + 2 eps tau (w/tau + 1/3)), always
+         finite and positive.
+    """
+    a = omega / tau - 1.0 / 3.0
+    b = omega / tau + 1.0 / 3.0
+    den_f = 2.0 * btilde * omega - 2.0 * eps * tau * a
+    x_f = jnp.where(den_f > 0.0, (eps * tau) ** 2 / jnp.maximum(den_f, 1e-30),
+                    jnp.inf)
+    x_g = (eps * tau) ** 2 / (2.0 * btilde * omega + 2.0 * eps * tau * b)
+    return x_f, x_g
+
+
+def calibrate_deltas(btilde0, eps: float, delta: float, omega,
+                     n_iters: int = 64):
+    """Waterfilling allocation of per-vertex failure budgets.
+
+    ``btilde0`` are the (V,) estimates from the non-adaptive calibration
+    samples.  Bisects the trial stopping time tau* in [1, omega]: larger
+    tau* means smaller required ln(1/delta) per vertex, i.e. a *larger*
+    spendable per-vertex delta, so the total budget used is monotonically
+    increasing in 1/tau*.  The returned budgets always satisfy
+    sum(delta_L + delta_U) <= delta.
+    """
+    omega = jnp.asarray(omega, jnp.float32)
+
+    def budget_used(tau_star):
+        x_f, x_g = _required_log_inv_delta(btilde0, eps, omega, tau_star)
+        return jnp.sum(jnp.exp(-x_f)) + jnp.sum(jnp.exp(-x_g))
+
+    def body(_, lohi):
+        # budget_used is decreasing in tau*: stopping later tolerates a
+        # larger ln(1/delta), hence smaller spend.  Feasible = used <= delta.
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        infeasible = budget_used(mid) > delta
+        lo = jnp.where(infeasible, mid, lo)
+        hi = jnp.where(infeasible, hi, mid)
+        return lo, hi
+
+    _lo, hi = jax.lax.fori_loop(0, n_iters, body,
+                                (jnp.float32(1.0), omega))
+    tau_star = hi  # feasible side (or omega itself, backed by the VC cap)
+    x_f, x_g = _required_log_inv_delta(btilde0, eps, omega, tau_star)
+    used = jnp.sum(jnp.exp(-x_f)) + jnp.sum(jnp.exp(-x_g))
+    # Rescale so the union bound holds with equality: shrinking x (when
+    # slack > 0) only loosens f/g; growing x (slack < 0, i.e. even tau* =
+    # omega was infeasible) delays the adaptive stop but the omega cap
+    # still provides the (eps, delta) guarantee on its own.
+    slack = jnp.log(delta / jnp.maximum(used, 1e-30))
+    # clamp +inf (no-budget vertices) to a large finite value: with b~ = 0
+    # the f term is exactly 0 there, and float32 stays NaN-free.
+    log_inv_l = jnp.clip(x_f - slack, 1e-6, 1e30)
+    log_inv_u = jnp.clip(x_g - slack, 1e-6, 1e30)
+    return log_inv_l, log_inv_u, tau_star

@@ -1,0 +1,159 @@
+"""Uniform shortest-path sampling (the per-sample work of KADABRA).
+
+One sample = (i) draw a uniform vertex pair (s, t), s != t; (ii) run a
+balanced bidirectional BFS; (iii) draw ONE uniform-at-random shortest s-t
+path; (iv) add 1 to the count of every *internal* vertex of that path.
+KADABRA's estimator is then b~(x) = c~(x)/tau.
+
+Uniform path sampling is factorized through the BFS DAG:
+
+  * every shortest s-t path crosses exactly one vertex w with
+    dist_s(w) == L (the split level returned by the bidirectional search);
+    the number of paths through w is sigma_s(w) * sigma_t(w), so w is
+    drawn with probability proportional to that product (Gumbel-max);
+  * from w we walk backwards to s: at a vertex v on level l, the
+    predecessor u in N(v) with dist_s(u) == l-1 is drawn with probability
+    sigma_s(u) / sum(sigma_s over predecessors); symmetrically towards t.
+
+The backward step uses a *chunked weighted-reservoir* draw over the CSR
+neighbor list: neighbors are visited in fixed-size chunks (static shapes
+for XLA), a Gumbel-max picks a within-chunk candidate, and the candidate
+replaces the running choice with probability W_chunk / W_total_so_far.
+This is an exact weighted draw with O(deg) work and O(chunk) memory,
+independent of the (power-law) maximum degree.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bfs import BidirResult, bidirectional_bfs
+from .graph import Graph
+
+__all__ = ["PathSample", "sample_pair", "sample_path", "sample_batch"]
+
+_NEG_INF = -1e30
+_CHUNK = 128  # matches Graph pad_to; guarantees in-bounds dynamic slices
+
+
+class PathSample(NamedTuple):
+    contrib: jax.Array   # (V+1,) float32 — 1.0 on internal path vertices
+    valid: jax.Array     # () bool — False when s,t were disconnected
+    length: jax.Array    # () int32 — path length d (edges), -1 if invalid
+
+
+def sample_pair(key, n_nodes: int):
+    """Uniform (s, t) with s != t."""
+    ks, kt = jax.random.split(key)
+    s = jax.random.randint(ks, (), 0, n_nodes)
+    t = jax.random.randint(kt, (), 0, n_nodes - 1)
+    t = jnp.where(t >= s, t + 1, t)
+    return s, t
+
+
+def _gumbel_argmax(key, logw):
+    g = -jnp.log(-jnp.log(jax.random.uniform(
+        key, logw.shape, minval=1e-20, maxval=1.0)))
+    return jnp.argmax(logw + g)
+
+
+def _sample_predecessor(graph: Graph, key, v, level, dist, sigma):
+    """Draw u ~ sigma[u] * [dist[u] == level-1] among neighbors of v."""
+    start = graph.indptr[v]
+    deg = graph.degree[v]
+    n_chunks = (deg + _CHUNK - 1) // _CHUNK
+
+    def body(i, carry):
+        wsum, chosen, key = carry
+        key, k_in, k_acc = jax.random.split(key, 3)
+        nbr = jax.lax.dynamic_slice(graph.indices, (start + i * _CHUNK,),
+                                    (_CHUNK,))
+        valid = jnp.arange(_CHUNK) < (deg - i * _CHUNK)
+        w = jnp.where(valid & (dist[nbr] == level - 1), sigma[nbr], 0.0)
+        wc = jnp.sum(w)
+        logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), _NEG_INF)
+        cand = nbr[_gumbel_argmax(k_in, logw)]
+        accept_p = jnp.where(wc > 0, wc / jnp.maximum(wsum + wc, 1e-30), 0.0)
+        take = jax.random.uniform(k_acc) < accept_p
+        chosen = jnp.where(take, cand, chosen)
+        return wsum + wc, chosen, key
+
+    _, chosen, _ = jax.lax.fori_loop(
+        0, n_chunks, body, (jnp.float32(0.0), jnp.int32(-1), key))
+    return chosen
+
+
+def _walk_to_source(graph: Graph, key, start_node, start_level, dist, sigma,
+                    contrib):
+    """Walk from ``start_node`` (at ``start_level``) down to level 0,
+    marking the *strictly internal* vertices visited (levels l-1 .. 1)."""
+
+    def cond(carry):
+        _v, l, _key, _contrib = carry
+        return l > 1
+
+    def body(carry):
+        v, l, key, contrib = carry
+        key, k = jax.random.split(key)
+        u = _sample_predecessor(graph, k, v, l, dist, sigma)
+        contrib = contrib.at[u].add(1.0)
+        return u, l - 1, key, contrib
+
+    _, _, _, contrib = jax.lax.while_loop(
+        cond, body, (start_node, start_level, key, contrib))
+    return contrib
+
+
+def sample_path(graph: Graph, key) -> PathSample:
+    """Take one KADABRA sample; returns the internal-vertex indicator."""
+    k_pair, k_meet, k_s, k_t = jax.random.split(key, 4)
+    s, t = sample_pair(k_pair, graph.n_nodes)
+    res: BidirResult = bidirectional_bfs(graph, s, t)
+    valid = res.d >= 0
+
+    # --- choose the meeting vertex w ~ sigma_s(w) * sigma_t(w) ----------
+    on_split = (res.dist_s == res.split) & (res.dist_t == res.d - res.split)
+    logw = jnp.where(
+        on_split & valid,
+        jnp.log(jnp.maximum(res.sigma_s, 1e-30))
+        + jnp.log(jnp.maximum(res.sigma_t, 1e-30)),
+        _NEG_INF,
+    )
+    w = jnp.int32(_gumbel_argmax(k_meet, logw))
+
+    contrib = jnp.zeros((graph.n_nodes + 1,), jnp.float32)
+    # w itself is internal iff it is neither s (split==0) nor t (split==d)
+    w_internal = valid & (res.split > 0) & (res.split < res.d)
+    contrib = contrib.at[w].add(jnp.where(w_internal, 1.0, 0.0))
+
+    # --- backward walks; skipped naturally when levels are 0/invalid ----
+    lvl_s = jnp.where(valid, res.split, 0)
+    lvl_t = jnp.where(valid, res.d - res.split, 0)
+    contrib = _walk_to_source(graph, k_s, w, lvl_s, res.dist_s, res.sigma_s,
+                              contrib)
+    contrib = _walk_to_source(graph, k_t, w, lvl_t, res.dist_t, res.sigma_t,
+                              contrib)
+    # the sink row never receives contributions, but zero it defensively
+    contrib = contrib.at[graph.n_nodes].set(0.0)
+    return PathSample(contrib, valid, jnp.where(valid, res.d, -1))
+
+
+def sample_batch(graph: Graph, key, n_samples: int):
+    """Sequentially take ``n_samples`` samples, accumulating counts.
+
+    Sequential (lax.scan) per device — each device is one "thread" of the
+    paper; memory stays O(V) regardless of the epoch length.
+    Returns (counts (V+1,) float32, tau () int32).
+    """
+    def step(carry, k):
+        counts, tau = carry
+        ps = sample_path(graph, k)
+        return (counts + ps.contrib, tau + 1), ps.valid
+
+    keys = jax.random.split(key, n_samples)
+    (counts, tau), _valids = jax.lax.scan(
+        step, (jnp.zeros((graph.n_nodes + 1,), jnp.float32), jnp.int32(0)),
+        keys)
+    return counts, tau

@@ -1,0 +1,219 @@
+"""Data pipeline: deterministic synthetic streams for every family.
+
+Everything is host-side numpy (double-buffered via a tiny prefetch
+thread), shaped exactly like the dry-run cells.  Determinism: the stream
+is a pure function of (seed, step), so a restart from checkpoint step N
+reproduces the same batch sequence — the property the fault-tolerance
+tests assert.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+
+class PrefetchIterator:
+    """Wrap a step->batch function with one-deep background prefetch."""
+
+    def __init__(self, make_batch: Callable[[int], dict], start_step: int = 0,
+                 depth: int = 2):
+        self._make = make_batch
+        self._step = start_step
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            try:
+                self._q.put((step, self._make(step)), timeout=0.2)
+                step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+
+
+# ---------------------------------------------------------------------------
+# LM: synthetic token stream (Zipf-ish marginals, shift-by-one targets)
+# ---------------------------------------------------------------------------
+
+def lm_batch_fn(vocab: int, batch: int, seq: int, seed: int = 0):
+    def make(step: int) -> dict:
+        rng = np.random.default_rng((seed, step))
+        # zipfian marginal roughly matching natural-text token stats
+        z = rng.zipf(1.3, size=(batch, seq + 1)).astype(np.int64)
+        tokens = (z % vocab).astype(np.int32)
+        return {"tokens": tokens[:, :-1], "targets": tokens[:, 1:]}
+    return make
+
+
+# ---------------------------------------------------------------------------
+# GNN: graph batches + the layer-wise neighbor sampler
+# ---------------------------------------------------------------------------
+
+def graph_to_batch(graph, *, d_feat: int, n_classes: int, seed: int = 0,
+                   pad_nodes: Optional[int] = None,
+                   pad_edges: Optional[int] = None):
+    """Full-batch GraphBatch (numpy) from a repro.core Graph."""
+    from repro.models.gnn.message_passing import GraphBatch
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    n, e = graph.n_nodes, graph.n_edges
+    pn = pad_nodes or n
+    pe = pad_edges or e
+    src = np.full(pe, 0, np.int32)
+    dst = np.full(pe, 0, np.int32)
+    src[:e] = np.asarray(graph.src)[:e]
+    dst[:e] = np.asarray(graph.dst)[:e]
+    emask = np.zeros(pe, np.float32)
+    emask[:e] = 1.0
+    nmask = np.zeros(pn, np.float32)
+    nmask[:n] = 1.0
+    return GraphBatch(
+        x=jnp.asarray(rng.standard_normal((pn, d_feat)).astype(np.float32)),
+        z=jnp.asarray(rng.integers(0, 16, pn).astype(np.int32)),
+        pos=jnp.asarray(rng.standard_normal((pn, 3)).astype(np.float32)),
+        src=jnp.asarray(src), dst=jnp.asarray(dst),
+        edge_mask=jnp.asarray(emask), node_mask=jnp.asarray(nmask),
+        labels=jnp.asarray(rng.integers(0, max(n_classes, 1), pn)
+                           .astype(np.int32)),
+        graph_id=jnp.asarray(np.zeros(pn, np.int32)),
+        y=jnp.asarray(np.zeros(1, np.float32)),
+        n_graphs=1,
+    )
+
+
+class NeighborSampler:
+    """Layer-wise (GraphSAGE-style) uniform neighbor sampler.
+
+    Produces fixed-shape padded subgraph batches: seeds (B,), then per
+    hop ``fanout[i]`` sampled neighbors per frontier node.  Nodes are
+    compacted into a local id space; edges point (sampled neighbor ->
+    parent).  Deterministic in (seed, step).
+    """
+
+    def __init__(self, graph, fanouts, batch_nodes: int, seed: int = 0):
+        self.indptr = np.asarray(graph.indptr)
+        self.indices = np.asarray(graph.indices)[: graph.n_edges]
+        self.n_nodes = graph.n_nodes
+        self.fanouts = tuple(fanouts)
+        self.batch_nodes = batch_nodes
+        self.seed = seed
+        # fixed output sizes
+        self.layer_sizes = [batch_nodes]
+        for f in self.fanouts:
+            self.layer_sizes.append(self.layer_sizes[-1] * f)
+        self.total_nodes = sum(self.layer_sizes)
+        self.total_edges = sum(self.layer_sizes[1:])
+
+    def sample(self, step: int):
+        rng = np.random.default_rng((self.seed, step))
+        seeds = rng.integers(0, self.n_nodes, self.batch_nodes)
+        node_ids = [seeds.astype(np.int64)]
+        srcs, dsts = [], []
+        emasks = []
+        offset = 0
+        frontier = node_ids[0]
+        for f in self.fanouts:
+            deg = self.indptr[frontier + 1] - self.indptr[frontier]
+            # uniform sample f neighbors per frontier node (with
+            # replacement; degree-0 nodes produce masked edges)
+            pick = rng.integers(0, np.maximum(deg, 1)[:, None],
+                                size=(len(frontier), f))
+            nbr = self.indices[
+                np.minimum(self.indptr[frontier][:, None] + pick,
+                           len(self.indices) - 1)]
+            valid = (deg > 0)[:, None] & np.ones_like(pick, bool)
+            parent_local = offset + np.arange(len(frontier))
+            child_local = offset + len(frontier) + \
+                np.arange(len(frontier) * f)
+            srcs.append(child_local)
+            dsts.append(np.repeat(parent_local, f))
+            emasks.append(valid.reshape(-1).astype(np.float32))
+            node_ids.append(nbr.reshape(-1))
+            offset += len(frontier)
+            frontier = nbr.reshape(-1)
+        nodes = np.concatenate(node_ids)
+        return {
+            "node_ids": nodes.astype(np.int64),
+            "src": np.concatenate(srcs).astype(np.int32),
+            "dst": np.concatenate(dsts).astype(np.int32),
+            "edge_mask": np.concatenate(emasks),
+            "n_seeds": self.batch_nodes,
+        }
+
+    def to_graph_batch(self, sub, features, labels, *, n_classes: int,
+                       pad_nodes: Optional[int] = None,
+                       pad_edges: Optional[int] = None):
+        from repro.models.gnn.message_passing import GraphBatch
+        import jax.numpy as jnp
+        n = len(sub["node_ids"])
+        e = len(sub["src"])
+        pn = pad_nodes or n
+        pe = pad_edges or e
+        x = np.zeros((pn, features.shape[1]), np.float32)
+        x[:n] = features[sub["node_ids"]]
+        lab = np.zeros(pn, np.int32)
+        lab[:n] = labels[sub["node_ids"]]
+        src = np.zeros(pe, np.int32)
+        dst = np.zeros(pe, np.int32)
+        em = np.zeros(pe, np.float32)
+        src[:e] = sub["src"]
+        dst[:e] = sub["dst"]
+        em[:e] = sub["edge_mask"]
+        nm = np.zeros(pn, np.float32)
+        nm[: sub["n_seeds"]] = 1.0     # loss only on the seed nodes
+        rng = np.random.default_rng(0)
+        return GraphBatch(
+            x=jnp.asarray(x),
+            z=jnp.asarray((sub["node_ids"][: pn] % 16 if n == pn else
+                           np.pad(sub["node_ids"] % 16, (0, pn - n)))
+                          .astype(np.int32)),
+            pos=jnp.asarray(rng.standard_normal((pn, 3)).astype(np.float32)),
+            src=jnp.asarray(src), dst=jnp.asarray(dst),
+            edge_mask=jnp.asarray(em), node_mask=jnp.asarray(nm),
+            labels=jnp.asarray(lab),
+            graph_id=jnp.asarray(np.zeros(pn, np.int32)),
+            y=jnp.asarray(np.zeros(1, np.float32)), n_graphs=1,
+        )
+
+
+# ---------------------------------------------------------------------------
+# recsys: session histories with latent-interest structure
+# ---------------------------------------------------------------------------
+
+def recsys_batch_fn(n_items: int, batch: int, hist_len: int, seed: int = 0,
+                    n_latent: int = 64):
+    """Users draw items from a few latent clusters — gives MIND's
+    multi-interest routing something real to learn."""
+    def make(step: int) -> dict:
+        rng = np.random.default_rng((seed, step))
+        cluster_of_user = rng.integers(0, n_latent, (batch, 3))
+        which = rng.integers(0, 3, (batch, hist_len))
+        cluster = np.take_along_axis(cluster_of_user, which, axis=1)
+        items = (cluster * (n_items // n_latent)
+                 + rng.integers(0, n_items // n_latent,
+                                (batch, hist_len))).astype(np.int32)
+        lengths = rng.integers(hist_len // 2, hist_len + 1, batch)
+        mask = (np.arange(hist_len)[None, :] < lengths[:, None]) \
+            .astype(np.float32)
+        tgt_cluster = cluster_of_user[np.arange(batch),
+                                      rng.integers(0, 3, batch)]
+        target = (tgt_cluster * (n_items // n_latent)
+                  + rng.integers(0, n_items // n_latent, batch)) \
+            .astype(np.int32)
+        return {"hist": items, "hist_mask": mask, "target": target}
+    return make

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots:
+#   frontier  — BFS frontier expansion (the paper's per-sample inner loop)
+#   segsum    — fused gather + segment-sum (GNN aggregation / EmbeddingBag)
+#   stopcheck — fused KADABRA f/g stopping-condition evaluation
+#   flashattn — fused causal attention (the LM memory-bound hot spot
+#               identified by EXPERIMENTS.md §Perf cell 1)
+# Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py
+# (jit'd dispatching wrapper) and ref.py (pure-jnp oracle).

@@ -1,0 +1,6 @@
+from .kernel import flash_attention_pallas
+from .ops import flash_attention
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention", "flash_attention_pallas",
+           "flash_attention_ref"]

@@ -1,0 +1,6 @@
+from .kernel import frontier_expand_pallas
+from .ops import frontier_expand, pallas_supported
+from .ref import frontier_expand_ref
+
+__all__ = ["frontier_expand", "frontier_expand_pallas",
+           "frontier_expand_ref", "pallas_supported"]

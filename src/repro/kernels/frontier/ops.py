@@ -1,0 +1,35 @@
+"""Dispatching wrapper for the frontier-expansion kernel.
+
+``frontier_expand`` picks the Pallas kernel when the node state fits the
+VMEM budget and the edge list is block-aligned, otherwise the XLA
+segment-sum reference.  The jit'd API is what ``repro.core.bfs`` would
+call on TPU; on this CPU container the core BFS uses the XLA path
+directly (identical numerics — asserted by the kernel tests) so that
+lax.while_loop tracing stays fast.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BLOCK_E, frontier_expand_pallas
+from .ref import frontier_expand_ref
+
+# dist(4B) + sigma(4B) + contrib(4B) per row, 16 MiB VMEM, ~25% headroom
+_VMEM_ROW_BUDGET = 1_000_000
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_e"))
+def frontier_expand(src, dst, dist, sigma, level, *, use_pallas=False,
+                    interpret=True, block_e=DEFAULT_BLOCK_E):
+    if use_pallas:
+        return frontier_expand_pallas(src, dst, dist, sigma, level,
+                                      block_e=block_e, interpret=interpret)
+    return frontier_expand_ref(src, dst, dist, sigma, level)
+
+
+def pallas_supported(n_nodes: int, e_pad: int,
+                     block_e: int = DEFAULT_BLOCK_E) -> bool:
+    return (n_nodes + 1) <= _VMEM_ROW_BUDGET and e_pad % block_e == 0

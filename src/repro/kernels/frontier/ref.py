@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the BFS frontier-expansion kernel.
+
+Contract (one BFS level, edge-centric):
+
+    contrib[v] = sum_{e: dst[e] == v} sigma[src[e]] * [dist[src[e]] == level]
+
+Inputs
+  src, dst : (E,) int32 — COO edge list; padded slots point at row V
+             (``n_nodes`` sink) whose dist is never equal to ``level``.
+  dist     : (V1,) int32  (V1 = V + 1, includes the sink row)
+  sigma    : (V1,) float32
+  level    : () int32
+
+Output
+  contrib  : (V1,) float32
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frontier_expand_ref(src, dst, dist, sigma, level):
+    vals = jnp.where(dist[src] == level, sigma[src], 0.0)
+    return jax.ops.segment_sum(vals, dst, num_segments=dist.shape[0])

@@ -1,0 +1,6 @@
+from .kernel import gather_segment_sum_pallas
+from .ops import gather_segment_sum, pallas_supported
+from .ref import gather_segment_sum_ref
+
+__all__ = ["gather_segment_sum", "gather_segment_sum_pallas",
+           "gather_segment_sum_ref", "pallas_supported"]

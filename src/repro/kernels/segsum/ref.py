@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the fused gather + segment-sum kernel.
+
+Contract (EmbeddingBag / GNN message aggregation):
+
+    out[s, :] = sum_{i : seg[i] == s} w[i] * table[ids[i], :]
+
+Inputs
+  ids   : (N,) int32   — rows to gather (padded entries: ids = V sink row,
+                          whose table row is all-zero by construction, or
+                          w = 0)
+  seg   : (N,) int32   — output segment of each gathered row, in [0, S)
+  w     : (N,) float32 — per-element weights (1.0 for plain bags)
+  table : (V1, D) float — gather source
+Output
+  out   : (S, D) float32
+
+This single primitive is the computational core of three of the assigned
+architecture families: GraphSAGE/EGNN/NequIP/MACE message passing
+(ids=edge src, seg=edge dst), the MIND recsys embedding bag (ids=item
+ids, seg=bag index) and the neighbor-sampled minibatch aggregation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_segment_sum_ref(ids, seg, w, table, n_segments: int):
+    # accumulate in float32 regardless of the table dtype (matches the
+    # kernel's MXU accumulation) and round once at the end
+    rows = table[ids].astype(jnp.float32) * w[:, None].astype(jnp.float32)
+    out = jax.ops.segment_sum(rows, seg, num_segments=n_segments)
+    return out.astype(table.dtype)

@@ -1,0 +1,5 @@
+from .kernel import stopcheck_pallas
+from .ops import stopcheck
+from .ref import stopcheck_ref
+
+__all__ = ["stopcheck", "stopcheck_pallas", "stopcheck_ref"]

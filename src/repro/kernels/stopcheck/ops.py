@@ -1,0 +1,19 @@
+"""Dispatching wrapper for the fused stopping-condition check."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import stopcheck_pallas
+from .ref import stopcheck_ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def stopcheck(counts, tau, log_inv_delta_l, log_inv_delta_u, omega, *,
+              use_pallas=False, interpret=True):
+    if use_pallas:
+        return stopcheck_pallas(counts, tau, log_inv_delta_l,
+                                log_inv_delta_u, omega, interpret=interpret)
+    return stopcheck_ref(counts, tau, log_inv_delta_l, log_inv_delta_u,
+                         omega)

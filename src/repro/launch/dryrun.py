@@ -1,0 +1,527 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces:
+  * the FULL compile (production loop structure, lax.scan over layer
+    groups) -> memory_analysis() proves the program fits the 16 GiB HBM;
+  * 1-3 tiny MEASUREMENT compiles (unrolled, truncated loop counts) from
+    which exact HLO totals are extrapolated (cost_analysis counts a scan
+    body once; DESIGN.md §Roofline methodology):
+
+      basis "exact": F_total = F(full)                      [GNN, recsys]
+      basis "k"    : F(k)   = A + kB      -> 2 compiles     [LM decode]
+      basis "kc"   : F(k,c) = A + k(B+cC) -> 3 compiles     [LM train/prefill]
+    + one remainder compile when the layer pattern does not divide the
+      depth (gemma3: 62 = 10x6 + 2).
+
+Collective bytes are parsed from the post-SPMD optimized HLO of the same
+measurement compiles, so they extrapolate with the same basis.
+
+Results land in experiments/dryrun/<arch>__<cell>__<mesh>.json; the
+roofline report (benchmarks/roofline.py) consumes them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.models.common import LoopConfig
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one HLO instruction: "%name = TYPE op-name(..." — TYPE may be a tuple
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"((?:all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?)\((.*)")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# replica_groups appear as explicit lists {{0,1,..},..} or iota
+# [G,S]<=[N] (G groups of S members)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(rest_of_line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(rest_of_line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest_of_line)
+    if m:
+        return m.group(1).count(",") + 1
+    return 1
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device *ring-traffic* bytes per collective kind.
+
+    Output-shape proxy with the per-kind correction:
+      all-gather      : output is the gathered (full) tensor -> bytes moved
+                        per device ~ output * (g-1)/g ~ output
+      reduce-scatter  : output is the 1/g shard; bytes moved ~ input ~
+                        output * group_size
+      all-reduce      : payload = shape; ring send+recv -> weighted 2x in
+                        the roofline term (benchmarks/roofline.py)
+      all-to-all /
+      collective-permute: output-sized
+    '-done' ops are skipped so async pairs count once."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _INSTR_RE.finditer(hlo_text):
+        type_str, opname, rest = m.group(1), m.group(2), m.group(3)
+        base = opname.replace("-start", "")
+        nbytes = _shape_bytes(type_str)
+        if base == "reduce-scatter":
+            nbytes *= _group_size(rest)
+        out[base] += nbytes
+        counts[base] += 1
+    return {"bytes": out, "counts": counts}
+
+
+def _to_shardings(mesh, tree):
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def _jit_cell(built, mesh):
+    return jax.jit(built.fn,
+                   in_shardings=_to_shardings(mesh, built.in_shardings),
+                   donate_argnums=built.donate)
+
+
+def _compile_once(arch, cell_name, mesh, mesh_axes, loop, config=None):
+    from repro.models.common import active_mesh
+    built = arch.build(cell_name, config=config, loop=loop,
+                       mesh_axes=mesh_axes)
+    with active_mesh(mesh):
+        t0 = time.time()
+        lowered = _jit_cell(built, mesh).lower(*built.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ca = compiled.cost_analysis() or {}
+    stats = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+        "t_lower_s": t_lower,
+        "t_compile_s": t_compile,
+    }
+    stats["collectives"] = collective_stats(compiled.as_text())
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        stats["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+    return stats, built
+
+
+def _lin(d):
+    return {**{k: d[k] for k in ("flops", "bytes", "transcendentals")},
+            "coll": dict(d["collectives"]["bytes"])}
+
+
+def _combine(terms, coeffs):
+    """Linear combination of measurement stats dicts."""
+    out = {"flops": 0.0, "bytes": 0.0, "transcendentals": 0.0,
+           "coll": {k: 0.0 for k in _COLLECTIVES}}
+    for t, c in zip(terms, coeffs):
+        out["flops"] += c * t["flops"]
+        out["bytes"] += c * t["bytes"]
+        out["transcendentals"] += c * t["transcendentals"]
+        for k in _COLLECTIVES:
+            out["coll"][k] += c * t["coll"][k]
+    return out
+
+
+# --- perf-variant catalogue (hillclimb; EXPERIMENTS.md §Perf) ------------
+# each entry: config transform applied before building the cell
+def _variant_cfg(cfg, variant: str):
+    if variant == "base" or variant is None:
+        return cfg
+    if variant == "fsdp":
+        # pure data parallelism over every mesh axis + ZeRO-3 weights
+        return dataclasses.replace(cfg, param_sharding="fsdp",
+                                   batch_axes=("pod", "data", "model"),
+                                   train_microbatch=1)
+    if variant.startswith("micro"):
+        return dataclasses.replace(cfg,
+                                   train_microbatch=int(variant[5:]))
+    if variant == "fsdp_micro2":
+        return dataclasses.replace(cfg, param_sharding="fsdp",
+                                   batch_axes=("pod", "data", "model"),
+                                   train_microbatch=2)
+    if variant == "noremat":
+        return dataclasses.replace(cfg, remat=False)
+    if variant == "nodes_rep":
+        return dataclasses.replace(cfg, node_sharding="replicated")
+    if variant == "agg_bf16":
+        return dataclasses.replace(cfg, agg_dtype="bf16")
+    if variant == "partitioned":
+        return dataclasses.replace(cfg, partitioned=True)
+    if variant == "trapezoid":
+        return dataclasses.replace(cfg, attn_trapezoid=True)
+    if variant == "fsdp_trap":
+        return dataclasses.replace(cfg, param_sharding="fsdp",
+                                   batch_axes=("pod", "data", "model"),
+                                   train_microbatch=1, attn_trapezoid=True)
+    if variant == "fsdp_trap_sel":
+        return dataclasses.replace(cfg, param_sharding="fsdp",
+                                   batch_axes=("pod", "data", "model"),
+                                   train_microbatch=1, attn_trapezoid=True,
+                                   remat_policy="save_proj")
+    if variant == "fsdp_trap_sel_closs":
+        return dataclasses.replace(cfg, param_sharding="fsdp",
+                                   batch_axes=("pod", "data", "model"),
+                                   train_microbatch=1, attn_trapezoid=True,
+                                   remat_policy="save_proj",
+                                   loss_chunk=512)
+    if variant == "fsdp_trap_sel2":
+        return dataclasses.replace(cfg, param_sharding="fsdp",
+                                   batch_axes=("pod", "data", "model"),
+                                   train_microbatch=1, attn_trapezoid=True,
+                                   remat_policy="save_qkv")
+    if variant == "fsdp_trap_noremat":
+        return dataclasses.replace(cfg, param_sharding="fsdp",
+                                   batch_axes=("pod", "data", "model"),
+                                   train_microbatch=1, attn_trapezoid=True,
+                                   remat=False)
+    if variant == "chunk2048":
+        return dataclasses.replace(cfg, attn_chunk=2048)
+    raise ValueError(f"unknown variant {variant}")
+
+
+def run_cell(arch_id: str, cell_name: str, mesh_name: str,
+             out_dir: str = OUT_DIR, variant: str = None) -> dict:
+    arch = registry.get(arch_id)
+    cell = arch.cells[cell_name]
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    mesh_axes = tuple(mesh.axis_names)
+    n_chips = int(np.prod(mesh.devices.shape))
+
+    record = {
+        "arch": arch_id, "cell": cell_name, "mesh": mesh_name,
+        "chips": n_chips, "family": arch.family, "basis": cell.basis,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+    }
+    if variant:
+        record["variant"] = variant
+    if cell.skip:
+        record["skipped"] = cell.skip
+        _write(record, out_dir)
+        return record
+
+    cfg = _variant_cfg(arch.make_config(), variant)
+
+    # ---- full compile (memory truth + production collective schedule) --
+    full_stats, built = _compile_once(arch, cell_name, mesh, mesh_axes,
+                                      LoopConfig(), config=cfg)
+    record["full"] = full_stats
+    K, C = built.n_groups, built.n_chunks
+
+    # ---- measurement compiles + extrapolation ---------------------------
+    if cell.basis == "exact":
+        record["extrapolated"] = _lin(full_stats)
+        record["measure_compiles"] = 0
+    elif cell.basis == "k":
+        f1, _ = _compile_once(arch, cell_name, mesh, mesh_axes,
+                              LoopConfig(layer_groups=1, unroll=True,
+                                         remainder=False), config=cfg)
+        f2, _ = _compile_once(arch, cell_name, mesh, mesh_axes,
+                              LoopConfig(layer_groups=2, unroll=True,
+                                         remainder=False), config=cfg)
+        a, b = _lin(f1), _lin(f2)
+        # F(k) = A + kB ; total = A + K*B (+ remainder)
+        total = _combine([a, b], [2.0 - K, K - 1.0])
+        record["measure_compiles"] = 2
+        total = _add_remainder(arch, cell_name, mesh, mesh_axes, a, total,
+                               record, chunks=None)
+        record["extrapolated"] = total
+    elif getattr(cfg, "attn_trapezoid", False):
+        # "kct": per-layer cost = B + cC + T(c)D, T(c) = c(c+1)/2
+        # (the trapezoid schedule makes global layers quadratic in the
+        # chunk count and window layers linear) -> 4 measurement points
+        fs = {}
+        for (kk, cc) in [(1, 1), (1, 2), (1, 4), (2, 1)]:
+            f, _ = _compile_once(
+                arch, cell_name, mesh, mesh_axes,
+                LoopConfig(layer_groups=kk, attn_chunks=cc, unroll=True,
+                           remainder=False), config=cfg)
+            fs[(kk, cc)] = _lin(f)
+        # D = (F14 - 3 F12 + 2 F11)/3 ; C = (F12 - F11) - 3D
+        # B+C+D = F21 - F11 ; A = F11 - (B + C + D)
+        # total = A + K(B + cC + T(c)D)
+        Tc = C * (C + 1) / 2.0
+        # symbolic solve:
+        #   D_ = (f14 - 3 f12 + 2 f11)/3
+        #   C_ = f12 - f11 - 3 D_
+        #   BCD = f21 - f11          (= B + C + D at k-slope)
+        #   A_ = f11 - BCD
+        #   total = A_ + K*(BCD - C_ - D_ + C*C_ + Tc*D_)
+        f11, f12, f14, f21 = (fs[(1, 1)], fs[(1, 2)], fs[(1, 4)],
+                              fs[(2, 1)])
+        D_ = _combine([f14, f12, f11], [1 / 3, -1.0, 2 / 3])
+        C_ = _combine([f12, f11, D_], [1.0, -1.0, -3.0])
+        BCD = _combine([f21, f11], [1.0, -1.0])
+        A_ = _combine([f11, BCD], [1.0, -1.0])
+        total = _combine([A_, BCD, C_, D_],
+                         [1.0, K, K * (C - 1.0), K * (Tc - 1.0)])
+        record["measure_compiles"] = 4
+        total = _add_remainder(arch, cell_name, mesh, mesh_axes, f11,
+                               total, record, chunks=None, config=cfg)
+        record["extrapolated"] = total
+    else:  # "kc"
+        f11, _ = _compile_once(arch, cell_name, mesh, mesh_axes,
+                               LoopConfig(layer_groups=1, attn_chunks=1,
+                                          unroll=True, remainder=False),
+                               config=cfg)
+        f12, _ = _compile_once(arch, cell_name, mesh, mesh_axes,
+                               LoopConfig(layer_groups=1, attn_chunks=2,
+                                          unroll=True, remainder=False),
+                               config=cfg)
+        f21, _ = _compile_once(arch, cell_name, mesh, mesh_axes,
+                               LoopConfig(layer_groups=2, attn_chunks=1,
+                                          unroll=True, remainder=False),
+                               config=cfg)
+        a11, a12, a21 = _lin(f11), _lin(f12), _lin(f21)
+        # F(k,c) = A + k(B + cC)
+        # C = F12 - F11 ; B + C = F21 - F11 ... solve per component
+        #   total = A + K*B + K*Cn*C  with Cn = real chunk count
+        # A = F11 - (B + C); B = (F21 - F11) - C; C = F12 - F11
+        #   => total = F11 + (K-1)(F21-F11) + (K*Cn - K)(F12 - F11)
+        total = _combine([a11, a21, a12],
+                         [1.0 - (K - 1.0) - (K * C - K),
+                          K - 1.0, K * C - K])
+        record["measure_compiles"] = 3
+        total = _add_remainder(arch, cell_name, mesh, mesh_axes, a11,
+                               total, record, chunks=1, config=cfg)
+        record["extrapolated"] = total
+
+    # analytic model flops for the useful-compute ratio
+    if arch.model_flops is not None:
+        record["model_flops"] = float(arch.model_flops(cfg, cell_name))
+    _write(record, out_dir)
+    return record
+
+
+def _add_remainder(arch, cell_name, mesh, mesh_axes, base_lin, total,
+                   record, chunks, config=None):
+    """Remainder layers (pattern does not divide depth): one extra compile
+    F(k=1, rem=True) - F(k=1, rem=False) added verbatim.  The remainder's
+    own attention-chunk scaling is folded in by measuring it at the real
+    chunk count via the production (non-truncated) chunks."""
+    cfg = config if config is not None else arch.make_config()
+    n_rem = getattr(cfg, "n_remainder", 0)
+    if not n_rem:
+        return total
+    loop = LoopConfig(layer_groups=1, attn_chunks=None, unroll=True,
+                      remainder=True)
+    f_rem, _ = _compile_once(arch, cell_name, mesh, mesh_axes, loop,
+                             config=cfg)
+    loop0 = LoopConfig(layer_groups=1, attn_chunks=None, unroll=True,
+                       remainder=False)
+    f_no, _ = _compile_once(arch, cell_name, mesh, mesh_axes, loop0,
+                            config=cfg)
+    rem = _combine([_lin(f_rem), _lin(f_no)], [1.0, -1.0])
+    record["measure_compiles"] = record.get("measure_compiles", 0) + 2
+    return _combine([total, rem], [1.0, 1.0])
+
+
+def _write(record, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    name = "{}__{}__{}".format(
+        record["arch"].replace("/", "_"), record["cell"], record["mesh"])
+    if record.get("variant"):
+        name += "__" + record["variant"]
+    name += ".json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[dryrun] wrote {name}", flush=True)
+
+
+def run_betweenness(mesh_name: str, aggregation: str,
+                    rmat_scale: int = 22, out_dir: str = OUT_DIR,
+                    n0: int = 1) -> dict:
+    """Lower + compile one SPMD adaptive-sampling epoch (the paper's own
+    workload) on the production mesh, with abstract graph arrays sized
+    like an R-MAT 2^scale x 30 instance.  The BFS while-loops are counted
+    once by cost_analysis (trip counts are data-dependent — documented),
+    but the epoch's AGGREGATION — the object the paper studies — sits
+    outside all loops, so its collective bytes are exact."""
+    import jax.numpy as jnp
+    from repro.core.adaptive import make_epoch_step_spmd, _pad_len
+    from repro.core.kadabra import KadabraParams
+    from repro.core.graph import Graph
+    from repro.models.common import active_mesh
+
+    mesh = make_production_mesh(multi_pod=mesh_name == "multi")
+    n_dev = int(np.prod(mesh.devices.shape))
+    v = 1 << rmat_scale
+    e_dir = 2 * 30 * v          # 30|V| undirected edges, both directions
+    e_pad = (e_dir // 128 + 2) * 128
+    v_pad = _pad_len(v, n_dev)
+
+    sds = jax.ShapeDtypeStruct
+    graph = Graph(
+        indptr=sds((v + 1,), jnp.int32), indices=sds((e_pad,), jnp.int32),
+        src=sds((e_pad,), jnp.int32), dst=sds((e_pad,), jnp.int32),
+        degree=sds((v,), jnp.int32), n_nodes=v, n_edges=e_dir,
+        max_degree=100_000)
+    params = KadabraParams(
+        eps=0.001, delta=0.1, omega=sds((), jnp.float32),
+        log_inv_delta_l=sds((v,), jnp.float32),
+        log_inv_delta_u=sds((v,), jnp.float32))
+    args = (graph, params, sds((v_pad,), jnp.float32), sds((), jnp.int32),
+            sds((n_dev, v_pad), jnp.float32), sds((), jnp.int32),
+            sds((n_dev, 2), jnp.uint32))
+
+    step = make_epoch_step_spmd(mesh, aggregation, v, v_pad, n0)
+    with active_mesh(mesh):
+        t0 = time.time()
+        lowered = jax.jit(step).lower(*args)
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    record = {
+        "arch": "betweenness", "cell": f"epoch_rmat{rmat_scale}",
+        "mesh": mesh_name, "chips": n_dev, "family": "graph-sampling",
+        "basis": "exact", "variant": aggregation,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "full": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "transcendentals": float(ca.get("transcendentals", 0.0)),
+            "t_compile_s": t_compile,
+            "collectives": collective_stats(compiled.as_text()),
+            "memory": {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "code_bytes": 0,
+            },
+        },
+        "note": "BFS while-loop bodies counted once (data-dependent trip "
+                "counts); aggregation collectives exact",
+    }
+    record["extrapolated"] = _lin(record["full"])
+    _write(record, out_dir)
+    return record
+
+
+def iter_assigned_cells():
+    for arch_id in registry.all_ids():
+        arch = registry.get(arch_id)
+        if arch.family == "graph-sampling":
+            continue
+        for cell_name in arch.cells:
+            yield arch_id, cell_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--betweenness", action="store_true",
+                    help="lower the paper's own epoch step instead")
+    ap.add_argument("--aggregation", default="hierarchical",
+                    choices=["hierarchical", "flat", "root"])
+    ap.add_argument("--variant", default=None,
+                    help="perf variant (fsdp, microN, fsdp_micro8, "
+                         "noremat, chunk2048)")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.betweenness:
+        for mesh_name in meshes:
+            rec = run_betweenness(mesh_name, args.aggregation,
+                                  out_dir=args.out)
+            print(f"[dryrun] betweenness x {mesh_name} x "
+                  f"{args.aggregation}: ok", flush=True)
+        return
+    if args.all:
+        cells = list(iter_assigned_cells())
+    else:
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch_id, cell_name in cells:
+        for mesh_name in meshes:
+            fname = os.path.join(args.out, "{}__{}__{}.json".format(
+                arch_id, cell_name, mesh_name))
+            if args.skip_existing and os.path.exists(fname):
+                print(f"[dryrun] skip existing {fname}", flush=True)
+                continue
+            t0 = time.time()
+            try:
+                rec = run_cell(arch_id, cell_name, mesh_name, args.out,
+                               variant=args.variant)
+                status = ("SKIP(" + rec["skipped"][:40] + "...)"
+                          if "skipped" in rec else "ok")
+                print(f"[dryrun] {arch_id} x {cell_name} x {mesh_name}: "
+                      f"{status} in {time.time()-t0:.1f}s", flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures.append((arch_id, cell_name, mesh_name, str(e)))
+                traceback.print_exc()
+                print(f"[dryrun] FAIL {arch_id} x {cell_name} x "
+                      f"{mesh_name}: {e}", flush=True)
+    if failures:
+        print(f"[dryrun] {len(failures)} failures:")
+        for f in failures:
+            print("   ", f[:3])
+        raise SystemExit(1)
+    print("[dryrun] all requested cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Production train driver: any registered arch, any mesh, fault-tolerant.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --smoke --steps 50 --ckpt /tmp/ckpt
+
+Features (the large-scale-runnability checklist):
+  * pjit execution on an arbitrary mesh (1 device .. multi-pod);
+  * deterministic restart: batches are a pure function of (seed, step),
+    checkpoints are atomic + keep-last-k (repro.checkpoint);
+  * ELASTIC resume: checkpoints store full host arrays; on restore they
+    are re-placed against the *current* mesh — losing a pod and resuming
+    on half the chips is a restore, not a re-run (test-covered);
+  * straggler mitigation: the synchronous-SPMD answer is bounded, fully
+    overlapped collectives (XLA latency-hiding) + deterministic epoch
+    boundaries; the driver additionally monitors per-step wall time and
+    logs p99/p50 skew so a persistent straggler is surfaced for
+    re-scheduling (on real fleets this hooks the pod-manager API; here it
+    is a log line + counter);
+  * gradient compression (int8 + error feedback) via --compress.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import CheckpointManager
+from repro.data.pipeline import lm_batch_fn, recsys_batch_fn
+from repro.launch.mesh import make_single_device_mesh
+from repro.models import registry
+from repro.models.common import active_mesh
+from repro.optim.adamw import AdamWConfig, init_state, state_specs
+from repro.train.step import make_train_step
+
+
+def _named(mesh, tree):
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+
+def build_lm_training(arch, cfg, mesh, opt):
+    from jax.sharding import PartitionSpec as P
+    from repro.models.transformer import init_params, lm_loss, param_specs
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pspec = param_specs(cfg)
+    compress = opt.compress is not None
+    opt_state = init_state(params, compress=compress)
+    sspec = state_specs(pspec, compress=compress)
+    step_fn = make_train_step(lambda p, b: lm_loss(p, b, cfg), opt)
+    da = tuple(a for a in mesh.axis_names if a != "model")
+    bspec = {"tokens": P(da, None), "targets": P(da, None)}
+    return params, opt_state, pspec, sspec, bspec, step_fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--compress", choices=["int8"], default=None)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    arch = registry.get(args.arch)
+    cfg = (arch.make_smoke_config() if args.smoke else arch.make_config())
+    mesh = make_single_device_mesh() if jax.device_count() == 1 else None
+    if mesh is None:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=jax.device_count() >= 512)
+    opt = AdamWConfig(lr=args.lr, compress=args.compress)
+
+    if arch.family != "lm":
+        raise SystemExit("train.py drives LM archs; GNN/recsys examples "
+                         "live under examples/")
+
+    params, opt_state, pspec, sspec, bspec, step_fn = \
+        build_lm_training(arch, cfg, mesh, opt)
+    make_batch = lm_batch_fn(cfg.vocab, args.batch, args.seq, args.seed)
+
+    jit_step = jax.jit(step_fn,
+                       in_shardings=(_named(mesh, pspec),
+                                     _named(mesh, sspec),
+                                     _named(mesh, bspec)),
+                       donate_argnums=(0, 1))
+
+    start_step = 0
+    mgr = None
+    if args.ckpt:
+        mgr = CheckpointManager(args.ckpt, save_every=args.ckpt_every)
+        restored = mgr.restore_or_none(
+            (params, opt_state),
+            shardings=(_named(mesh, pspec), _named(mesh, sspec)))
+        if restored is not None:
+            (params, opt_state), start_step, _meta = restored
+            print(f"[train] resumed from step {start_step} on "
+                  f"{jax.device_count()} devices (elastic restore)")
+
+    times = []
+    with active_mesh(mesh):
+        for step in range(start_step, args.steps):
+            batch = jax.tree.map(jax.numpy.asarray, make_batch(step))
+            t0 = time.perf_counter()
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if step > start_step + 1:   # skip compile-step outliers
+                times.append(dt)
+            if step % args.log_every == 0 and times:
+                p50 = float(np.percentile(times[-50:], 50))
+                p99 = float(np.percentile(times[-50:], 99))
+                skew = p99 / max(p50, 1e-9)
+                straggler = " STRAGGLER?" if (len(times) > 20 and
+                                              skew > 3.0) else ""
+                print(f"[train] step {step} loss {loss:.4f} "
+                      f"gnorm {float(metrics['grad_norm']):.3f} "
+                      f"dt {dt*1e3:.1f}ms p99/p50 {skew:.2f}{straggler}",
+                      flush=True)
+            if not np.isfinite(loss):
+                raise RuntimeError(f"loss diverged at step {step}")
+            if mgr:
+                mgr.maybe_save(step + 1, (params, opt_state),
+                               metadata={"loss": loss})
+    if mgr:
+        mgr.wait()
+    print(f"[train] done: {args.steps - start_step} steps, "
+          f"final loss {loss:.4f}")
+    return loss
+
+
+if __name__ == "__main__":
+    main()

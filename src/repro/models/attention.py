@@ -1,0 +1,204 @@
+"""Attention implementations: dense, masked-chunk (flash-style), decode.
+
+All functions use GQA-aware einsums: q (B, Sq, Hkv, G, dh), kv (B, Sk,
+Hkv, dh) where G = n_heads / n_kv_heads, so the repeated KV heads are
+never materialized.
+
+``masked_chunk_attention`` is the memory-efficient training/prefill path:
+an online-softmax lax.scan over KV chunks with the causal / sliding-window
+mask applied per chunk.  Per-chunk score tiles are (B, Hkv, G, Sq_blk,
+chunk) — the S x S score matrix never exists.  The causal variant visits
+every chunk and masks (rectangular schedule); the trapezoid variant
+(``repro.perf.trapezoid``) restores the ~2x flops by scanning only live
+(q-block, kv-chunk) pairs and is wired in via ``impl='trapezoid'`` during
+the perf hillclimb.
+
+``decode_attention`` attends one new token against a KV cache, scanning
+the cache in chunks (linear cost — this is what ``decode_32k`` and
+``long_500k`` lower).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import LoopConfig
+
+_NEG_INF = -1e30
+
+
+def _gqa_split(q, n_kv: int):
+    b, s, h, dh = q.shape
+    g = h // n_kv
+    return q.reshape(b, s, n_kv, g, dh)
+
+
+def dense_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_offset=0):
+    """Reference O(S^2)-memory attention (smoke tests / tiny shapes)."""
+    b, sq, h, dh = q.shape
+    n_kv = k.shape[2]
+    qh = _gqa_split(q, n_kv)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (dh ** 0.5)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, dh)
+
+
+def trapezoid_attention(q, k, v, *, window: Optional[int] = None,
+                        chunk: int = 1024,
+                        loop: LoopConfig = LoopConfig()):
+    """Block-causal ("trapezoid") schedule: queries are split into
+    chunk-sized segments; segment i only visits the KV chunks it can see
+    — chunks [0..i] for full-causal layers, [i-w..i] for sliding-window
+    layers.  Exact causal semantics, ~2x fewer chunk-steps than the
+    rectangular masked scan at large c (sum i+1 = c(c+1)/2 vs c^2), and
+    window layers drop from O(c^2) to O(c) chunk-steps.
+
+    Cost basis: per layer = C*c + D*T(c), T(c)=c(c+1)/2 (the dry-run
+    fitter's "kct" basis).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0 and sq == sk, (sq, sk, chunk)
+    n_chunks = sk // chunk
+    if loop.attn_chunks is not None:
+        n_chunks = min(n_chunks, loop.attn_chunks)
+    wc = None if window is None else max(0, -(-window // chunk))
+    outs = []
+    for i in range(n_chunks):
+        lo = 0 if wc is None else max(0, i - wc)
+        qi = q[:, i * chunk:(i + 1) * chunk]
+        kv_lo, kv_hi = lo * chunk, (i + 1) * chunk
+        oi = masked_chunk_attention(
+            qi, k[:, kv_lo:kv_hi], v[:, kv_lo:kv_hi], causal=True,
+            window=window, chunk=chunk, q_offset=i * chunk - kv_lo,
+            loop=LoopConfig(unroll=loop.unroll))
+        outs.append(oi)
+    out = jnp.concatenate(outs, axis=1)
+    if out.shape[1] < sq:   # truncated measurement compile: pad back
+        out = jnp.pad(out, ((0, 0), (0, sq - out.shape[1]), (0, 0), (0, 0)))
+    return out
+
+
+def masked_chunk_attention(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           chunk: int = 1024,
+                           q_offset=0,
+                           loop: LoopConfig = LoopConfig()):
+    """Online-softmax attention, scanning KV in chunks.
+
+    ``loop.attn_chunks`` truncates the number of chunks (dry-run cost
+    measurement); ``loop.unroll`` uses a Python loop instead of lax.scan
+    so the HLO contains every chunk iteration explicitly.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    n_kv = k.shape[2]
+    g = h // n_kv
+    chunk = min(chunk, sk)
+    assert sk % chunk == 0, (sk, chunk)
+    n_chunks = sk // chunk
+    if loop.attn_chunks is not None:
+        n_chunks = min(n_chunks, loop.attn_chunks)
+
+    qh = _gqa_split(q, n_kv).astype(jnp.float32)
+    qpos = (jnp.arange(sq) + q_offset).astype(jnp.int32)
+    kc = k[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, n_kv, dh)
+    vc = v[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, n_kv, dh)
+    kc = jnp.moveaxis(kc, 1, 0)   # (C, B, chunk, n_kv, dh)
+    vc = jnp.moveaxis(vc, 1, 0)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        kpos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qh,
+                       kj.astype(jnp.float32)) / (dh ** 0.5)
+        mask = jnp.ones((sq, chunk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vj.dtype), vj)
+        acc_new = acc * scale[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, n_kv, g, sq), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, n_kv, g, sq, dh), v.dtype)
+
+    if loop.unroll:
+        carry = (m0, l0, acc0)
+        for j in range(n_chunks):
+            carry, _ = body(carry, (kc[j], vc[j], jnp.int32(j)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, acc0),
+            (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)))
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    out = jnp.moveaxis(out, 3, 1)          # (B, Sq, n_kv, G, dh)
+    return out.reshape(b, sq, h, dh)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     window: Optional[int] = None,
+                     chunk: int = 1024,
+                     loop: LoopConfig = LoopConfig()):
+    """One-token attention against a (possibly padded) KV cache.
+
+    q: (B, 1, H, dh); caches: (B, S_max, n_kv, dh); cache_len: () int32 —
+    the new token's position (slots > cache_len are masked out).
+
+    With a single query row the score tensor is only (B, H, S) — no
+    chunking needed; one einsum over the cache keeps GSPMD free to shard
+    S (sequence-parallel decode: each device scores its cache shard, the
+    softmax reductions become cheap psums — split-K / FlashDecoding on
+    the partitioner instead of in a kernel).  A sliding-window layer
+    first takes a static-size dynamic slice so it never reads (or pays
+    HBM traffic for) more than ``window`` cache entries.
+    """
+    qpos = cache_len
+    if window is not None and k_cache.shape[1] > window:
+        # dense layout: slot i holds position i; the live window is
+        # [qpos+1-window, qpos]
+        s_max = k_cache.shape[1]
+        start = jnp.clip(qpos + 1 - window, 0, s_max - window)
+        k_cache = jax.lax.dynamic_slice_in_dim(k_cache, start, window, axis=1)
+        v_cache = jax.lax.dynamic_slice_in_dim(v_cache, start, window, axis=1)
+        kpos0 = start                   # slot -> position offset
+    else:
+        kpos0 = 0
+
+    b, sq, h, dh = q.shape
+    sk = k_cache.shape[1]
+    n_kv = k_cache.shape[2]
+    qh = _gqa_split(q, n_kv).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qh,
+                   k_cache.astype(jnp.float32)) / (dh ** 0.5)
+    kpos = kpos0 + jnp.arange(sk)
+    valid = kpos <= qpos
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, sq, h, dh)

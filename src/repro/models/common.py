@@ -1,0 +1,173 @@
+"""Shared model substrate: norms, init, RoPE, sharding helpers, LoopConfig.
+
+Everything here is pure JAX (no flax): parameters are plain pytrees of
+jnp arrays, initialized by explicit functions, partitioned by parallel
+trees of PartitionSpec.  This keeps .lower()/.compile() dry-runs fully
+shape-polymorphic (abstract params via ShapeDtypeStruct trees).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    """Controls structural loops for the dry-run cost extrapolation.
+
+    The roofline tool compiles each (arch x shape x mesh) cell a few times
+    with tiny unrolled loop counts and extrapolates exact HLO totals
+    (DESIGN.md §Roofline methodology):
+
+      * ``layer_groups``: override the number of scanned layer groups
+        (None = the config's real depth);
+      * ``attn_chunks``: override the number of KV chunks per attention
+        (None = real seq_len / chunk);
+      * ``unroll``: emit Python-level loops instead of lax.scan so every
+        op instance appears in the HLO exactly once per iteration.
+    """
+    layer_groups: Optional[int] = None
+    attn_chunks: Optional[int] = None
+    unroll: bool = False
+    remainder: bool = True   # include the non-scanned remainder layers
+
+    @staticmethod
+    def production() -> "LoopConfig":
+        return LoopConfig()
+
+
+# ---------------------------------------------------------------------------
+# Initializers (explicit, fan-in scaled)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype=DEFAULT_DTYPE, scale: float = 1.0):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=DEFAULT_DTYPE):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=DEFAULT_DTYPE):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype=DEFAULT_DTYPE):
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def gelu(x):
+    return jax.nn.gelu(x.astype(jnp.float32), approximate=True).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10_000.0):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                     # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                      # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sharding helpers
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: list = []   # stack of concrete meshes (launcher-managed)
+
+
+class active_mesh:
+    """Context manager announcing the concrete mesh to model-internal
+    sharding constraints (pjit in_shardings pin the boundaries; these
+    hints steer intermediates).  Axis names absent from the active mesh
+    are silently dropped, so the same model code runs on the single-pod
+    ("data","model"), multi-pod ("pod","data","model") and 1-device
+    meshes."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        _ACTIVE_MESH.append(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        _ACTIVE_MESH.pop()
+        return False
+
+
+def _filter_spec(spec: P, names) -> P:
+    def filt(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, str):
+            return entry if entry in names else None
+        t = tuple(a for a in entry if a in names)
+        return t if t else None
+    return P(*[filt(e) for e in spec])
+
+
+def shard(x, spec: P):
+    """Soft sharding constraint; a no-op when no mesh is active."""
+    if not _ACTIVE_MESH:
+        return x
+    mesh = _ACTIVE_MESH[-1]
+    try:
+        fspec = _filter_spec(spec, set(mesh.axis_names))
+        ns = jax.sharding.NamedSharding(mesh, fspec)
+        return jax.lax.with_sharding_constraint(x, ns)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def abstract_like(tree, dtype=None):
+    """Pytree of ShapeDtypeStruct mirroring a params pytree."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, dtype or x.dtype), tree)
+
+
+def count_params(tree) -> int:
+    return sum(int(np_prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out

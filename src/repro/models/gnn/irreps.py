@@ -1,0 +1,180 @@
+"""Minimal E(3)-irreps machinery for NequIP / MACE (l_max <= 2).
+
+JAX has no e3nn dependency here; we build the three ingredients ourselves:
+
+  * real spherical harmonics Y_l(r^), l in {0, 1, 2}, as Cartesian
+    polynomials (component-normalized);
+  * coupling (Gaunt) tensors C^{l1 l2 -> l3}[m1, m2, m3] obtained
+    *numerically*: the product Y_{l1 m1} Y_{l2 m2} restricted to the
+    sphere lies in span{Y_{l3 m3}}, and the expansion coefficients are
+    recovered by least squares over random unit vectors.  Couplings built
+    this way are equivariant *by construction* in exactly the basis the
+    code evaluates — no convention mismatches possible;
+  * Wigner matrices D_l(R) for tests, recovered the same way
+    (Y_l(R r) = D_l(R) Y_l(r), solved over samples).
+
+Feature layout: a dict {l: (N, C, 2l+1)} of per-node (or per-edge)
+tensors; channel counts may differ per l.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+L_MAX = 2
+DIMS = {0: 1, 1: 3, 2: 5}
+
+
+# ---------------------------------------------------------------------------
+# Real spherical harmonics (numpy reference + jnp evaluation)
+# ---------------------------------------------------------------------------
+
+def _sh_np(l: int, r: np.ndarray) -> np.ndarray:
+    """Component-normalized real SH of unit vectors r (N, 3) -> (N, 2l+1)."""
+    x, y, z = r[..., 0], r[..., 1], r[..., 2]
+    if l == 0:
+        return np.ones((*r.shape[:-1], 1))
+    if l == 1:
+        return np.stack([y, z, x], axis=-1) * np.sqrt(3.0)
+    if l == 2:
+        c = np.sqrt(15.0)
+        return np.stack([
+            c * x * y,
+            c * y * z,
+            np.sqrt(5.0) / 2.0 * (3.0 * z * z - 1.0),
+            c * x * z,
+            c / 2.0 * (x * x - y * y),
+        ], axis=-1)
+    raise ValueError(l)
+
+
+def sh(l: int, r):
+    """jnp twin of :func:`_sh_np`; r must be unit vectors (..., 3)."""
+    x, y, z = r[..., 0], r[..., 1], r[..., 2]
+    if l == 0:
+        return jnp.ones((*r.shape[:-1], 1), r.dtype)
+    if l == 1:
+        return jnp.stack([y, z, x], axis=-1) * np.sqrt(3.0)
+    if l == 2:
+        c = np.sqrt(15.0)
+        return jnp.stack([
+            c * x * y,
+            c * y * z,
+            np.sqrt(5.0) / 2.0 * (3.0 * z * z - 1.0),
+            c * x * z,
+            c / 2.0 * (x * x - y * y),
+        ], axis=-1)
+    raise ValueError(l)
+
+
+def sh_all(r, l_max: int = L_MAX):
+    return {l: sh(l, r) for l in range(l_max + 1)}
+
+
+# ---------------------------------------------------------------------------
+# Numerical coupling tensors
+# ---------------------------------------------------------------------------
+
+def _random_units(n: int, seed: int = 0) -> np.ndarray:
+    g = np.random.default_rng(seed)
+    v = g.standard_normal((n, 3))
+    return v / np.linalg.norm(v, axis=-1, keepdims=True)
+
+
+@lru_cache(maxsize=None)
+def _sphere_quadrature(n_theta: int = 16, n_phi: int = 32):
+    """Exact quadrature on S^2 for polynomials up to degree ~2*n_theta.
+
+    Gauss-Legendre in cos(theta) x uniform phi; weights average to 1
+    (i.e. they compute the *mean* over the sphere)."""
+    u, wu = np.polynomial.legendre.leggauss(n_theta)   # u = cos(theta)
+    phi = 2.0 * np.pi * np.arange(n_phi) / n_phi
+    uu, pp = np.meshgrid(u, phi, indexing="ij")
+    st = np.sqrt(1.0 - uu ** 2)
+    pts = np.stack([st * np.cos(pp), st * np.sin(pp), uu], axis=-1)
+    w = np.broadcast_to(wu[:, None] / 2.0 / n_phi, uu.shape)
+    return pts.reshape(-1, 3), w.reshape(-1)
+
+
+@lru_cache(maxsize=None)
+def coupling(l1: int, l2: int, l3: int) -> np.ndarray | None:
+    """C[m1, m2, m3] with Y_{l1 m1} Y_{l2 m2} = sum C[...] Y_{l3 m3} + ...
+
+    Computed by *exact* quadrature (Gaunt projection): with the
+    component normalization <Y_{lm} Y_{lm'}> = delta_{mm'}, the expansion
+    coefficient is simply the triple-product mean.  Returns None when the
+    path is forbidden (triangle / parity selection rules).
+    """
+    if not (abs(l1 - l2) <= l3 <= l1 + l2) or (l1 + l2 + l3) % 2 != 0:
+        return None
+    pts, w = _sphere_quadrature()
+    y1 = _sh_np(l1, pts)                      # (N, d1)
+    y2 = _sh_np(l2, pts)                      # (N, d2)
+    y3 = _sh_np(l3, pts)                      # (N, d3)
+    c = np.einsum("n,nx,ny,nz->xyz", w, y1, y2, y3)
+    c[np.abs(c) < 1e-10] = 0.0
+    if np.abs(c).max() < 1e-8:
+        return None
+    return c
+
+
+def paths(l_max: int = L_MAX):
+    """All allowed (l1, l2, l3) couplings with every l <= l_max."""
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(l_max + 1):
+                if coupling(l1, l2, l3) is not None:
+                    out.append((l1, l2, l3))
+    return out
+
+
+def tensor_product(feats_a: dict, feats_b: dict, weights: dict,
+                   l_max: int = L_MAX) -> dict:
+    """Channel-wise ("uvu") weighted tensor product of two irrep dicts.
+
+    feats_a[l1]: (N, C, 2l1+1); feats_b[l2]: (N, 2l2+1) or (N, C, 2l2+1);
+    weights[(l1,l2,l3)]: (N, C) or (C,) path weights.  Output dict has the
+    same channel count C for every l3.
+    """
+    out: dict = {}
+    for (l1, l2, l3) in paths(l_max):
+        if l1 not in feats_a or l2 not in feats_b:
+            continue
+        c = jnp.asarray(coupling(l1, l2, l3), feats_a[l1].dtype)
+        a = feats_a[l1]                                 # (N, C, d1)
+        b = feats_b[l2]
+        if b.ndim == 2:                                  # (N, d2) shared
+            term = jnp.einsum("ncx,ny,xyz->ncz", a, b, c)
+        else:
+            term = jnp.einsum("ncx,ncy,xyz->ncz", a, b, c)
+        w = weights.get((l1, l2, l3))
+        if w is not None:
+            term = term * (w[..., None] if w.ndim == 2 else
+                           w[None, :, None])
+        out[l3] = out.get(l3, 0.0) + term
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Wigner matrices (tests only)
+# ---------------------------------------------------------------------------
+
+def wigner_d(l: int, rot: np.ndarray) -> np.ndarray:
+    """D_l(R) with Y_l(R r) = D_l(R) @ Y_l(r), solved numerically."""
+    pts = _random_units(2048, seed=99)
+    y = _sh_np(l, pts)
+    y_rot = _sh_np(l, pts @ rot.T)
+    d, *_ = np.linalg.lstsq(y, y_rot, rcond=None)
+    return d.T
+
+
+def random_rotation(seed: int = 0) -> np.ndarray:
+    g = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(g.standard_normal((3, 3)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] = -q[:, 0]
+    return q

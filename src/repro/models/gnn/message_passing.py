@@ -1,0 +1,119 @@
+"""Shared GNN substrate: fixed-shape graph batches + scatter/gather ops.
+
+JAX message passing = gather(edge src rows) -> edge MLP -> segment_sum to
+dst.  ``jax.ops.segment_sum`` here is the XLA twin of the Pallas
+``repro.kernels.segsum`` kernel (same contract; the kernel tests assert
+equality).  All shapes are static: edge lists are padded and ``edge_mask``
+zeroes padded messages, so one compiled step serves any graph of bounded
+size — exactly what the multi-pod dry-run lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GraphBatch", "gather_src", "scatter_dst", "scatter_mean",
+           "node_classification_loss", "graph_regression_loss"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    """A (padded) graph or a disjoint union of graphs.
+
+    x         : (N, F) float — input node features (may be zeros)
+    z         : (N,) int32   — node type ids (atoms / categorical)
+    pos       : (N, 3) float — coordinates (equivariant models)
+    src, dst  : (E,) int32   — directed edges; padded edges carry mask 0
+    edge_mask : (E,) float32
+    node_mask : (N,) float32
+    labels    : (N,) int32   — node labels (classification cells)
+    graph_id  : (N,) int32   — graph membership (batched molecules)
+    y         : (G,) float32 — per-graph regression targets
+    n_graphs  : static int
+    """
+    x: jax.Array
+    z: jax.Array
+    pos: jax.Array
+    src: jax.Array
+    dst: jax.Array
+    edge_mask: jax.Array
+    node_mask: jax.Array
+    labels: jax.Array
+    graph_id: jax.Array
+    y: jax.Array
+    n_graphs: int
+
+    def tree_flatten(self):
+        leaves = (self.x, self.z, self.pos, self.src, self.dst,
+                  self.edge_mask, self.node_mask, self.labels,
+                  self.graph_id, self.y)
+        return leaves, (self.n_graphs,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, aux[0])
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.src.shape[0])
+
+
+def gather_src(h, src):
+    return h[src]
+
+
+def scatter_dst(msgs, dst, n_nodes: int):
+    """Edge->node aggregation via segment_sum.  Note: under GSPMD this
+    lowers to a full all-reduce of the (N, D) contribution tensor on
+    every device — sharding hints on the output do NOT turn it into a
+    reduce-scatter on this XLA version (probed; see EXPERIMENTS.md
+    §Perf).  The shard_map path below owns its collectives instead."""
+    return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+
+
+def scatter_mean(msgs, dst, n_nodes: int, edge_mask):
+    s = scatter_dst(msgs * edge_mask[:, None], dst, n_nodes)
+    cnt = scatter_dst(edge_mask[:, None], dst, n_nodes)
+    return s / jnp.maximum(cnt, 1.0)
+
+
+def node_classification_loss(logits, batch: GraphBatch):
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch.labels[:, None], axis=-1)[:, 0]
+    nll = (logz - gold) * batch.node_mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(batch.node_mask), 1.0)
+
+
+def graph_regression_loss(node_energy, batch: GraphBatch):
+    e = jax.ops.segment_sum(node_energy * batch.node_mask,
+                            batch.graph_id, num_segments=batch.n_graphs)
+    return jnp.mean((e - batch.y.astype(jnp.float32)) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Explicit-collective (shard_map) message passing
+# ---------------------------------------------------------------------------
+
+def sharded_layer_collectives(h_loc, all_axes):
+    """all_gather node states for edge-side reads (each device holds a
+    1/P row shard and its own edge shard)."""
+    return jax.lax.all_gather(h_loc, all_axes, axis=0, tiled=True)
+
+
+def sharded_aggregate(msgs, dst_local, n_nodes, all_axes):
+    """segment-sum local edge messages over the GLOBAL node space, then
+    reduce-scatter so each device keeps exactly its node shard, summed
+    across all edge shards.  Replaces GSPMD's all-reduce with half the
+    ring traffic and no replicated (N, D) temporary."""
+    contrib = jax.ops.segment_sum(msgs, dst_local, num_segments=n_nodes)
+    return jax.lax.psum_scatter(contrib, all_axes, scatter_dimension=0,
+                                tiled=True)

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN: grouped einsum dispatch (GShard-style).
+
+Used by granite-moe (40 experts, top-8) and moonshot (64 experts, top-6).
+
+Dispatch design (TPU/GSPMD-native):
+
+  * tokens are reshaped (T, d) -> (G, S, d) with S = group_size; the G
+    axis carries the ("pod","data") sharding, so routing, capacity
+    assignment and the dispatch/combine einsums are *group-local* — GSPMD
+    never moves tokens between devices (the experts are weight-sharded
+    over "model" instead: expert tensor parallelism);
+  * within a group, each token's rank inside its expert is a cumsum over
+    the one-hot routing mask; tokens beyond the per-group capacity
+    C = ceil(S * k * capacity_factor / E) are dropped (classic GShard
+    semantics, gate mass renormalized);
+  * dispatch/combine are (G, S, E*C)-shaped einsums: E*C ~= k * cf * S,
+    so their cost is ~2 * k * cf * S^2 * d per group — MXU work of the
+    same order as the expert GEMMs themselves for small-expert configs
+    (granite), and a small fraction for wide experts (moonshot);
+  * the earlier sort/scatter dispatch (cheaper in FLOPs but opaque to
+    the partitioner: data-dependent scatters forced GSPMD into global
+    gathers) is kept in git history; EXPERIMENTS.md §Perf records the
+    before/after.
+
+An expert-parallel variant (experts sharded over devices + all_to_all)
+is evaluated in the perf hillclimb.
+
+Returns the Switch-style load-balancing auxiliary loss.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import DEFAULT_DTYPE, dense_init, shard, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int            # per-expert hidden width
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    group_size: int = 1024
+
+
+def init_moe_params(key, cfg: MoEConfig, dtype=DEFAULT_DTYPE):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": dense_init(k1, (d, e), jnp.float32),
+        "w_gate": dense_init(k2, (e, d, f), dtype),
+        "w_up": dense_init(k3, (e, d, f), dtype),
+        "w_down": dense_init(k4, (e, f, d), dtype),
+    }
+
+
+def moe_param_specs(cfg: MoEConfig, model_axis: str = "model"):
+    return {
+        "router": P(None, None),
+        "w_gate": P(None, None, model_axis),
+        "w_up": P(None, None, model_axis),
+        "w_down": P(None, model_axis, None),
+    }
+
+
+def capacity(group_size: int, cfg: MoEConfig) -> int:
+    c = int(group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, ((c + 7) // 8) * 8)   # align for TPU tiling
+
+
+def moe_ffn(params, x, cfg: MoEConfig):
+    """x: (T, d) -> (out (T, d), aux_loss ()).  T must divide into
+    ``group_size`` rows (or be smaller than one group)."""
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    s = min(cfg.group_size, t)
+    assert t % s == 0, (t, s)
+    g = t // s
+    cap = capacity(s, cfg)
+
+    xg = x.reshape(g, s, d)
+    xg = shard(xg, P(("pod", "data"), None, None))
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # (G, S, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)           # (G, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * mean_e fraction(e) * mean_prob(e)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[..., 0], e,
+                                 dtype=jnp.float32), axis=(0, 1))
+    aux = cfg.aux_loss_weight * e * jnp.sum(me * ce)
+
+    # ---- capacity assignment: rank within expert, over (s, k) priority --
+    dispatch = jnp.zeros((g, s, e, cap), jnp.bool_)
+    combine = jnp.zeros((g, s, e, cap), jnp.float32)
+    # running per-expert fill count, updated per routing slot (k is small)
+    fill = jnp.zeros((g, e), jnp.int32)
+    for j in range(k):
+        oh = jax.nn.one_hot(expert_ids[:, :, j], e,
+                            dtype=jnp.int32)                  # (G, S, E)
+        pos = fill[:, None, :] + jnp.cumsum(oh, axis=1) - oh  # pre-count
+        keep = (oh > 0) & (pos < cap)
+        # one-hot over the capacity slot; dropped / non-routed entries
+        # index `cap` which one_hot maps to all-zeros
+        slot = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                              dtype=jnp.float32)              # (G,S,E,C)
+        dispatch = dispatch | (slot > 0)
+        combine = combine + slot * gate_vals[:, :, j][..., None, None]
+        fill = fill + jnp.sum(oh * keep.astype(jnp.int32), axis=1)
+
+    # ---- expert GEMMs ----------------------------------------------------
+    din = jnp.einsum("gsd,gsec->gecd", xg,
+                     dispatch.astype(xg.dtype))               # (G,E,C,d)
+    gate_h = jnp.einsum("gecd,edf->gecf", din, params["w_gate"])
+    up_h = jnp.einsum("gecd,edf->gecf", din, params["w_up"])
+    hidden = swiglu(gate_h, up_h)
+    out_e = jnp.einsum("gecf,efd->gecd", hidden, params["w_down"])
+
+    # ---- combine ---------------------------------------------------------
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(out_e.dtype), out_e)
+    return out.reshape(t, d), aux

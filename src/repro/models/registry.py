@@ -1,0 +1,120 @@
+"""Architecture registry: binds configs, cells (input shapes), shardings
+and step functions into the uniform interface the launcher, dry-run and
+benchmarks consume.
+
+Every assigned architecture registers an :class:`ArchDef`; each of its
+:class:`Cell`s describes one (shape x step-kind) entry of the dry-run
+matrix.  ``build()`` returns everything needed to lower one cell:
+
+    built = arch.build(cell_name, mesh_axes=("pod","data","model"))
+    jax.jit(built.fn, in_shardings=built.in_shardings,
+            donate_argnums=built.donate).lower(*built.args).compile()
+
+``loop`` (models.common.LoopConfig) switches the same build into the
+tiny unrolled variants used by the roofline cost extrapolation; the
+``basis`` field tells the fitter which trip-count model applies
+(DESIGN.md §Roofline methodology):
+
+    "exact" — loops already unrolled; one compile is exact
+    "k"     — linear in layer groups: F = A + k B          (2 compiles)
+    "kc"    — layers x attention chunks: F = A + k(B + cC) (3 compiles)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.common import LoopConfig
+from ..optim.adamw import AdamWConfig, init_state, state_specs
+from ..train.step import make_train_step
+
+REGISTRY: Dict[str, "ArchDef"] = {}
+
+
+def data_axes(mesh_axes: Sequence[str]) -> Tuple[str, ...]:
+    return tuple(a for a in mesh_axes if a != "model")
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    name: str
+    kind: str                      # train | prefill | decode | serve | retrieval
+    basis: str                     # exact | k | kc
+    skip: Optional[str] = None     # reason to skip (recorded in DESIGN.md)
+    note: str = ""
+
+
+@dataclasses.dataclass
+class Built:
+    fn: Callable
+    args: tuple                    # abstract (ShapeDtypeStruct) trees
+    in_shardings: tuple
+    donate: tuple                  # argnums to donate
+    n_groups: int                  # real k (for extrapolation)
+    n_chunks: int                  # real c
+
+
+@dataclasses.dataclass
+class ArchDef:
+    arch_id: str
+    family: str
+    source: str
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    cells: Dict[str, Cell]
+    # build(cfg, cell_name, *, loop, mesh_axes, opt) -> Built
+    builder: Callable[..., Built]
+    param_count: Optional[Callable[[Any], float]] = None
+    model_flops: Optional[Callable[[Any, str], float]] = None
+
+    def build(self, cell_name: str, *, config=None,
+              loop: LoopConfig = LoopConfig(),
+              mesh_axes: Sequence[str] = ("data", "model"),
+              opt: Optional[AdamWConfig] = None) -> Built:
+        cfg = config if config is not None else self.make_config()
+        return self.builder(cfg, cell_name, loop=loop,
+                            mesh_axes=tuple(mesh_axes),
+                            opt=opt or AdamWConfig())
+
+
+def register(arch: ArchDef) -> ArchDef:
+    REGISTRY[arch.arch_id] = arch
+    return arch
+
+
+def get(arch_id: str) -> ArchDef:
+    if arch_id not in REGISTRY:
+        # configs register lazily on import
+        from .. import configs as _configs  # noqa: F401
+        _configs.load_all()
+    return REGISTRY[arch_id]
+
+
+def all_ids():
+    from .. import configs as _configs
+    _configs.load_all()
+    return sorted(REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by the config modules
+# ---------------------------------------------------------------------------
+
+def abstract(fn, *args, **kwargs):
+    return jax.eval_shape(partial(fn, **kwargs), *args)
+
+
+def abstract_params(init_fn, cfg, loop=None):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if loop is not None:
+        return jax.eval_shape(lambda k: init_fn(k, cfg, loop), key)
+    return jax.eval_shape(lambda k: init_fn(k, cfg), key)
+
+
+def tok_struct(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)

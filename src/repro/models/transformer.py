@@ -1,0 +1,592 @@
+"""Decoder-only LM covering the five assigned transformer architectures.
+
+One config describes them all:
+
+  granite-moe-3b-a800m  MoE (40e top-8), GQA 24H/8KV, untied head
+  moonshot-v1-16b-a3b   MoE (64e top-6), GQA 16H/16KV (MHA), 163k vocab
+  gemma3-27b            dense, 5 local : 1 global layer pattern, 262k vocab
+  llama3.2-3b           dense, GQA 24H/8KV
+  qwen2-7b              dense, GQA 28H/4KV, QKV bias
+
+Structure notes:
+
+  * layers are organized in *groups* = one period of the local/global
+    pattern (size 1 for uniform models, 6 for gemma3's 5:1).  The group
+    stack is a lax.scan over stacked params (compile-time O(1) in depth);
+    remainder layers (62 = 10*6 + 2) are unrolled after the scan.
+  * ``LoopConfig`` (models.common) lets the dry-run cost extrapolation
+    compile 1-group / 2-group unrolled variants with truncated attention
+    chunk counts — see DESIGN.md §Roofline methodology.
+  * training uses masked-chunk (flash-style) attention + optional remat
+    on the group body; decode keeps a dense right-aligned KV cache.
+
+Parameters are plain dict pytrees; ``param_specs`` returns the matching
+PartitionSpec tree (megatron-style TP over the "model" axis, replicated
+over "data"/"pod"; the train step shards the batch over ("pod","data")).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import PartitionSpec as P
+
+from .attention import (dense_attention, decode_attention,
+                        masked_chunk_attention, trapezoid_attention)
+from .common import (DEFAULT_DTYPE, LoopConfig, apply_rope, dense_init,
+                     embed_init, ones_init, rms_norm, shard, swiglu)
+from .moe import MoEConfig, init_moe_params, moe_ffn, moe_param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None        # default d_model // n_heads
+    # MoE (None => dense FFN)
+    moe: Optional[MoEConfig] = None
+    # attention pattern: period of local/global kinds, e.g. 5*("local",)+("global",)
+    layer_pattern: tuple = ("global",)
+    window: int = 1024                    # sliding window for "local" layers
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    tie_embeddings: bool = False
+    dtype: Any = DEFAULT_DTYPE
+    attn_impl: str = "chunk"              # "chunk" | "dense"
+    attn_chunk: int = 1024
+    remat: bool = True
+    # "tp"   — Megatron tensor parallelism (activations all-reduced/layer)
+    # "fsdp" — weights sharded over "model", gathered at use, gradients
+    #          reduce-scattered (ZeRO-3); wins when weight bytes <<
+    #          activation bytes per device (EXPERIMENTS.md §Perf)
+    param_sharding: str = "tp"
+    train_microbatch: int = 4             # gradient-accumulation slices
+    # block-causal attention schedule (skips dead chunks; see
+    # attention.trapezoid_attention and EXPERIMENTS.md §Perf)
+    attn_trapezoid: bool = False
+    # remat policy: "full" (save only group inputs, recompute everything)
+    # or "save_proj" (save the projection/matmul outputs, recompute the
+    # elementwise attention chains — the memory/recompute sweet spot)
+    remat_policy: str = "full"
+    # sequence-chunked loss: the (B,S,V) f32 logits tensor never
+    # materializes; each S-chunk's logits are recomputed in the backward
+    # (0 = off)
+    loss_chunk: int = 0
+    # mesh axes carrying the batch dimension (filtered to the axes that
+    # exist on the active mesh); FSDP sets all three = pure data parallel
+    batch_axes: tuple = ("pod", "data")
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_pad(self) -> int:
+        """Physical vocab rows: padded to 256 so the table shards evenly
+        over any mesh axis (granite's published 49155 is prime-ish)."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.layer_pattern)
+
+    @property
+    def n_remainder(self) -> int:
+        return self.n_layers - self.n_groups * len(self.layer_pattern)
+
+    def flops_per_token_fwd(self) -> float:
+        """Analytic MODEL_FLOPS per token (fwd): 2*N_active + attention."""
+        d, hd = self.d_model, self.hd
+        n_attn = (self.n_heads + 2 * self.n_kv_heads) * hd * d \
+            + self.n_heads * hd * d
+        if self.moe is not None:
+            n_ffn = 3 * self.moe.top_k * d * self.moe.d_ff
+        else:
+            n_ffn = 3 * d * self.d_ff
+        n_embed = d * self.vocab  # lm head
+        return 2.0 * (self.n_layers * (n_attn + n_ffn) + n_embed)
+
+    def active_params(self) -> float:
+        d, hd = self.d_model, self.hd
+        n_attn = (self.n_heads + 2 * self.n_kv_heads) * hd * d \
+            + self.n_heads * hd * d
+        if self.moe is not None:
+            n_ffn = 3 * self.moe.top_k * d * self.moe.d_ff
+        else:
+            n_ffn = 3 * d * self.d_ff
+        return self.n_layers * (n_attn + n_ffn) + 2 * d * self.vocab
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: TransformerConfig):
+    d, hd = cfg.d_model, cfg.hd
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln_attn": ones_init(ks[0], (d,), cfg.dtype),
+        "ln_ffn": ones_init(ks[1], (d,), cfg.dtype),
+        "wq": dense_init(ks[2], (d, hq * hd), cfg.dtype),
+        "wk": dense_init(ks[3], (d, hkv * hd), cfg.dtype),
+        "wv": dense_init(ks[4], (d, hkv * hd), cfg.dtype),
+        "wo": dense_init(ks[5], (hq * hd, d), cfg.dtype,
+                         scale=1.0 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), cfg.dtype)
+    if cfg.moe is not None:
+        p["moe"] = init_moe_params(ks[6], cfg.moe, cfg.dtype)
+    else:
+        k1, k2, k3 = jax.random.split(ks[6], 3)
+        p["w_gate"] = dense_init(k1, (d, cfg.d_ff), cfg.dtype)
+        p["w_up"] = dense_init(k2, (d, cfg.d_ff), cfg.dtype)
+        p["w_down"] = dense_init(k3, (cfg.d_ff, d), cfg.dtype,
+                                 scale=1.0 / (2 * cfg.n_layers) ** 0.5)
+    return p
+
+
+def _layer_specs(cfg: TransformerConfig):
+    fsdp = cfg.param_sharding == "fsdp"
+    col = P("model", None) if fsdp else P(None, "model")
+    row = P("model", None)
+    sp = {
+        "ln_attn": P(None), "ln_ffn": P(None),
+        "wq": col, "wk": col, "wv": col, "wo": row,
+    }
+    if cfg.qkv_bias:
+        b = P(None) if fsdp else P("model")
+        sp["bq"] = b
+        sp["bk"] = b
+        sp["bv"] = b
+    if cfg.moe is not None:
+        # experts stay tensor-parallel in both modes (weight bytes per
+        # layer exceed the per-layer activation volume for MoE blocks)
+        sp["moe"] = moe_param_specs(cfg.moe)
+    else:
+        sp["w_gate"] = col
+        sp["w_up"] = col
+        sp["w_down"] = row
+    return sp
+
+
+def init_params(key, cfg: TransformerConfig, loop: LoopConfig = LoopConfig()):
+    n_groups, n_rem = _effective_depth(cfg, loop)
+    period = len(cfg.layer_pattern)
+    keys = jax.random.split(key, 3 + period + cfg.n_remainder)
+    params = {
+        "embed": embed_init(keys[0], (cfg.vocab_pad, cfg.d_model), cfg.dtype),
+        "ln_f": ones_init(keys[1], (cfg.d_model,), cfg.dtype),
+        # one stacked param tree per position in the pattern period:
+        "groups": [
+            jax.vmap(lambda k: _init_layer(k, cfg))(
+                jax.random.split(keys[3 + i], max(n_groups, 1)))
+            for i in range(period)
+        ],
+        "remainder": [
+            _init_layer(keys[3 + period + i], cfg) for i in range(n_rem)
+        ],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[2], (cfg.d_model, cfg.vocab_pad),
+                                       cfg.dtype)
+    return params
+
+
+def param_specs(cfg: TransformerConfig, loop: LoopConfig = LoopConfig()):
+    _n_groups, n_rem = _effective_depth(cfg, loop)
+    lsp = _layer_specs(cfg)
+    stacked = jax.tree.map(lambda s: P(None, *s), lsp,
+                           is_leaf=lambda x: isinstance(x, P))
+    specs = {
+        "embed": P("model", None),   # vocab-sharded embedding
+        "ln_f": P(None),
+        "groups": [stacked for _ in range(len(cfg.layer_pattern))],
+        "remainder": [lsp for _ in range(n_rem)],
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, "model")  # vocab-sharded logits
+    return specs
+
+
+def _effective_depth(cfg: TransformerConfig, loop: LoopConfig):
+    n_groups = (cfg.n_groups if loop.layer_groups is None
+                else loop.layer_groups)
+    n_rem = cfg.n_remainder if loop.remainder else 0
+    return n_groups, n_rem
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attention_block(p, x, kind: str, cfg: TransformerConfig, positions,
+                     loop: LoopConfig, *, return_kv: bool = False):
+    b, s, d = x.shape
+    gather = _weight_gather(cfg)
+    h = rms_norm(x, p["ln_attn"])
+    q = h @ gather(p["wq"])
+    k = h @ gather(p["wk"])
+    v = h @ gather(p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, cfg.hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = checkpoint_name(q, "q")
+    k = checkpoint_name(k, "k")
+    v = checkpoint_name(v, "v")
+    window = cfg.window if kind == "local" else None
+    if cfg.attn_impl == "dense" or s <= cfg.attn_chunk:
+        o = dense_attention(q, k, v, causal=True, window=window)
+    elif cfg.attn_trapezoid:
+        o = trapezoid_attention(q, k, v, window=window,
+                                chunk=cfg.attn_chunk, loop=loop)
+    else:
+        o = masked_chunk_attention(q, k, v, causal=True, window=window,
+                                   chunk=cfg.attn_chunk, loop=loop)
+    o = checkpoint_name(o, "attn_out")
+    o = o.reshape(b, s, cfg.n_heads * cfg.hd)
+    out = x + o @ gather(p["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def _weight_gather(cfg: TransformerConfig):
+    """FSDP: constrain weights to replicated at the point of use — GSPMD
+    emits the all-gather here (and a reduce-scatter for the weight grad
+    on the way back).  TP mode: identity."""
+    if cfg.param_sharding == "fsdp":
+        return lambda w: shard(w, P(*([None] * w.ndim)))
+    return lambda w: w
+
+
+def _ffn_block(p, x, cfg: TransformerConfig):
+    b, s, d = x.shape
+    gather = _weight_gather(cfg)
+    h = rms_norm(x, p["ln_ffn"])
+    if cfg.moe is not None:
+        out, aux = moe_ffn(p["moe"], h.reshape(b * s, d), cfg.moe)
+        return x + out.reshape(b, s, d), aux
+    hidden = swiglu(h @ gather(p["w_gate"]), h @ gather(p["w_up"]))
+    hidden = checkpoint_name(hidden, "ffn_hidden")
+    return x + hidden @ gather(p["w_down"]), jnp.float32(0.0)
+
+
+def _layer(p, x, kind: str, cfg, positions, loop):
+    x = _attention_block(p, x, kind, cfg, positions, loop)
+    x, aux = _ffn_block(p, x, cfg)
+    return x, aux
+
+
+def forward(params, tokens, cfg: TransformerConfig,
+            loop: LoopConfig = LoopConfig()):
+    """tokens (B, S) -> logits (B, S, vocab); returns (logits, aux_loss)."""
+    x, aux_total = _backbone(params, tokens, cfg, loop)
+    head = params.get("lm_head")
+    if head is None:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ head
+    head_shard = None if cfg.param_sharding == "fsdp" else "model"
+    logits = shard(logits, P(cfg.batch_axes, None, head_shard))
+    return logits, aux_total
+
+
+def _backbone(params, tokens, cfg: TransformerConfig,
+              loop: LoopConfig = LoopConfig()):
+    """tokens (B, S) -> final hidden states (B, S, d) + aux loss."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]  # vocab-sharded gather
+    x = shard(x, P(cfg.batch_axes, None, None))
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    n_groups, n_rem = _effective_depth(cfg, loop)
+    period = len(cfg.layer_pattern)
+    aux_total = jnp.float32(0.0)
+
+    def group_body(x, gparams):
+        aux = jnp.float32(0.0)
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, a = _layer(gparams[i], x, kind, cfg, positions, loop)
+            aux = aux + a
+        return x, aux
+
+    if cfg.remat:
+        if cfg.remat_policy == "save_proj":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "q", "k", "v", "attn_out", "ffn_hidden")
+            group_body = jax.checkpoint(group_body, policy=policy)
+        elif cfg.remat_policy == "save_qkv":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "q", "k", "v")
+            group_body = jax.checkpoint(group_body, policy=policy)
+        else:
+            group_body = jax.checkpoint(group_body)
+
+    if loop.unroll:
+        for g in range(n_groups):
+            gp = [jax.tree.map(lambda a: a[g], params["groups"][i])
+                  for i in range(period)]
+            x, aux = group_body(x, gp)
+            aux_total = aux_total + aux
+    else:
+        def scan_body(x, gp):
+            x, aux = group_body(x, gp)
+            return x, aux
+        x, auxs = jax.lax.scan(scan_body, x, tuple(params["groups"]))
+        aux_total = aux_total + jnp.sum(auxs)
+
+    for i in range(n_rem):
+        kind = cfg.layer_pattern[i % period]
+        x, a = _layer(params["remainder"][i], x, kind, cfg, positions, loop)
+        aux_total = aux_total + a
+
+    x = rms_norm(x, params["ln_f"])
+    return x, aux_total
+
+
+def lm_loss(params, batch, cfg: TransformerConfig,
+            loop: LoopConfig = LoopConfig()):
+    """Causal LM loss; batch = {tokens (B,S), targets (B,S)}."""
+    if cfg.loss_chunk:
+        return _lm_loss_chunked(params, batch, cfg, loop)
+    logits, aux = forward(params, batch["tokens"], cfg, loop)
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_pad != cfg.vocab:
+        pad_mask = jnp.arange(cfg.vocab_pad) >= cfg.vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["targets"][..., None],
+                               axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux
+
+
+def _lm_loss_chunked(params, batch, cfg: TransformerConfig,
+                     loop: LoopConfig):
+    """Loss with sequence-chunked head: the full (B,S,V) f32 logits never
+    exist; each chunk's logits + logsumexp are recomputed in the backward
+    (jax.checkpoint on the chunk body).  Identical value to lm_loss."""
+    x, aux = _backbone(params, batch["tokens"], cfg, loop)   # (B, S, d)
+    head = params.get("lm_head")
+    w = params["embed"].T if head is None else head          # (d, Vp)
+    if cfg.param_sharding == "fsdp":
+        # batch rows are sharded over "model" too: gather the head once
+        # (one 0.8 GB all-gather) instead of resharding activations per
+        # loss chunk
+        w = shard(w, P(None, None))
+    b, s, d = x.shape
+    cs = min(cfg.loss_chunk, s)
+    assert s % cs == 0, (s, cs)
+    pad_mask = (jnp.arange(cfg.vocab_pad) >= cfg.vocab
+                if cfg.vocab_pad != cfg.vocab else None)
+
+    @jax.checkpoint
+    def chunk_nll(xc, tc):
+        logits = (xc @ w).astype(jnp.float32)
+        if pad_mask is not None:
+            logits = jnp.where(pad_mask, -1e30, logits)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def body(carry, xs):
+        xc, tc = xs
+        return carry + chunk_nll(xc, tc), ()
+
+    xcs = jnp.moveaxis(x.reshape(b, s // cs, cs, d), 1, 0)
+    tcs = jnp.moveaxis(batch["targets"].reshape(b, s // cs, cs), 1, 0)
+    if loop.unroll:
+        total = jnp.float32(0.0)
+        for i in range(s // cs):
+            total = total + chunk_nll(xcs[i], tcs[i])
+    else:
+        total, _ = jax.lax.scan(body, jnp.float32(0.0), (xcs, tcs))
+    return total / (b * s) + aux
+
+
+def prefill_step(params, tokens, cfg: TransformerConfig,
+                 loop: LoopConfig = LoopConfig()):
+    """Serving prefill: tokens (B, S) -> (last-token logits (B, vocab),
+    cache).  Only the final position's logits are computed (the full
+    (B, S, V) tensor never exists — it would dwarf the cache)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = shard(x, P(cfg.batch_axes, None, None))
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    n_groups, n_rem = _effective_depth(cfg, loop)
+    period = len(cfg.layer_pattern)
+
+    def group_body(x, gparams):
+        ks, vs = [], []
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, (k, v) = _attention_block(gparams[i], x, kind, cfg,
+                                         positions, loop, return_kv=True)
+            x, _aux = _ffn_block(gparams[i], x, cfg)
+            ks.append(k)
+            vs.append(v)
+        return x, (jnp.stack(ks), jnp.stack(vs))
+
+    if loop.unroll:
+        all_k, all_v = [], []
+        for g in range(n_groups):
+            gp = [jax.tree.map(lambda a: a[g], params["groups"][i])
+                  for i in range(period)]
+            x, (ks, vs) = group_body(x, gp)
+            all_k.append(ks)
+            all_v.append(vs)
+        kg = jnp.stack(all_k) if all_k else None
+        vg = jnp.stack(all_v) if all_v else None
+    else:
+        x, (kg, vg) = jax.lax.scan(group_body, x, tuple(params["groups"]))
+
+    shp = (n_groups * period, b, s, cfg.n_kv_heads, cfg.hd)
+    new_k = kg.reshape(shp) if kg is not None else \
+        jnp.zeros((0, b, s, cfg.n_kv_heads, cfg.hd), cfg.dtype)
+    new_v = vg.reshape(shp) if vg is not None else new_k
+
+    rem_k, rem_v = [], []
+    for i in range(n_rem):
+        kind = cfg.layer_pattern[i % period]
+        x, (k, v) = _attention_block(params["remainder"][i], x, kind, cfg,
+                                     positions, loop, return_kv=True)
+        x, _aux = _ffn_block(params["remainder"][i], x, cfg)
+        rem_k.append(k)
+        rem_v.append(v)
+    if rem_k:
+        new_k = jnp.concatenate([new_k, jnp.stack(rem_k)])
+        new_v = jnp.concatenate([new_v, jnp.stack(rem_v)])
+
+    x_last = rms_norm(x[:, -1:], params["ln_f"])
+    head = params.get("lm_head")
+    logits = (x_last @ params["embed"].T if head is None
+              else x_last @ head)[:, 0]
+    cache = {"k": new_k, "v": new_v, "len": jnp.int32(s)}
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with a dense KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None):
+    dtype = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.int32(0)}
+
+
+def cache_specs(cfg: TransformerConfig):
+    kv = P(None, ("pod", "data"), None, None, None)
+    return {"k": kv, "v": kv, "len": P()}
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig,
+                loop: LoopConfig = LoopConfig()):
+    """One decode step: tokens (B, 1) + cache -> (logits (B, vocab), cache).
+
+    The cache is dense and right-aligned at its maximum length: position
+    ``cache['len']`` is where the new token's KV is written (the serve
+    driver rolls the cache when it fills; decode_32k / long_500k lower
+    exactly this program with a full cache).
+    """
+    b = tokens.shape[0]
+    x = params["embed"][tokens]          # (B, 1, d)
+    pos = cache["len"]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    n_groups, n_rem = _effective_depth(cfg, loop)
+    period = len(cfg.layer_pattern)
+
+    gather = _weight_gather(cfg)
+
+    def layer_decode(p, x, kind, k_cache_l, v_cache_l):
+        h = rms_norm(x, p["ln_attn"])
+        q = h @ gather(p["wq"])
+        k = h @ gather(p["wk"])
+        v = h @ gather(p["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = q.reshape(b, 1, cfg.n_heads, cfg.hd)
+        k = k.reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+        v = v.reshape(b, 1, cfg.n_kv_heads, cfg.hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        k_cache_l = jax.lax.dynamic_update_index_in_dim(
+            k_cache_l, k[:, 0], pos, axis=1)
+        v_cache_l = jax.lax.dynamic_update_index_in_dim(
+            v_cache_l, v[:, 0], pos, axis=1)
+        window = cfg.window if kind == "local" else None
+        o = decode_attention(q, k_cache_l, v_cache_l, pos, window=window,
+                             chunk=cfg.attn_chunk, loop=loop)
+        o = o.reshape(b, 1, cfg.n_heads * cfg.hd)
+        x = x + o @ gather(p["wo"])
+        x, _ = _ffn_block(p, x, cfg)
+        return x, k_cache_l, v_cache_l
+
+    # The whole (L, B, S, kv, hd) cache rides the scan CARRY and is
+    # updated in place with dynamic_update_slice: with the cache argument
+    # donated, XLA aliases input and output — exactly one cache copy in
+    # HBM (the earlier stacked-ys formulation double-buffered it: 2x the
+    # 8 GB cache on gemma3 decode_32k).
+    n_scanned = n_groups * period
+
+    def group_decode(carry, xs):
+        x, ck, cv = carry
+        g, gparams = xs
+        for i, kind in enumerate(cfg.layer_pattern):
+            li = g * period + i
+            kc = jax.lax.dynamic_index_in_dim(ck, li, axis=0,
+                                              keepdims=False)
+            vc = jax.lax.dynamic_index_in_dim(cv, li, axis=0,
+                                              keepdims=False)
+            x, kc, vc = layer_decode(gparams[i], x, kind, kc, vc)
+            ck = jax.lax.dynamic_update_index_in_dim(ck, kc, li, axis=0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, vc, li, axis=0)
+        return (x, ck, cv), ()
+
+    ck, cv = cache["k"], cache["v"]
+    if loop.unroll:
+        carry = (x, ck, cv)
+        for g in range(n_groups):
+            gp = tuple(jax.tree.map(lambda a: a[g], params["groups"][i])
+                       for i in range(period))
+            carry, _ = group_decode(carry, (jnp.int32(g), gp))
+        x, ck, cv = carry
+    else:
+        (x, ck, cv), _ = jax.lax.scan(
+            group_decode, (x, ck, cv),
+            (jnp.arange(n_groups, dtype=jnp.int32),
+             tuple(params["groups"])))
+
+    for i in range(n_rem):
+        kind = cfg.layer_pattern[i % period]
+        li = n_scanned + i
+        x, kc, vc = layer_decode(params["remainder"][i], x, kind,
+                                 ck[li], cv[li])
+        ck = ck.at[li].set(kc)
+        cv = cv.at[li].set(vc)
+    new_k, new_v = ck, cv
+
+    x = rms_norm(x, params["ln_f"])
+    head = params.get("lm_head")
+    logits = (x @ params["embed"].T if head is None else x @ head)[:, 0]
+    new_cache = {"k": new_k, "v": new_v, "len": pos + 1}
+    return logits, new_cache

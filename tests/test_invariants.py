@@ -1,0 +1,142 @@
+"""Property-based tests on system invariants (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (erdos_renyi_graph, run_fixed_sampling, sample_batch)
+from repro.models.transformer import (TransformerConfig, forward,
+                                      init_params, lm_loss)
+
+
+# ---------------------------------------------------------------------------
+# sampling-engine invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(10, 60), st.floats(3.0, 10.0), st.integers(0, 10 ** 6))
+def test_sampling_state_invariants(n, deg, seed):
+    """For any graph and sample count: counts are non-negative integers,
+    each sample contributes at most (V-2) internal vertices, and
+    estimates live in [0, 1]."""
+    g = erdos_renyi_graph(n, deg, seed=seed % 997)
+    n_samples = 32
+    counts, tau = jax.jit(
+        lambda k: sample_batch(g, k, n_samples))(jax.random.PRNGKey(seed % 97))
+    c = np.asarray(counts[: g.n_nodes])
+    assert int(tau) == n_samples
+    assert (c >= 0).all()
+    assert np.allclose(c, np.round(c))          # integer counts
+    assert c.max() <= n_samples                  # a vertex is internal at
+    #                                              most once per sample
+    assert float(c.sum()) <= n_samples * (g.n_nodes - 2)
+    b = c / int(tau)
+    assert (b >= 0).all() and (b <= 1).all()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(12, 40), st.integers(0, 10 ** 6))
+def test_endpoints_never_counted(n, seed):
+    """b~(x) counts only *internal* path vertices: on a star graph the
+    leaves never lie inside a shortest path, so only the hub may have
+    positive counts."""
+    import networkx as nx
+    G = nx.star_graph(n)  # node 0 = hub
+    from repro.core import from_edge_list
+    g = from_edge_list(np.array(G.edges()), n + 1)
+    counts, tau = jax.jit(lambda k: sample_batch(g, k, 64))(
+        jax.random.PRNGKey(seed % 1013))
+    c = np.asarray(counts[: g.n_nodes])
+    assert (c[1:] == 0).all(), "leaf vertices must never be internal"
+    assert c[0] > 0  # hub carries all 2-hop paths
+
+
+# ---------------------------------------------------------------------------
+# transformer invariants
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(**kw):
+    base = dict(name="t", n_layers=3, d_model=32, n_heads=4, n_kv_heads=2,
+                d_ff=64, vocab=101, dtype=jnp.float32, attn_impl="dense",
+                remat=False)
+    base.update(kw)
+    return TransformerConfig(**base)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(4, 20))
+def test_causality(seed, s):
+    """logits at position i must not depend on tokens at positions > i."""
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    key = jax.random.PRNGKey(seed)
+    t1 = jax.random.randint(key, (1, s), 0, cfg.vocab)
+    i = s // 2
+    # perturb the future
+    t2 = t1.at[0, i + 1:].set((t1[0, i + 1:] + 7) % cfg.vocab)
+    l1, _ = jax.jit(lambda p, t: forward(p, t, cfg))(params, t1)
+    l2, _ = jax.jit(lambda p, t: forward(p, t, cfg))(params, t2)
+    np.testing.assert_allclose(np.asarray(l1[:, : i + 1]),
+                               np.asarray(l2[:, : i + 1]), atol=1e-5)
+    # and it must depend on the past (sanity against degenerate models)
+    t3 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg.vocab)
+    l3, _ = jax.jit(lambda p, t: forward(p, t, cfg))(params, t3)
+    assert not np.allclose(np.asarray(l1[:, -1]), np.asarray(l3[:, -1]))
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_sliding_window_locality(seed):
+    """A local-attention layer stack must be invariant to tokens further
+    back than (n_layers * window) positions."""
+    cfg = _tiny_cfg(layer_pattern=("local",), window=2, n_layers=2)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    s = 16
+    horizon = cfg.n_layers * cfg.window  # receptive field of the stack
+    t1 = jax.random.randint(jax.random.PRNGKey(seed), (1, s), 0, cfg.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 3) % cfg.vocab)
+    l1, _ = jax.jit(lambda p, t: forward(p, t, cfg))(params, t1)
+    l2, _ = jax.jit(lambda p, t: forward(p, t, cfg))(params, t2)
+    # the last position is > horizon away from position 0
+    assert s - 1 > horizon
+    np.testing.assert_allclose(np.asarray(l1[:, -1]), np.asarray(l2[:, -1]),
+                               atol=1e-5)
+
+
+def test_loss_permutation_of_batch_rows():
+    """The mean LM loss is invariant under permuting batch rows."""
+    cfg = _tiny_cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    t = jax.random.randint(jax.random.PRNGKey(2), (4, 12), 0, cfg.vocab)
+    perm = jnp.asarray([2, 0, 3, 1])
+    l1 = float(jax.jit(lambda p, b: lm_loss(p, b, cfg))(
+        params, {"tokens": t, "targets": t}))
+    l2 = float(jax.jit(lambda p, b: lm_loss(p, b, cfg))(
+        params, {"tokens": t[perm], "targets": t[perm]}))
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MoE invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 4),
+       st.floats(0.5, 4.0))
+def test_moe_gate_mass_bounded(seed, k, cf):
+    """Combine weights per token sum to <= 1 (== 1 when nothing is
+    dropped); dropped tokens only shrink the output, never blow it up."""
+    from repro.models.moe import MoEConfig, init_moe_params, moe_ffn
+    cfg = MoEConfig(n_experts=8, top_k=k, d_model=16, d_ff=8,
+                    capacity_factor=cf, group_size=32)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 16), jnp.float32)
+    out, aux = jax.jit(lambda p, x: moe_ffn(p, x, cfg))(params, x)
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(aux) >= 0.0
+    # scaling x by 0 must give 0 output (no bias paths)
+    out0, _ = jax.jit(lambda p, x: moe_ffn(p, x, cfg))(params, x * 0.0)
+    np.testing.assert_allclose(np.asarray(out0), 0.0, atol=1e-6)
