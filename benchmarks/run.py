@@ -92,11 +92,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time, jax
 from repro.core import AdaptiveConfig, rmat_graph, run_kadabra
+from repro.launch.mesh import make_mesh_compat
 g = rmat_graph(9, 8, seed=1)
 for agg in ["hierarchical", "flat", "root"]:
     cfg = AdaptiveConfig(eps=0.08, delta=0.1, aggregation=agg, n0_base=400)
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
     t0 = time.perf_counter()
     res = run_kadabra(g, mesh=mesh, config=cfg, key=jax.random.PRNGKey(0))
     print(f"AGG {agg} {time.perf_counter()-t0:.3f} {res.tau} {res.n_epochs}")
@@ -139,15 +139,17 @@ def bench_fig3(full: bool):
     from repro.core import rmat_graph
     from repro.core.sampler import sample_batch
     from repro.core.epoch import epoch_length
+    from repro.core.adaptive import DEFAULT_SAMPLE_BATCH_SIZE
     g = rmat_graph(11 if full else 9, 8, seed=3)
     n = 64
-    fn = jax.jit(lambda k: sample_batch(g, k, n))
+    B = DEFAULT_SAMPLE_BATCH_SIZE  # the run_kadabra default lane
+    fn = jax.jit(lambda k: sample_batch(g, k, n, batch_size=B))
     us = _time_call(fn, jax.random.PRNGKey(0))
     rate = n / (us / 1e6)
     print(f"\n== Fig 3 analogue: sampling throughput ==")
-    print(f"  single device: {rate:,.0f} samples/s "
+    print(f"  single device (B={B}): {rate:,.0f} samples/s "
           f"(|V|={g.n_nodes}, |E|={g.n_edges_undirected})")
-    emit("fig3.samples_per_s", us / n, f"rate={rate:.0f}")
+    emit("fig3.samples_per_s", us / n, f"rate={rate:.0f};batch={B}")
     print("  epoch length schedule n0 = 1000/(PT)^1.33 (paper §IV-D):")
     for devs in [1, 8, 64, 256, 512]:
         print(f"    devices={devs:<5} n0/device={epoch_length(devs):>5} "
@@ -178,6 +180,73 @@ def bench_fig4(full: bool):
                   f"({per_v:.2f} us/vertex)")
             emit(f"fig4.{fam}.s{s}", samp * 1e6,
                  f"V={g.n_nodes};us_per_vertex={per_v:.2f}")
+
+
+# ---------------------------------------------------------------------------
+# Batch sweep: samples/s vs concurrent-sample count B
+# ---------------------------------------------------------------------------
+
+def bench_batch_sweep(full: bool):
+    """Throughput of the batched sampling lane at B in {1, 4, 16, 64} on
+    the R-MAT laptop-scale instance.  B concurrent samples share one edge
+    stream per BFS level (SpMV -> SpMM), so samples/s should grow until
+    the relaxation turns compute-bound.  Results also land in
+    BENCH_sampling.json so later PRs have a trajectory to compare
+    against."""
+    import json
+    from repro.core import rmat_graph
+    from repro.core.sampler import sample_batch
+    g = rmat_graph(11 if full else 9, 8, seed=3)
+    n = 512 if full else 256
+    print("\n== batch sweep: samples/s vs batch size B ==")
+    print(f"  instance: R-MAT |V|={g.n_nodes} |E|={g.n_edges_undirected}, "
+          f"{n} samples per measurement")
+    rows = []
+    base_rate = None
+    for B in [1, 4, 16, 64]:
+        fn = jax.jit(lambda k, B=B: sample_batch(g, k, n, batch_size=B))
+        us = _time_call(fn, jax.random.PRNGKey(0))
+        rate = n / (us / 1e6)
+        base_rate = base_rate or rate
+        print(f"  B={B:<4} {rate:>12,.0f} samples/s   "
+              f"(speedup vs B=1: {rate / base_rate:4.2f}x)")
+        emit(f"batch_sweep.B{B}", us / n, f"rate={rate:.0f};"
+             f"speedup={rate / base_rate:.2f}")
+        rows.append({"batch_size": B, "samples_per_s": rate,
+                     "us_per_sample": us / n,
+                     "speedup_vs_b1": rate / base_rate})
+    out_path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_sampling.json")
+    record = {
+        "section": "batch_sweep",
+        "instance": {"family": "rmat", "n_nodes": g.n_nodes,
+                     "n_edges_undirected": g.n_edges_undirected,
+                     "edge_factor": 8, "seed": 3},
+        "n_samples_per_measurement": n,
+        "full": full,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "device": jax.devices()[0].platform,
+        "results": rows,
+    }
+    # append to the run history so later PRs keep a trajectory (quick
+    # runs must not clobber committed --full baselines)
+    history = {"runs": []}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                prev = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            prev = None
+        if isinstance(prev, dict):
+            # single-record legacy format (no "runs") is itself a run
+            prev = prev.get("runs", [prev])
+        if isinstance(prev, list):
+            history["runs"] = prev
+    history["runs"].append(record)
+    with open(out_path, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"  appended run #{len(history['runs'])} to "
+          f"{os.path.abspath(out_path)}")
 
 
 # ---------------------------------------------------------------------------
@@ -217,14 +286,20 @@ def bench_kernels(full: bool):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--only", default=None,
-                    choices=[None, "table2", "fig2", "fig3", "fig4",
-                             "kernels"])
+    sections = ["table2", "fig2", "fig3", "fig4", "batch_sweep", "kernels"]
+    ap.add_argument("section", nargs="?", default=None, choices=sections,
+                    help="run a single section (same as --only)")
+    ap.add_argument("--only", default=None, choices=sections)
     args = ap.parse_args()
+    if args.only and args.section and args.only != args.section:
+        ap.error(f"conflicting sections: positional '{args.section}' "
+                 f"vs --only '{args.only}'")
+    args.only = args.only or args.section
     print("name,us_per_call,derived")
     jobs = {
         "table2": bench_table2, "fig2": bench_fig2, "fig3": bench_fig3,
-        "fig4": bench_fig4, "kernels": bench_kernels,
+        "fig4": bench_fig4, "batch_sweep": bench_batch_sweep,
+        "kernels": bench_kernels,
     }
     for name, fn in jobs.items():
         if args.only and name != args.only:

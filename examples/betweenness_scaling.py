@@ -14,12 +14,12 @@ import jax
 import numpy as np
 
 from repro.core import AdaptiveConfig, brandes_numpy, rmat_graph, run_kadabra
+from repro.launch.mesh import make_mesh_compat
 
 graph = rmat_graph(10, 8, seed=1)   # R-MAT, Graph500 parameters
 print(f"R-MAT graph: |V|={graph.n_nodes} |E|={graph.n_edges_undirected}")
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
 exact = brandes_numpy(graph)
 
 for agg in ["hierarchical", "flat", "root"]:

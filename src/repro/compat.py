@@ -1,0 +1,39 @@
+"""JAX cross-version compatibility shims.
+
+The repo targets current JAX, but CI containers may carry late-0.4.x
+releases (>= 0.4.35, where ``jax.make_mesh`` first appeared) in which
+``jax.shard_map`` still lives in ``jax.experimental`` (with
+``check_rep`` instead of ``check_vma``) and ``jax.make_mesh`` has no
+``axis_types`` argument (``jax.sharding.AxisType`` does not exist).
+Feature-detect attributes — never version-sniff — so new APIs are used
+the moment they are available.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh_compat", "shard_map"]
+
+
+def make_mesh_compat(shape, axis_names):
+    """``jax.make_mesh`` pinning Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` falling back to ``jax.experimental.shard_map``.
+
+    ``check_vma`` maps onto the old API's ``check_rep``; the semantics we
+    rely on (False = skip the replication/varying-manual-axes check) are
+    the same.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

@@ -19,8 +19,11 @@ class BetweennessConfig:
     edge_factor: int = 30
     eps: float = 0.01
     delta: float = 0.1
+    # adaptive.sample_batch_size is the B of the batched SpMM frontier
+    # relaxation; production runs want the MXU-filling 64+
     adaptive: AdaptiveConfig = dataclasses.field(
-        default_factory=lambda: AdaptiveConfig(eps=0.01, delta=0.1))
+        default_factory=lambda: AdaptiveConfig(eps=0.01, delta=0.1,
+                                               sample_batch_size=64))
 
 
 def make_config():
@@ -30,7 +33,8 @@ def make_config():
 def make_smoke_config():
     return BetweennessConfig(rmat_scale=8, edge_factor=4, eps=0.1,
                              adaptive=AdaptiveConfig(eps=0.1, delta=0.1,
-                                                     n0_base=64))
+                                                     n0_base=64,
+                                                     sample_batch_size=8))
 
 
 def _builder(cfg, cell_name, *, loop, mesh_axes, opt):

@@ -2,12 +2,14 @@
 # for betweenness approximation, mapped onto a JAX TPU mesh.
 from .graph import (Graph, build_graph, erdos_renyi_graph, from_edge_list,
                     grid_graph, hyperbolic_graph, rmat_graph)
-from .bfs import BFSResult, BidirResult, bfs_sssp, bidirectional_bfs
+from .bfs import (BFSResult, BidirResult, bfs_sssp, bfs_sssp_batched,
+                  bidirectional_bfs, bidirectional_bfs_batched)
 from .brandes import brandes_jax, brandes_numpy
 from .diameter import DiameterEstimate, estimate_diameter
 from .kadabra import (KadabraParams, calibrate_deltas, check_stop,
                       compute_omega, f_term, g_term)
-from .sampler import PathSample, sample_batch, sample_pair, sample_path
+from .sampler import (PathSample, sample_batch, sample_pair, sample_pairs,
+                      sample_path, sample_path_batched)
 from .epoch import StateFrame, epoch_length, zero_frame
 from .adaptive import (AdaptiveConfig, BetweennessResult, EpochStats,
                        run_fixed_sampling, run_kadabra)
@@ -16,12 +18,14 @@ from . import distributed
 __all__ = [
     "Graph", "build_graph", "from_edge_list", "rmat_graph",
     "hyperbolic_graph", "grid_graph", "erdos_renyi_graph",
-    "BFSResult", "BidirResult", "bfs_sssp", "bidirectional_bfs",
+    "BFSResult", "BidirResult", "bfs_sssp", "bfs_sssp_batched",
+    "bidirectional_bfs", "bidirectional_bfs_batched",
     "brandes_jax", "brandes_numpy",
     "DiameterEstimate", "estimate_diameter",
     "KadabraParams", "calibrate_deltas", "check_stop", "compute_omega",
     "f_term", "g_term",
-    "PathSample", "sample_batch", "sample_pair", "sample_path",
+    "PathSample", "sample_batch", "sample_pair", "sample_pairs",
+    "sample_path", "sample_path_batched",
     "StateFrame", "epoch_length", "zero_frame",
     "AdaptiveConfig", "BetweennessResult", "EpochStats",
     "run_fixed_sampling", "run_kadabra", "distributed",

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from . import distributed as dist
 from .diameter import estimate_diameter
 from .epoch import StateFrame, epoch_length, zero_frame
@@ -45,8 +46,14 @@ from .kadabra import (KadabraParams, calibrate_deltas, check_stop,
                       compute_omega)
 from .sampler import sample_batch
 
-__all__ = ["AdaptiveConfig", "BetweennessResult", "EpochStats",
-           "run_kadabra", "run_fixed_sampling"]
+__all__ = ["DEFAULT_SAMPLE_BATCH_SIZE", "AdaptiveConfig",
+           "BetweennessResult", "EpochStats", "run_kadabra",
+           "run_fixed_sampling"]
+
+# Default B of the batched sampling lane (concurrent samples per BFS
+# round); shared by AdaptiveConfig, the fixed-sampling baseline, the
+# dry-run, and the benchmarks so they all measure the same lane.
+DEFAULT_SAMPLE_BATCH_SIZE = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +66,11 @@ class AdaptiveConfig:
     max_epochs: int = 10_000
     diameter_sweeps: int = 2
     aggregation: str = "hierarchical"  # "hierarchical" | "flat" | "root"
+    # Concurrent samples per batched BFS round: each device draws
+    # ceil(n0 / B) rounds of B samples sharing one edge stream per BFS
+    # level (the intra-device analogue of the paper's thread parallelism).
+    # 1 = the paper's sequential per-thread lane.
+    sample_batch_size: int = DEFAULT_SAMPLE_BATCH_SIZE
 
 
 class EpochStats(NamedTuple):
@@ -111,7 +123,8 @@ def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
     t0 = time.perf_counter()
     key, k_cal = jax.random.split(key)
     counts0, tau0 = jax.jit(partial(sample_batch,
-                                    n_samples=cfg.calib_samples_per_device))(
+                                    n_samples=cfg.calib_samples_per_device,
+                                    batch_size=cfg.sample_batch_size))(
         graph, k_cal)
     btilde0 = (counts0[: graph.n_nodes]
                / jnp.maximum(tau0.astype(jnp.float32), 1.0))
@@ -125,7 +138,7 @@ def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
     def epoch_step(agg_counts, agg_tau, frame_counts, frame_tau, k):
         agg_counts = agg_counts + frame_counts
         agg_tau = agg_tau + frame_tau
-        c, t = sample_batch(graph, k, n0)
+        c, t = sample_batch(graph, k, n0, batch_size=cfg.sample_batch_size)
         new_counts = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
         agg = StateFrame(agg_counts, agg_tau)
         done, mf, mg = _check(agg, params, graph.n_nodes)
@@ -188,10 +201,11 @@ def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
     t_diam = time.perf_counter() - t0
 
     # ---- calibration: pleasingly parallel sampling + blocking reduce ----
-    @partial(jax.shard_map, mesh=mesh, in_specs=(gspec, key_spec),
+    @partial(shard_map, mesh=mesh, in_specs=(gspec, key_spec),
              out_specs=(rep, rep), check_vma=False)
     def calib_step(g, keys):
-        c, t = sample_batch(g, keys[0], cfg.calib_samples_per_device)
+        c, t = sample_batch(g, keys[0], cfg.calib_samples_per_device,
+                            batch_size=cfg.sample_batch_size)
         cp = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
         return dist.flat_allreduce(cp, all_axes), dist.flat_allreduce(
             t, all_axes)
@@ -210,7 +224,8 @@ def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
 
     # ---- adaptive epochs --------------------------------------------------
     epoch_step = make_epoch_step_spmd(mesh, cfg.aggregation,
-                                      graph.n_nodes, v_pad, n0)
+                                      graph.n_nodes, v_pad, n0,
+                                      batch_size=cfg.sample_batch_size)
     epoch_jit = jax.jit(epoch_step)
 
     zero_counts = jnp.zeros((v_pad,), jnp.float32)
@@ -239,7 +254,7 @@ def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
                                 time.perf_counter() - te))
 
     # final flush of the in-flight frame
-    @partial(jax.shard_map, mesh=mesh, in_specs=(frame_spec, rep),
+    @partial(shard_map, mesh=mesh, in_specs=(frame_spec, rep),
              out_specs=(rep, rep), check_vma=False)
     def flush(frame_counts, frame_tau):
         return (agg_fn(frame_counts[0]),
@@ -269,10 +284,11 @@ def make_agg_fn(mesh, aggregation: str):
 
 
 def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
-                         n0: int):
+                         n0: int, batch_size: int = 1):
     """One jit-able SPMD epoch (paper Alg. 2): aggregate the previous
-    frame (collectives) while sampling the next one, then evaluate the
-    stop rule on the consistent snapshot.  Exposed at module level so the
+    frame (collectives) while sampling the next one — ceil(n0 /
+    batch_size) batched BFS rounds per device — then evaluate the stop
+    rule on the consistent snapshot.  Exposed at module level so the
     multi-pod dry-run can .lower()/.compile() it on the production mesh
     and extract its roofline terms (EXPERIMENTS.md §Perf, cell #3).
 
@@ -292,7 +308,7 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
         gspec = jax.tree.map(lambda _: rep, g)
         pspec = jax.tree.map(lambda _: rep, params)
 
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=(gspec, pspec, rep, rep, frame_spec, rep,
                            key_spec),
                  out_specs=(rep, rep, frame_spec, rep, rep, rep, rep),
@@ -305,7 +321,7 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
             # 2. sample the next frame — no data dependency on the
             #    collective, so the scheduler overlaps it (paper Alg. 2,
             #    lines 15/21/27)
-            c, t = sample_batch(g, keys[0], n0)
+            c, t = sample_batch(g, keys[0], n0, batch_size=batch_size)
             new_counts = jnp.zeros((1, v_pad),
                                    jnp.float32).at[0, : c.shape[0]].set(c)
             # 3. thread-0-equivalent: stop rule on the consistent snapshot
@@ -339,10 +355,16 @@ def run_kadabra(graph: Graph, *, eps: float = 0.01, delta: float = 0.1,
     return _run_spmd(graph, cfg, key, mesh)
 
 
-def run_fixed_sampling(graph: Graph, n_samples: int, *, key=None):
-    """Non-adaptive baseline (RK-style fixed sample count, no stop rule)."""
+def run_fixed_sampling(graph: Graph, n_samples: int, *, key=None,
+                       batch_size: Optional[int] = None):
+    """Non-adaptive baseline (RK-style fixed sample count, no stop rule).
+
+    Defaults to the same batched lane as ``run_kadabra``
+    (``AdaptiveConfig.sample_batch_size``)."""
     if key is None:
         key = jax.random.PRNGKey(0)
-    counts, tau = jax.jit(partial(sample_batch, n_samples=n_samples))(
-        graph, key)
+    if batch_size is None:
+        batch_size = DEFAULT_SAMPLE_BATCH_SIZE
+    counts, tau = jax.jit(partial(sample_batch, n_samples=n_samples,
+                                  batch_size=batch_size))(graph, key)
     return np.asarray(counts[: graph.n_nodes]) / max(int(tau), 1)

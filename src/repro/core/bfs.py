@@ -10,18 +10,32 @@ edge-centric relaxation
     contrib[v] = sum_{(u,v) in E} sigma[u] * [dist[u] == level]
 
 i.e. a masked SpMV over the COO edge list, expressed as a gather +
-``segment_sum``.  This keeps every step a fixed-shape dataflow op (MXU/VPU
-friendly, shard-able, Pallas-tileable — see ``repro.kernels.frontier``)
-while preserving the exact BFS/DAG semantics Brandes-style path counting
-needs.
+``segment_sum``.
+
+Everything in this module is *batched*: the state of B concurrent
+searches is a (B, V+1) frontier matrix and one relaxation is a masked
+SpMM that streams the edge list ONCE for all B searches —
+
+    contrib[b, v] = sum_{(u,v) in E} sigma[b, u] * [dist[b, u] == level[b]]
+
+Relative to B independent SpMVs this amortizes the edge-index reads and
+turns the scatter into a wide segment reduction (on TPU: a one-hot MXU
+matmul with a (block_e, B) right-hand side — see ``repro.kernels.frontier``),
+raising arithmetic intensity by ~B on the memory-bound edge stream.  This
+is the intra-device analogue of the paper's epoch-level parallelism: each
+device relaxes B sample-frontiers per level instead of one.  Per-sample
+level counters, per-sample balanced-side selection and per-sample
+termination are handled by masking inside one shared ``while_loop`` that
+runs until every search in the batch has met/finished.  The scalar
+(single-search) API is kept as a thin B=1 wrapper.
 
 Numerical note: shortest-path counts grow combinatorially (binomial on
 grid-like graphs), so float32 would overflow on high-diameter inputs.  We
-rescale ``sigma`` by 1/max whenever the max crosses 1e30.  Every consumer
-(path sampling, meeting-vertex selection) only uses *ratios* of sigma
-values under a uniform per-side scale, so the rescale is exact in
-distribution.  For small graphs the scale stays 1 and sigma remains an
-exact integer count (used by the unit tests against networkx).
+rescale each sample's ``sigma`` row by 1/max whenever its max crosses
+1e30.  Every consumer (path sampling, meeting-vertex selection) only uses
+*ratios* of sigma values under a uniform per-side scale, so the rescale is
+exact in distribution.  For small graphs the scale stays 1 and sigma
+remains an exact integer count (used by the unit tests against networkx).
 """
 from __future__ import annotations
 
@@ -33,138 +47,195 @@ import jax.numpy as jnp
 
 from .graph import Graph
 
-__all__ = ["BFSResult", "bfs_sssp", "bidirectional_bfs", "BidirResult"]
+__all__ = [
+    "BFSResult", "bfs_sssp", "bfs_sssp_batched",
+    "BidirResult", "bidirectional_bfs", "bidirectional_bfs_batched",
+]
 
 _RESCALE_THRESHOLD = 1e30
 _SINK_DIST = jnp.int32(-3)   # dist value of the padding sink row
 
 
 class BFSResult(NamedTuple):
-    dist: jax.Array    # (V+1,) int32; -1 = unreached, -3 = sink row
-    sigma: jax.Array   # (V+1,) float32; rescaled shortest-path counts
-    levels: jax.Array  # () int32; number of levels expanded (= ecc(source))
+    dist: jax.Array    # (..., V+1) int32; -1 = unreached, -3 = sink row
+    sigma: jax.Array   # (..., V+1) float32; rescaled shortest-path counts
+    levels: jax.Array  # (...) int32; number of levels expanded (= ecc(source))
 
 
-def _init_state(graph: Graph, source):
+def _init_state(graph: Graph, sources):
+    """Batched BFS init: sources (B,) -> dist/sigma (B, V+1)."""
+    b = sources.shape[0]
     v1 = graph.n_nodes + 1
-    dist = jnp.full((v1,), -1, jnp.int32).at[graph.n_nodes].set(_SINK_DIST)
-    dist = dist.at[source].set(0)
-    sigma = jnp.zeros((v1,), jnp.float32).at[source].set(1.0)
+    rows = jnp.arange(b)
+    dist = jnp.full((b, v1), -1, jnp.int32)
+    dist = dist.at[:, graph.n_nodes].set(_SINK_DIST)
+    dist = dist.at[rows, sources].set(0)
+    sigma = jnp.zeros((b, v1), jnp.float32).at[rows, sources].set(1.0)
     return dist, sigma
 
 
-def _expand_level(graph: Graph, dist, sigma, level):
-    """One edge-centric BFS relaxation.  Returns updated (dist, sigma, n_new)."""
-    src_dist = dist[graph.src]                       # (E,) gather
-    src_vals = jnp.where(src_dist == level, sigma[graph.src], 0.0)
-    contrib = jax.ops.segment_sum(src_vals, graph.dst,
-                                  num_segments=graph.n_nodes + 1)
-    new = (contrib > 0) & (dist == -1)
-    dist = jnp.where(new, level + 1, dist)
+def _expand_level(graph: Graph, dist, sigma, level, active):
+    """One batched edge-centric BFS relaxation (a masked SpMM).
+
+    dist/sigma are (B, V+1), ``level`` is the per-sample (B,) frontier
+    depth and ``active`` a (B,) mask — inactive rows are left untouched.
+    The edge list is gathered once; the segment reduction carries all B
+    columns.  Returns updated (dist, sigma, n_new (B,)).
+    """
+    src_vals = jnp.where(dist[:, graph.src] == level[:, None],
+                         sigma[:, graph.src], 0.0)          # (B, E) gather
+    contrib = jax.ops.segment_sum(src_vals.T, graph.dst,
+                                  num_segments=graph.n_nodes + 1).T
+    new = (contrib > 0) & (dist == -1) & active[:, None]
+    dist = jnp.where(new, level[:, None] + 1, dist)
     sigma = jnp.where(new, contrib, sigma)
-    # rescale to avoid float32 overflow (uniform scale => exact ratios)
-    m = jnp.max(jnp.where(new, sigma, 0.0))
+    # rescale per sample to avoid float32 overflow (uniform row scale =>
+    # exact ratios)
+    m = jnp.max(jnp.where(new, sigma, 0.0), axis=1, keepdims=True)
     scale = jnp.where(m > _RESCALE_THRESHOLD, 1.0 / m, 1.0)
     sigma = sigma * scale
-    return dist, sigma, jnp.sum(new.astype(jnp.int32))
+    return dist, sigma, jnp.sum(new.astype(jnp.int32), axis=1)
+
+
+def bfs_sssp_batched(graph: Graph, sources, *, stop_nodes=None) -> BFSResult:
+    """B concurrent full single-source BFS with path counting.
+
+    ``sources`` is (B,); one shared while_loop relaxes all B frontiers per
+    level and runs until every search exhausted its frontier.  If
+    ``stop_nodes`` (B,) is given, each search additionally stops as soon
+    as its own stop node is settled (the whole level is still fully
+    expanded, so sigma[b, stop_nodes[b]] is final).
+    """
+    sources = jnp.asarray(sources, jnp.int32)
+    b = sources.shape[0]
+    dist0, sigma0 = _init_state(graph, sources)
+    rows = jnp.arange(b)
+
+    def go_mask(dist, level, n_new):
+        go = (n_new > 0) & (level < graph.n_nodes)
+        if stop_nodes is not None:
+            go = go & (dist[rows, stop_nodes] < 0)
+        return go
+
+    def cond(state):
+        dist, _sigma, level, n_new = state
+        return jnp.any(go_mask(dist, level, n_new))
+
+    def body(state):
+        dist, sigma, level, n_new = state
+        active = go_mask(dist, level, n_new)
+        dist, sigma, n_new2 = _expand_level(graph, dist, sigma, level, active)
+        level = jnp.where(active, level + 1, level)
+        n_new = jnp.where(active, n_new2, n_new)
+        return dist, sigma, level, n_new
+
+    dist, sigma, _levels, _ = jax.lax.while_loop(
+        cond, body, (dist0, sigma0, jnp.zeros((b,), jnp.int32),
+                     jnp.ones((b,), jnp.int32)))
+    # eccentricity = deepest level actually reached per sample (the loop
+    # counter overshoots by one when a search exits on an empty frontier)
+    ecc = jnp.max(jnp.where(dist >= 0, dist, 0), axis=1)
+    return BFSResult(dist, sigma, ecc)
 
 
 def bfs_sssp(graph: Graph, source, *, stop_node=None) -> BFSResult:
     """Full single-source BFS with path counting (Brandes forward phase).
 
-    If ``stop_node`` is given, stops as soon as that node is settled (its
-    whole level is still fully expanded, so sigma[stop_node] is final).
+    Thin B=1 wrapper over :func:`bfs_sssp_batched`.  If ``stop_node`` is
+    given, stops as soon as that node is settled.
     """
-    dist0, sigma0 = _init_state(graph, source)
-
-    def cond(state):
-        dist, _sigma, level, n_new = state
-        go = n_new > 0
-        if stop_node is not None:
-            go = go & (dist[stop_node] < 0)
-        return go & (level < graph.n_nodes)
-
-    def body(state):
-        dist, sigma, level, _ = state
-        dist, sigma, n_new = _expand_level(graph, dist, sigma, level)
-        return dist, sigma, level + 1, n_new
-
-    dist, sigma, _levels, _ = jax.lax.while_loop(
-        cond, body, (dist0, sigma0, jnp.int32(0), jnp.int32(1)))
-    # eccentricity = deepest level actually reached (the loop counter
-    # overshoots by one when it exits on an empty frontier)
-    ecc = jnp.max(jnp.where(dist >= 0, dist, 0))
-    return BFSResult(dist, sigma, ecc)
+    sources = jnp.asarray(source, jnp.int32).reshape(1)
+    stops = (None if stop_node is None
+             else jnp.asarray(stop_node, jnp.int32).reshape(1))
+    res = bfs_sssp_batched(graph, sources, stop_nodes=stops)
+    return BFSResult(res.dist[0], res.sigma[0], res.levels[0])
 
 
 class BidirResult(NamedTuple):
-    """State of a balanced bidirectional BFS after the frontiers met.
+    """State of balanced bidirectional BFS after the frontiers met.
 
-    ``d`` is the s-t distance (or -1 if s,t are disconnected).  ``split``
-    is the s-side level L such that every shortest s-t path crosses exactly
-    one vertex w with dist_s(w) == L; the set of such vertices carries
-    weight sigma_s(w) * sigma_t(w).  Both sides' sigma values are final for
+    All fields carry a leading batch axis in the batched API (squeezed
+    away by the scalar wrapper).  ``d`` is the s-t distance (or -1 if
+    s,t are disconnected).  ``split`` is the s-side level L such that
+    every shortest s-t path crosses exactly one vertex w with
+    dist_s(w) == L; the set of such vertices carries weight
+    sigma_s(w) * sigma_t(w).  Both sides' sigma values are final for
     all vertices at levels <= their expanded radius.
     """
-    dist_s: jax.Array   # (V+1,) int32
-    dist_t: jax.Array   # (V+1,) int32
-    sigma_s: jax.Array  # (V+1,) float32
-    sigma_t: jax.Array  # (V+1,) float32
-    d: jax.Array        # () int32
-    split: jax.Array    # () int32
+    dist_s: jax.Array   # (..., V+1) int32
+    dist_t: jax.Array   # (..., V+1) int32
+    sigma_s: jax.Array  # (..., V+1) float32
+    sigma_t: jax.Array  # (..., V+1) float32
+    d: jax.Array        # (...) int32
+    split: jax.Array    # (...) int32
 
 
-def bidirectional_bfs(graph: Graph, s, t, *, max_levels: int | None = None) -> BidirResult:
-    """Balanced bidirectional BFS from s and t (the paper's sampler core).
+def bidirectional_bfs_batched(graph: Graph, s, t, *,
+                              max_levels: int | None = None) -> BidirResult:
+    """B balanced bidirectional BFS sharing one edge stream per level.
 
-    Each iteration expands the side with the smaller frontier (the
-    "balanced" strategy of KADABRA).  The search stops once some vertex has
-    a final distance from both sides, i.e. the frontiers met.  On an
-    undirected graph the same edge list serves both directions (NetworKit
-    stores graph + transpose; for us symmetry makes them identical).
+    ``s``/``t`` are (B,).  Each iteration every still-active sample
+    expands its own smaller frontier (the "balanced" strategy of KADABRA):
+    the per-sample chosen side is gathered into one (B, V+1) matrix, a
+    single batched relaxation streams the edge list once for all B
+    searches, and the result is scattered back to the chosen side.  A
+    sample leaves the loop when some vertex has a final distance from both
+    of its sides (the frontiers met) or its frontier died (disconnected
+    pair); the shared while_loop runs until all B searches are done.  On
+    an undirected graph the same edge list serves both directions
+    (NetworKit stores graph + transpose; for us symmetry makes them
+    identical).
     """
     max_levels = graph.n_nodes if max_levels is None else max_levels
+    s = jnp.asarray(s, jnp.int32)
+    t = jnp.asarray(t, jnp.int32)
+    b = s.shape[0]
     dist_s0, sigma_s0 = _init_state(graph, s)
     dist_t0, sigma_t0 = _init_state(graph, t)
 
-    def frontier_size(dist, level):
-        return jnp.sum((dist == level).astype(jnp.int32))
+    def active_mask(dist_s, rad_s, dist_t, rad_t, alive):
+        # met: some vertex settled from both sides
+        met = jnp.any((dist_s >= 0) & (dist_t >= 0), axis=1)
+        return (~met) & alive & (rad_s + rad_t < max_levels)
 
     # state: dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive
     def cond(st):
         dist_s, _, rad_s, dist_t, _, rad_t, alive = st
-        met = jnp.any((dist_s >= 0) & (dist_t >= 0)
-                      & (dist_s + dist_t >= 0))  # both settled
-        return (~met) & alive & (rad_s + rad_t < max_levels)
+        return jnp.any(active_mask(dist_s, rad_s, dist_t, rad_t, alive))
 
     def body(st):
-        dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, _ = st
-        fs = frontier_size(dist_s, rad_s)
-        ft = frontier_size(dist_t, rad_t)
-
-        def expand_s(_):
-            d2, s2, n_new = _expand_level(graph, dist_s, sigma_s, rad_s)
-            return d2, s2, rad_s + 1, dist_t, sigma_t, rad_t, n_new
-
-        def expand_t(_):
-            d2, s2, n_new = _expand_level(graph, dist_t, sigma_t, rad_t)
-            return dist_s, sigma_s, rad_s, d2, s2, rad_t + 1, n_new
-
-        # Balanced rule: expand the smaller frontier; if a side's frontier
-        # died out the graph is disconnected between s and t.
+        dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive = st
+        active = active_mask(dist_s, rad_s, dist_t, rad_t, alive)
+        fs = jnp.sum((dist_s == rad_s[:, None]).astype(jnp.int32), axis=1)
+        ft = jnp.sum((dist_t == rad_t[:, None]).astype(jnp.int32), axis=1)
+        # Balanced rule, per sample: expand the smaller frontier; if a
+        # side's frontier died out the pair is disconnected.
         pick_s = fs <= ft
-        out = jax.lax.cond(pick_s, expand_s, expand_t, operand=None)
-        ds, ss, rs, dt_, st_, rt, n_new = out
-        return ds, ss, rs, dt_, st_, rt, n_new > 0
+        exp_dist = jnp.where(pick_s[:, None], dist_s, dist_t)
+        exp_sigma = jnp.where(pick_s[:, None], sigma_s, sigma_t)
+        exp_level = jnp.where(pick_s, rad_s, rad_t)
+        nd, ns, n_new = _expand_level(graph, exp_dist, exp_sigma, exp_level,
+                                      active)
+        upd_s = pick_s & active
+        upd_t = (~pick_s) & active
+        dist_s = jnp.where(upd_s[:, None], nd, dist_s)
+        sigma_s = jnp.where(upd_s[:, None], ns, sigma_s)
+        rad_s = jnp.where(upd_s, rad_s + 1, rad_s)
+        dist_t = jnp.where(upd_t[:, None], nd, dist_t)
+        sigma_t = jnp.where(upd_t[:, None], ns, sigma_t)
+        rad_t = jnp.where(upd_t, rad_t + 1, rad_t)
+        alive = jnp.where(active, n_new > 0, alive)
+        return dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive
 
-    init = (dist_s0, sigma_s0, jnp.int32(0),
-            dist_t0, sigma_t0, jnp.int32(0), jnp.bool_(True))
-    dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive = \
+    zeros = jnp.zeros((b,), jnp.int32)
+    init = (dist_s0, sigma_s0, zeros, dist_t0, sigma_t0, zeros,
+            jnp.ones((b,), jnp.bool_))
+    dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, _alive = \
         jax.lax.while_loop(cond, body, init)
 
     both = (dist_s >= 0) & (dist_t >= 0)
     dsum = jnp.where(both, dist_s + dist_t, jnp.iinfo(jnp.int32).max)
-    d = jnp.min(dsum)
+    d = jnp.min(dsum, axis=1)
     connected = d < jnp.iinfo(jnp.int32).max
     d = jnp.where(connected, d, -1)
     # Split level: all vertices with dist_s == split are settled on the s
@@ -174,3 +245,16 @@ def bidirectional_bfs(graph: Graph, s, t, *, max_levels: int | None = None) -> B
     split = jnp.clip(d - rad_t, 0, rad_s)
     split = jnp.where(connected, split, 0)
     return BidirResult(dist_s, dist_t, sigma_s, sigma_t, d, split)
+
+
+def bidirectional_bfs(graph: Graph, s, t, *,
+                      max_levels: int | None = None) -> BidirResult:
+    """Balanced bidirectional BFS from s to t — B=1 wrapper over
+    :func:`bidirectional_bfs_batched`."""
+    res = bidirectional_bfs_batched(
+        graph,
+        jnp.asarray(s, jnp.int32).reshape(1),
+        jnp.asarray(t, jnp.int32).reshape(1),
+        max_levels=max_levels)
+    return BidirResult(res.dist_s[0], res.dist_t[0], res.sigma_s[0],
+                       res.sigma_t[0], res.d[0], res.split[0])

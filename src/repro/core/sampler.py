@@ -5,15 +5,27 @@ balanced bidirectional BFS; (iii) draw ONE uniform-at-random shortest s-t
 path; (iv) add 1 to the count of every *internal* vertex of that path.
 KADABRA's estimator is then b~(x) = c~(x)/tau.
 
+Samples are taken B at a time (``sample_path_batched``): the B
+bidirectional searches share one batched frontier relaxation per level
+(see ``repro.core.bfs``), so the edge list is streamed once per level for
+the whole batch instead of once per sample — the arithmetic-intensity
+move that makes the sampling phase run at memory bandwidth instead of at
+edge-stream latency.  ``sample_batch`` accumulates ceil(n/B) such rounds
+under a ``lax.scan``; B = 1 degenerates to the paper's one-sample-per-
+thread formulation and is kept as the reference lane for parity tests.
+
 Uniform path sampling is factorized through the BFS DAG:
 
   * every shortest s-t path crosses exactly one vertex w with
     dist_s(w) == L (the split level returned by the bidirectional search);
     the number of paths through w is sigma_s(w) * sigma_t(w), so w is
-    drawn with probability proportional to that product (Gumbel-max);
+    drawn with probability proportional to that product (a batched
+    row-wise Gumbel-max over the (B, V+1) weight matrix);
   * from w we walk backwards to s: at a vertex v on level l, the
     predecessor u in N(v) with dist_s(u) == l-1 is drawn with probability
     sigma_s(u) / sum(sigma_s over predecessors); symmetrically towards t.
+    The B walks run under ``vmap`` (they touch O(path * deg) entries, not
+    the edge stream, so per-sample execution costs nothing extra).
 
 The backward step uses a *chunked weighted-reservoir* draw over the CSR
 neighbor list: neighbors are visited in fixed-size chunks (static shapes
@@ -29,34 +41,42 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bfs import BidirResult, bidirectional_bfs
+from .bfs import BidirResult, bidirectional_bfs_batched
 from .graph import Graph
 
-__all__ = ["PathSample", "sample_pair", "sample_path", "sample_batch"]
+__all__ = ["PathSample", "sample_pair", "sample_pairs", "sample_path",
+           "sample_path_batched", "sample_batch"]
 
 _NEG_INF = -1e30
 _CHUNK = 128  # matches Graph pad_to; guarantees in-bounds dynamic slices
 
 
 class PathSample(NamedTuple):
-    contrib: jax.Array   # (V+1,) float32 — 1.0 on internal path vertices
-    valid: jax.Array     # () bool — False when s,t were disconnected
-    length: jax.Array    # () int32 — path length d (edges), -1 if invalid
+    contrib: jax.Array   # (..., V+1) float32 — 1.0 on internal path vertices
+    valid: jax.Array     # (...) bool — False when s,t were disconnected
+    length: jax.Array    # (...) int32 — path length d (edges), -1 if invalid
 
 
-def sample_pair(key, n_nodes: int):
-    """Uniform (s, t) with s != t."""
+def sample_pairs(key, n_nodes: int, batch: int):
+    """``batch`` uniform pairs (s, t) with s != t, as (B,) arrays."""
     ks, kt = jax.random.split(key)
-    s = jax.random.randint(ks, (), 0, n_nodes)
-    t = jax.random.randint(kt, (), 0, n_nodes - 1)
+    s = jax.random.randint(ks, (batch,), 0, n_nodes)
+    t = jax.random.randint(kt, (batch,), 0, n_nodes - 1)
     t = jnp.where(t >= s, t + 1, t)
     return s, t
 
 
+def sample_pair(key, n_nodes: int):
+    """Uniform (s, t) with s != t."""
+    s, t = sample_pairs(key, n_nodes, 1)
+    return s[0], t[0]
+
+
 def _gumbel_argmax(key, logw):
+    """Row-wise Gumbel-max draw; works on (C,) and (B, C) weight arrays."""
     g = -jnp.log(-jnp.log(jax.random.uniform(
         key, logw.shape, minval=1e-20, maxval=1.0)))
-    return jnp.argmax(logw + g)
+    return jnp.argmax(logw + g, axis=-1)
 
 
 def _sample_predecessor(graph: Graph, key, v, level, dist, sigma):
@@ -106,54 +126,86 @@ def _walk_to_source(graph: Graph, key, start_node, start_level, dist, sigma,
     return contrib
 
 
-def sample_path(graph: Graph, key) -> PathSample:
-    """Take one KADABRA sample; returns the internal-vertex indicator."""
-    k_pair, k_meet, k_s, k_t = jax.random.split(key, 4)
-    s, t = sample_pair(k_pair, graph.n_nodes)
-    res: BidirResult = bidirectional_bfs(graph, s, t)
-    valid = res.d >= 0
+def sample_path_batched(graph: Graph, key, batch: int) -> PathSample:
+    """Take ``batch`` KADABRA samples concurrently.
 
-    # --- choose the meeting vertex w ~ sigma_s(w) * sigma_t(w) ----------
-    on_split = (res.dist_s == res.split) & (res.dist_t == res.d - res.split)
+    One batched bidirectional BFS serves all B pairs (shared edge stream);
+    the meeting-vertex draw is a row-wise Gumbel-max over the (B, V+1)
+    path-count products; the two backward walks are vmapped.  Returns a
+    PathSample whose fields have a leading (B,) axis — fold ``contrib``
+    with one sum over axis 0 to get the per-round count increment.
+    """
+    k_pair, k_meet, k_s, k_t = jax.random.split(key, 4)
+    s, t = sample_pairs(k_pair, graph.n_nodes, batch)
+    res: BidirResult = bidirectional_bfs_batched(graph, s, t)
+    valid = res.d >= 0                                          # (B,)
+
+    # --- choose the meeting vertices w ~ sigma_s(w) * sigma_t(w) --------
+    on_split = ((res.dist_s == res.split[:, None])
+                & (res.dist_t == (res.d - res.split)[:, None]))
     logw = jnp.where(
-        on_split & valid,
+        on_split & valid[:, None],
         jnp.log(jnp.maximum(res.sigma_s, 1e-30))
         + jnp.log(jnp.maximum(res.sigma_t, 1e-30)),
         _NEG_INF,
     )
-    w = jnp.int32(_gumbel_argmax(k_meet, logw))
+    w = _gumbel_argmax(k_meet, logw).astype(jnp.int32)          # (B,)
 
-    contrib = jnp.zeros((graph.n_nodes + 1,), jnp.float32)
+    contrib = jnp.zeros((batch, graph.n_nodes + 1), jnp.float32)
     # w itself is internal iff it is neither s (split==0) nor t (split==d)
     w_internal = valid & (res.split > 0) & (res.split < res.d)
-    contrib = contrib.at[w].add(jnp.where(w_internal, 1.0, 0.0))
+    contrib = contrib.at[jnp.arange(batch), w].add(
+        jnp.where(w_internal, 1.0, 0.0))
 
     # --- backward walks; skipped naturally when levels are 0/invalid ----
     lvl_s = jnp.where(valid, res.split, 0)
     lvl_t = jnp.where(valid, res.d - res.split, 0)
-    contrib = _walk_to_source(graph, k_s, w, lvl_s, res.dist_s, res.sigma_s,
-                              contrib)
-    contrib = _walk_to_source(graph, k_t, w, lvl_t, res.dist_t, res.sigma_t,
-                              contrib)
+    walk = jax.vmap(_walk_to_source, in_axes=(None, 0, 0, 0, 0, 0, 0))
+    contrib = walk(graph, jax.random.split(k_s, batch), w, lvl_s,
+                   res.dist_s, res.sigma_s, contrib)
+    contrib = walk(graph, jax.random.split(k_t, batch), w, lvl_t,
+                   res.dist_t, res.sigma_t, contrib)
     # the sink row never receives contributions, but zero it defensively
-    contrib = contrib.at[graph.n_nodes].set(0.0)
+    contrib = contrib.at[:, graph.n_nodes].set(0.0)
     return PathSample(contrib, valid, jnp.where(valid, res.d, -1))
 
 
-def sample_batch(graph: Graph, key, n_samples: int):
-    """Sequentially take ``n_samples`` samples, accumulating counts.
+def sample_path(graph: Graph, key) -> PathSample:
+    """Take one KADABRA sample — B=1 wrapper over the batched lane."""
+    ps = sample_path_batched(graph, key, 1)
+    return PathSample(ps.contrib[0], ps.valid[0], ps.length[0])
 
-    Sequential (lax.scan) per device — each device is one "thread" of the
-    paper; memory stays O(V) regardless of the epoch length.
-    Returns (counts (V+1,) float32, tau () int32).
+
+def sample_batch(graph: Graph, key, n_samples: int, *, batch_size: int = 1):
+    """Take exactly ``n_samples`` samples, accumulating counts.
+
+    ``batch_size`` = B concurrent samples per round; ceil(n_samples / B)
+    rounds run under a ``lax.scan`` so memory stays O(B * V) regardless of
+    the epoch length.  When B does not divide n_samples the surplus
+    samples of the final round are masked out (they are i.i.d., so
+    dropping a fixed suffix is exact), keeping tau — and with it the
+    epoch/omega bookkeeping of the adaptive driver — identical to the
+    sequential lane.  B = 1 reproduces the paper's one-sample-per-thread
+    formulation exactly (one (V+1,) frontier per scan step).
+    Returns (counts (V+1,) float32, tau () int32 = n_samples).
     """
-    def step(carry, k):
-        counts, tau = carry
-        ps = sample_path(graph, k)
-        return (counts + ps.contrib, tau + 1), ps.valid
+    # clamp: a batch wider than the request would only compute masked work
+    batch_size = max(1, min(int(batch_size), int(n_samples)))
+    rounds = -(-n_samples // batch_size)
 
-    keys = jax.random.split(key, n_samples)
+    def step(carry, xs):
+        counts, tau = carry
+        k, offset = xs
+        ps = sample_path_batched(graph, k, batch_size)
+        keep = (offset + jnp.arange(batch_size)) < n_samples
+        counts = counts + jnp.sum(
+            jnp.where(keep[:, None], ps.contrib, 0.0), axis=0)
+        tau = tau + jnp.sum(keep.astype(jnp.int32))
+        return (counts, tau), jnp.sum((ps.valid & keep).astype(jnp.int32))
+
+    keys = jax.random.split(key, rounds)
+    offsets = jnp.arange(rounds, dtype=jnp.int32) * batch_size
     (counts, tau), _valids = jax.lax.scan(
         step, (jnp.zeros((graph.n_nodes + 1,), jnp.float32), jnp.int32(0)),
-        keys)
+        (keys, offsets))
     return counts, tau

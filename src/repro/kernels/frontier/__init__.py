@@ -1,6 +1,7 @@
-from .kernel import frontier_expand_pallas
+from .kernel import frontier_expand_batched_pallas, frontier_expand_pallas
 from .ops import frontier_expand, pallas_supported
-from .ref import frontier_expand_ref
+from .ref import frontier_expand_batched_ref, frontier_expand_ref
 
-__all__ = ["frontier_expand", "frontier_expand_pallas",
+__all__ = ["frontier_expand", "frontier_expand_batched_pallas",
+           "frontier_expand_batched_ref", "frontier_expand_pallas",
            "frontier_expand_ref", "pallas_supported"]

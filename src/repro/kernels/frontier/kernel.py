@@ -1,24 +1,32 @@
-"""Pallas TPU kernel: edge-centric BFS frontier expansion.
+"""Pallas TPU kernel: batched edge-centric BFS frontier expansion.
 
-This is the per-sample hot loop of the paper's sampler (one bidirectional
-BFS per sample; each level is one frontier expansion).  The GPU/CPU
-formulation is a queue + atomics; the TPU-native adaptation is:
+This is the hot loop of the paper's sampler (one bidirectional BFS per
+sample; each level is one frontier expansion).  The GPU/CPU formulation
+is a queue + atomics; the TPU-native adaptation is:
 
   * edges live in HBM as a COO list, streamed through VMEM in blocks of
     ``block_e`` (BlockSpec over the edge dimension — purely sequential,
     perfectly prefetchable);
-  * the frontier state (dist, sigma) is resident in VMEM across all grid
-    steps (BlockSpec index_map pinning block 0) — random gathers stay
+  * the frontier state (dist, sigma) of all B concurrent samples is
+    resident in VMEM across all grid steps in vertex-major (V+1, B)
+    layout (BlockSpec index_map pinning block 0) — random gathers stay
     on-chip instead of hitting HBM;
-  * the scatter-accumulate into ``contrib`` uses a *one-hot matmul*:
-    scattering ``vals`` to rows ``dst_local`` is  onehot(dst)ᵀ @ vals —
-    an (block_v x block_e) x (block_e x 1) product that runs on the MXU
-    instead of a serialized scatter unit.  This is the standard dense
-    trick for segment-reductions on systolic hardware.
+  * the scatter-accumulate into ``contrib`` is a *one-hot matmul*:
+    scattering the (block_e, B) value matrix to rows ``dst_local`` is
+    onehot(dst)ᵀ @ vals — a (block_v x block_e) x (block_e x B) MXU
+    product.  With B > 1 the systolic array finally has a real
+    right-hand side: the edge block (and the one-hot operand built from
+    it) is read ONCE for all B samples, so arithmetic intensity on the
+    edge stream grows linearly in B.  B = 1 degenerates to the width-1
+    product of the unbatched kernel.
 
-The VMEM-residency requirement bounds V: dist+sigma+contrib = 12 bytes/row
-(~1.3M rows in 16 MiB VMEM).  ``ops.py`` dispatches to the XLA
-segment-sum path above that size; DESIGN.md discusses the two-level
+On real TPUs pick B as a multiple of the f32 lane tiling (8; ideally 128
+to fill the MXU); interpret mode accepts any B.
+
+The VMEM-residency requirement bounds V * B: dist+sigma+contrib = 12
+bytes per (vertex, sample) cell (~1.3M cells in 16 MiB VMEM, i.e. ~20K
+vertices at B=64).  ``ops.py`` dispatches to the XLA segment-sum path
+above that size; DESIGN.md and ROADMAP discuss the two-level
 (node-blocked CSC) extension for billion-edge graphs.
 
 Grid: (E_pad / block_e,).  All shapes static; padded edges target the sink
@@ -43,50 +51,74 @@ def _kernel(src_ref, dst_ref, dist_ref, sigma_ref, level_ref, out_ref, *,
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    src = src_ref[...]
-    dst = dst_ref[...]
-    level = level_ref[0]
-    # frontier gather (VMEM-resident vectors)
-    vals = jnp.where(dist_ref[src] == level, sigma_ref[src], 0.0)
+    src = src_ref[...]           # (block_e,)
+    dst = dst_ref[...]           # (block_e,)
+    levels = level_ref[...]      # (B,) per-sample frontier depth
+    # frontier gather (VMEM-resident (V1, B) state): one edge-index read
+    # serves every sample column
+    vals = jnp.where(dist_ref[src, :] == levels[None, :],
+                     sigma_ref[src, :], 0.0)              # (block_e, B)
     # scatter-add as a one-hot matmul on the MXU:
-    #   contrib[v] += sum_e [dst[e] == v] * vals[e]
+    #   contrib[v, b] += sum_e [dst[e] == v] * vals[e, b]
     onehot = (dst[None, :] == jax.lax.broadcasted_iota(
         jnp.int32, (v1, block_e), 0)).astype(jnp.float32)
-    out_ref[...] += onehot @ vals
+    out_ref[...] += jnp.dot(onehot, vals,
+                            preferred_element_type=jnp.float32)
+
+
+def _pad_edges(src, dst, block_e, sink):
+    e_pad = src.shape[0]
+    if e_pad % block_e:
+        # extend with sink->sink edges (dist[sink] = -3 never matches a
+        # level, so padded edges contribute exactly 0)
+        extra = block_e - e_pad % block_e
+        fill = jnp.full((extra,), sink, src.dtype)
+        src = jnp.concatenate([src, fill])
+        dst = jnp.concatenate([dst, fill])
+    return src, dst
+
+
+def frontier_expand_batched_pallas(src, dst, dist, sigma, levels, *,
+                                   block_e: int = DEFAULT_BLOCK_E,
+                                   interpret: bool = True):
+    """B batched BFS frontier expansions sharing one edge stream.
+
+    ``dist``/``sigma`` are (B, V+1) with per-sample frontier depths
+    ``levels`` (B,); returns the (B, V+1) contribution matrix.  Same
+    contract as ``ref.frontier_expand_batched_ref``.
+
+    ``interpret=True`` executes the kernel body on CPU (this container);
+    on a real TPU pass ``interpret=False``.
+    """
+    batch, v1 = dist.shape
+    src, dst = _pad_edges(src, dst, block_e, v1 - 1)
+    grid = (src.shape[0] // block_e,)
+    levels = jnp.asarray(levels, jnp.int32).reshape(batch)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_e=block_e, v1=v1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_e,), lambda i: (i,)),     # src: stream blocks
+            pl.BlockSpec((block_e,), lambda i: (i,)),     # dst: stream blocks
+            pl.BlockSpec((v1, batch), lambda i: (0, 0)),  # dist: VMEM-pinned
+            pl.BlockSpec((v1, batch), lambda i: (0, 0)),  # sigma: VMEM-pinned
+            pl.BlockSpec((batch,), lambda i: (0,)),       # per-sample levels
+        ],
+        out_specs=pl.BlockSpec((v1, batch), lambda i: (0, 0)),  # accumulate
+        out_shape=jax.ShapeDtypeStruct((v1, batch), jnp.float32),
+        interpret=interpret,
+    )(src, dst, dist.T, sigma.T, levels)
+    return out.T
 
 
 def frontier_expand_pallas(src, dst, dist, sigma, level, *,
                            block_e: int = DEFAULT_BLOCK_E,
                            interpret: bool = True):
-    """One BFS frontier expansion; same contract as ref.frontier_expand_ref.
-
-    ``interpret=True`` executes the kernel body on CPU (this container);
-    on a real TPU pass ``interpret=False``.
-    """
-    e_pad = src.shape[0]
-    v1 = dist.shape[0]
-    if e_pad % block_e:
-        # extend with sink->sink edges (dist[sink] = -3 never matches a
-        # level, so padded edges contribute exactly 0)
-        extra = block_e - e_pad % block_e
-        sink = jnp.full((extra,), v1 - 1, src.dtype)
-        src = jnp.concatenate([src, sink])
-        dst = jnp.concatenate([dst, sink])
-        e_pad += extra
-    grid = (e_pad // block_e,)
-    level_arr = jnp.asarray(level, jnp.int32).reshape(1)
-
-    return pl.pallas_call(
-        functools.partial(_kernel, block_e=block_e, v1=v1),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_e,), lambda i: (i,)),    # src: stream blocks
-            pl.BlockSpec((block_e,), lambda i: (i,)),    # dst: stream blocks
-            pl.BlockSpec((v1,), lambda i: (0,)),         # dist: VMEM-pinned
-            pl.BlockSpec((v1,), lambda i: (0,)),         # sigma: VMEM-pinned
-            pl.BlockSpec((1,), lambda i: (0,)),          # level scalar
-        ],
-        out_specs=pl.BlockSpec((v1,), lambda i: (0,)),   # contrib: accumulate
-        out_shape=jax.ShapeDtypeStruct((v1,), jnp.float32),
-        interpret=interpret,
-    )(src, dst, dist, sigma, level_arr)
+    """One BFS frontier expansion (B=1 lane of the batched kernel); same
+    contract as ``ref.frontier_expand_ref``."""
+    out = frontier_expand_batched_pallas(
+        src, dst, dist[None, :], sigma[None, :],
+        jnp.asarray(level, jnp.int32).reshape(1),
+        block_e=block_e, interpret=interpret)
+    return out[0]

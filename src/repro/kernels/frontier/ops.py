@@ -2,10 +2,13 @@
 
 ``frontier_expand`` picks the Pallas kernel when the node state fits the
 VMEM budget and the edge list is block-aligned, otherwise the XLA
-segment-sum reference.  The jit'd API is what ``repro.core.bfs`` would
-call on TPU; on this CPU container the core BFS uses the XLA path
-directly (identical numerics — asserted by the kernel tests) so that
-lax.while_loop tracing stays fast.
+segment-sum reference.  It accepts both the unbatched contract
+(dist/sigma (V1,), scalar level) and the batched one (dist/sigma
+(B, V1), levels (B,)) — the batch width divides the VMEM row budget
+because dist+sigma+contrib of every sample column must stay resident.
+The jit'd API is what ``repro.core.bfs`` would call on TPU; on this CPU
+container the core BFS uses the XLA path directly (identical numerics —
+asserted by the kernel tests) so that lax.while_loop tracing stays fast.
 """
 from __future__ import annotations
 
@@ -14,16 +17,24 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import DEFAULT_BLOCK_E, frontier_expand_pallas
-from .ref import frontier_expand_ref
+from .kernel import (DEFAULT_BLOCK_E, frontier_expand_batched_pallas,
+                     frontier_expand_pallas)
+from .ref import frontier_expand_batched_ref, frontier_expand_ref
 
-# dist(4B) + sigma(4B) + contrib(4B) per row, 16 MiB VMEM, ~25% headroom
-_VMEM_ROW_BUDGET = 1_000_000
+# dist(4B) + sigma(4B) + contrib(4B) per (vertex, sample) cell, 16 MiB
+# VMEM, ~25% headroom
+_VMEM_CELL_BUDGET = 1_000_000
 
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_e"))
 def frontier_expand(src, dst, dist, sigma, level, *, use_pallas=False,
                     interpret=True, block_e=DEFAULT_BLOCK_E):
+    if dist.ndim == 2:
+        if use_pallas:
+            return frontier_expand_batched_pallas(
+                src, dst, dist, sigma, level, block_e=block_e,
+                interpret=interpret)
+        return frontier_expand_batched_ref(src, dst, dist, sigma, level)
     if use_pallas:
         return frontier_expand_pallas(src, dst, dist, sigma, level,
                                       block_e=block_e, interpret=interpret)
@@ -31,5 +42,6 @@ def frontier_expand(src, dst, dist, sigma, level, *, use_pallas=False,
 
 
 def pallas_supported(n_nodes: int, e_pad: int,
-                     block_e: int = DEFAULT_BLOCK_E) -> bool:
-    return (n_nodes + 1) <= _VMEM_ROW_BUDGET and e_pad % block_e == 0
+                     block_e: int = DEFAULT_BLOCK_E, batch: int = 1) -> bool:
+    return ((n_nodes + 1) * max(batch, 1) <= _VMEM_CELL_BUDGET
+            and e_pad % block_e == 0)

@@ -1,23 +1,34 @@
-"""Pure-jnp oracle for the BFS frontier-expansion kernel.
+"""Pure-jnp oracles for the BFS frontier-expansion kernel.
 
-Contract (one BFS level, edge-centric):
+Contract (one BFS level, edge-centric, batched over B concurrent
+samples):
 
-    contrib[v] = sum_{e: dst[e] == v} sigma[src[e]] * [dist[src[e]] == level]
+    contrib[b, v] = sum_{e: dst[e] == v}
+                        sigma[b, src[e]] * [dist[b, src[e]] == levels[b]]
 
 Inputs
-  src, dst : (E,) int32 — COO edge list; padded slots point at row V
-             (``n_nodes`` sink) whose dist is never equal to ``level``.
-  dist     : (V1,) int32  (V1 = V + 1, includes the sink row)
-  sigma    : (V1,) float32
-  level    : () int32
+  src, dst : (E,) int32 — COO edge list, shared by all samples; padded
+             slots point at row V (``n_nodes`` sink) whose dist is never
+             equal to a level.
+  dist     : (B, V1) int32  (V1 = V + 1, includes the sink row)
+  sigma    : (B, V1) float32
+  levels   : (B,) int32 — per-sample frontier depth
 
 Output
-  contrib  : (V1,) float32
+  contrib  : (B, V1) float32
+
+The unbatched oracle ``frontier_expand_ref`` is the B=1 case with the
+batch axis squeezed away (dist (V1,), sigma (V1,), level ()).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def frontier_expand_batched_ref(src, dst, dist, sigma, levels):
+    vals = jnp.where(dist[:, src] == levels[:, None], sigma[:, src], 0.0)
+    return jax.ops.segment_sum(vals.T, dst, num_segments=dist.shape[1]).T
 
 
 def frontier_expand_ref(src, dst, dist, sigma, level):

@@ -127,6 +127,15 @@ def _jit_cell(built, mesh):
                    donate_argnums=built.donate)
 
 
+def _cost_analysis(compiled) -> dict:
+    """Normalize Compiled.cost_analysis() across JAX versions (older
+    releases return a one-element list of dicts, newer ones a dict)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _compile_once(arch, cell_name, mesh, mesh_axes, loop, config=None):
     from repro.models.common import active_mesh
     built = arch.build(cell_name, config=config, loop=loop,
@@ -138,7 +147,7 @@ def _compile_once(arch, cell_name, mesh, mesh_axes, loop, config=None):
         t0 = time.time()
         compiled = lowered.compile()
         t_compile = time.time() - t0
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     stats = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),
@@ -385,7 +394,7 @@ def _write(record, out_dir):
 
 def run_betweenness(mesh_name: str, aggregation: str,
                     rmat_scale: int = 22, out_dir: str = OUT_DIR,
-                    n0: int = 1) -> dict:
+                    n0: int = 1, batch_size: int | None = None) -> dict:
     """Lower + compile one SPMD adaptive-sampling epoch (the paper's own
     workload) on the production mesh, with abstract graph arrays sized
     like an R-MAT 2^scale x 30 instance.  The BFS while-loops are counted
@@ -419,18 +428,29 @@ def run_betweenness(mesh_name: str, aggregation: str,
             sds((n_dev, v_pad), jnp.float32), sds((), jnp.int32),
             sds((n_dev, 2), jnp.uint32))
 
-    step = make_epoch_step_spmd(mesh, aggregation, v, v_pad, n0)
+    # lower the same lane run_kadabra executes: the batched sampler with
+    # the default B.  sample_batch clamps B to n0 (no point computing
+    # masked surplus columns), so the effective width — what the compiled
+    # program and run_kadabra at this epoch length actually run — is
+    # min(B, n0); record that, not the requested B.
+    if batch_size is None:
+        from repro.core.adaptive import DEFAULT_SAMPLE_BATCH_SIZE
+        batch_size = DEFAULT_SAMPLE_BATCH_SIZE
+    batch_size = max(1, min(batch_size, n0))
+    step = make_epoch_step_spmd(mesh, aggregation, v, v_pad, n0,
+                                batch_size=batch_size)
     with active_mesh(mesh):
         t0 = time.time()
         lowered = jax.jit(step).lower(*args)
         compiled = lowered.compile()
         t_compile = time.time() - t0
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     ma = compiled.memory_analysis()
     record = {
         "arch": "betweenness", "cell": f"epoch_rmat{rmat_scale}",
         "mesh": mesh_name, "chips": n_dev, "family": "graph-sampling",
         "basis": "exact", "variant": aggregation,
+        "sample_batch_size": batch_size,
         "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
         "full": {
             "flops": float(ca.get("flops", 0.0)),

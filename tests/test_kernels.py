@@ -5,11 +5,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import erdos_renyi_graph, grid_graph
-from repro.core.bfs import bfs_sssp
-from repro.kernels.frontier import (frontier_expand_pallas,
+from repro.core.bfs import bfs_sssp, bfs_sssp_batched
+from repro.kernels.frontier import (frontier_expand_batched_pallas,
+                                    frontier_expand_batched_ref,
+                                    frontier_expand_pallas,
                                     frontier_expand_ref)
 from repro.kernels.segsum import (gather_segment_sum_pallas,
                                   gather_segment_sum_ref)
@@ -31,6 +33,28 @@ def test_frontier_kernel_shape_sweep(n, deg, block_e):
         got = frontier_expand_pallas(g.src, g.dst, res.dist, res.sigma,
                                      level, block_e=block_e)
         np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6)
+
+
+@pytest.mark.parametrize("batch,block_e", [(4, 128), (8, 256), (5, 128)])
+def test_frontier_kernel_batched_heterogeneous_levels(batch, block_e):
+    """B>1 lane: per-sample levels, (block_e, B) MXU right-hand side."""
+    g = erdos_renyi_graph(400, 7.0, seed=batch)
+    rng = np.random.default_rng(batch)
+    sources = jnp.asarray(rng.integers(0, g.n_nodes, batch), jnp.int32)
+    res = bfs_sssp_batched(g, sources)
+    levels = jnp.asarray(rng.integers(0, 4, batch), jnp.int32)
+    ref = frontier_expand_batched_ref(g.src, g.dst, res.dist, res.sigma,
+                                      levels)
+    got = frontier_expand_batched_pallas(g.src, g.dst, res.dist, res.sigma,
+                                         levels, block_e=block_e)
+    assert got.shape == (batch, g.n_nodes + 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6)
+    # each row must equal the corresponding scalar expansion
+    for b in range(batch):
+        row = frontier_expand_ref(g.src, g.dst, res.dist[b], res.sigma[b],
+                                  levels[b])
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(row),
                                    rtol=1e-6)
 
 
