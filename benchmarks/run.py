@@ -18,6 +18,10 @@ report).  Laptop-scale stand-ins for the paper's instances:
            roofline report covers projected parallel behavior.
   fig4     Adaptive-sampling time vs graph size on R-MAT and hyperbolic
            graphs (paper Fig. 4), laptop scales.
+  node_blocked_sweep
+           Frontier-lane throughput (flat Pallas vs node-blocked CSC
+           Pallas vs XLA ref) at V in {2^12, 2^15, 2^17} — the two-level
+           kernel's scaling story past the flat kernel's VMEM cap.
   kernels  Pallas-kernel oracle microbenches (XLA path timings; the
            Pallas path is interpret-mode on CPU and not timed).
 
@@ -51,6 +55,31 @@ def _time_call(fn, *args, reps=3):
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _append_bench_record(record: dict):
+    """Append one run record to BENCH_sampling.json (run history: quick
+    runs must not clobber committed --full baselines)."""
+    import json
+    out_path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_sampling.json")
+    history = {"runs": []}
+    if os.path.exists(out_path):
+        try:
+            with open(out_path) as f:
+                prev = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            prev = None
+        if isinstance(prev, dict):
+            # single-record legacy format (no "runs") is itself a run
+            prev = prev.get("runs", [prev])
+        if isinstance(prev, list):
+            history["runs"] = prev
+    history["runs"].append(record)
+    with open(out_path, "w") as f:
+        json.dump(history, f, indent=1)
+    print(f"  appended run #{len(history['runs'])} to "
+          f"{os.path.abspath(out_path)}")
 
 
 # ---------------------------------------------------------------------------
@@ -193,7 +222,6 @@ def bench_batch_sweep(full: bool):
     the relaxation turns compute-bound.  Results also land in
     BENCH_sampling.json so later PRs have a trajectory to compare
     against."""
-    import json
     from repro.core import rmat_graph
     from repro.core.sampler import sample_batch
     g = rmat_graph(11 if full else 9, 8, seed=3)
@@ -215,9 +243,7 @@ def bench_batch_sweep(full: bool):
         rows.append({"batch_size": B, "samples_per_s": rate,
                      "us_per_sample": us / n,
                      "speedup_vs_b1": rate / base_rate})
-    out_path = os.path.join(os.path.dirname(__file__), "..",
-                            "BENCH_sampling.json")
-    record = {
+    _append_bench_record({
         "section": "batch_sweep",
         "instance": {"family": "rmat", "n_nodes": g.n_nodes,
                      "n_edges_undirected": g.n_edges_undirected,
@@ -227,26 +253,94 @@ def bench_batch_sweep(full: bool):
         "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
         "device": jax.devices()[0].platform,
         "results": rows,
-    }
-    # append to the run history so later PRs keep a trajectory (quick
-    # runs must not clobber committed --full baselines)
-    history = {"runs": []}
-    if os.path.exists(out_path):
-        try:
-            with open(out_path) as f:
-                prev = json.load(f)
-        except (json.JSONDecodeError, OSError):
-            prev = None
-        if isinstance(prev, dict):
-            # single-record legacy format (no "runs") is itself a run
-            prev = prev.get("runs", [prev])
-        if isinstance(prev, list):
-            history["runs"] = prev
-    history["runs"].append(record)
-    with open(out_path, "w") as f:
-        json.dump(history, f, indent=1)
-    print(f"  appended run #{len(history['runs'])} to "
-          f"{os.path.abspath(out_path)}")
+    })
+
+
+# ---------------------------------------------------------------------------
+# Node-blocked sweep: frontier-kernel throughput vs graph size V
+# ---------------------------------------------------------------------------
+
+def bench_node_blocked_sweep(full: bool):
+    """Per-level sampling throughput of the three frontier lanes (flat
+    Pallas, node-blocked CSC Pallas, XLA ref) at V in {2^12, 2^15, 2^17}.
+
+    One frontier expansion advances B concurrent samples by one BFS
+    level, so samples/s here = B / t_expand — the per-level throughput
+    (divide by the instance's mean search depth for end-to-end
+    samples/s; the ratio BETWEEN lanes is depth-independent).  At
+    V = 2^17 the flat kernel's (V+1) * B state is rejected by
+    ``pallas_supported`` — only the node-blocked lane (and the XLA ref)
+    can run, which is the regime the two-level kernel exists for.  On
+    this container both Pallas lanes execute in interpret mode, so the
+    absolute rates understate a real TPU massively; the node-blocked /
+    flat ratio is still meaningful (the two-level kernel does
+    (V+1)/block_v fewer one-hot MACs per edge).  Results append to
+    BENCH_sampling.json so the perf trajectory stays machine-readable.
+    """
+    from repro.core import build_csc_layout, erdos_renyi_graph
+    from repro.core.bfs import bfs_sssp_batched
+    from repro.kernels.frontier import (frontier_expand_batched_pallas,
+                                        frontier_expand_batched_ref,
+                                        frontier_expand_node_blocked_pallas,
+                                        pallas_supported)
+    B = 8
+    reps = 3 if full else 1
+    print("\n== node-blocked sweep: frontier lanes vs graph size ==")
+    print(f"  B={B} concurrent samples; samples/s = per-level throughput")
+    rows = []
+    for scale in [12, 15, 17]:
+        v = 1 << scale
+        g = erdos_renyi_graph(v, 4.0, seed=scale)
+        csc = build_csc_layout(g)
+        rng = np.random.default_rng(scale)
+        sources = jnp.asarray(rng.integers(0, v, B), jnp.int32)
+        res = jax.jit(bfs_sssp_batched)(g, sources)
+        dist, sigma = res.dist, res.sigma
+        levels = jnp.full((B,), 2, jnp.int32)
+        # eligibility: the flat kernel's all-resident (V+1, B) state
+        flat_ok = pallas_supported(g.n_nodes, g.e_pad, batch=B)
+        lanes = {
+            "xla_ref": jax.jit(lambda d, s: frontier_expand_batched_ref(
+                g.src, g.dst, d, s, levels)),
+            "node_blocked": jax.jit(
+                lambda d, s: frontier_expand_node_blocked_pallas(
+                    csc, d, s, levels)),
+        }
+        if flat_ok:
+            lanes["flat"] = jax.jit(
+                lambda d, s: frontier_expand_batched_pallas(
+                    g.src, g.dst, d, s, levels))
+        row = {"scale": scale, "n_nodes": v,
+               "n_edges_directed": int(g.n_edges),
+               "flat_supported": bool(flat_ok),
+               "block_v": csc.block_v, "block_e": csc.block_e,
+               "batch": B, "lanes": {}}
+        for name, fn in lanes.items():
+            us = _time_call(fn, dist, sigma, reps=reps)
+            rate = B / (us / 1e6)
+            row["lanes"][name] = {"us_per_expand": us, "samples_per_s": rate}
+            print(f"  V=2^{scale:<3} {name:<13} {us:>12,.0f} us/expand "
+                  f"{rate:>12,.1f} samples/s"
+                  + ("" if flat_ok or name != "node_blocked"
+                     else "   (flat kernel rejected: V*B over VMEM budget)"))
+            emit(f"node_blocked_sweep.s{scale}.{name}", us,
+                 f"samples_per_s={rate:.1f};flat_supported={flat_ok}")
+        if flat_ok:
+            ratio = (row["lanes"]["node_blocked"]["samples_per_s"]
+                     / row["lanes"]["flat"]["samples_per_s"])
+            row["node_blocked_vs_flat"] = ratio
+            print(f"           node_blocked/flat throughput: {ratio:.2f}x")
+        rows.append(row)
+    _append_bench_record({
+        "section": "node_blocked_sweep",
+        "instance": {"family": "erdos_renyi", "avg_degree": 4.0},
+        "metric": "samples_per_s = B / t(one frontier expansion); "
+                  "per-BFS-level throughput, interpret-mode Pallas",
+        "full": full,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "device": jax.devices()[0].platform,
+        "results": rows,
+    })
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +380,8 @@ def bench_kernels(full: bool):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    sections = ["table2", "fig2", "fig3", "fig4", "batch_sweep", "kernels"]
+    sections = ["table2", "fig2", "fig3", "fig4", "batch_sweep",
+                "node_blocked_sweep", "kernels"]
     ap.add_argument("section", nargs="?", default=None, choices=sections,
                     help="run a single section (same as --only)")
     ap.add_argument("--only", default=None, choices=sections)
@@ -299,6 +394,7 @@ def main():
     jobs = {
         "table2": bench_table2, "fig2": bench_fig2, "fig3": bench_fig3,
         "fig4": bench_fig4, "batch_sweep": bench_batch_sweep,
+        "node_blocked_sweep": bench_node_blocked_sweep,
         "kernels": bench_kernels,
     }
     for name, fn in jobs.items():

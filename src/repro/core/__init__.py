@@ -1,7 +1,8 @@
 # The paper's primary contribution: MPI-style parallel adaptive sampling
 # for betweenness approximation, mapped onto a JAX TPU mesh.
-from .graph import (Graph, build_graph, erdos_renyi_graph, from_edge_list,
-                    grid_graph, hyperbolic_graph, rmat_graph)
+from .graph import (CSCLayout, Graph, build_csc_layout, build_graph,
+                    erdos_renyi_graph, from_edge_list, grid_graph,
+                    hyperbolic_graph, rmat_graph)
 from .bfs import (BFSResult, BidirResult, bfs_sssp, bfs_sssp_batched,
                   bidirectional_bfs, bidirectional_bfs_batched)
 from .brandes import brandes_jax, brandes_numpy
@@ -16,7 +17,8 @@ from .adaptive import (AdaptiveConfig, BetweennessResult, EpochStats,
 from . import distributed
 
 __all__ = [
-    "Graph", "build_graph", "from_edge_list", "rmat_graph",
+    "Graph", "CSCLayout", "build_graph", "build_csc_layout",
+    "from_edge_list", "rmat_graph",
     "hyperbolic_graph", "grid_graph", "erdos_renyi_graph",
     "BFSResult", "BidirResult", "bfs_sssp", "bfs_sssp_batched",
     "bidirectional_bfs", "bidirectional_bfs_batched",

@@ -341,13 +341,26 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
 # Public entry points
 # ---------------------------------------------------------------------------
 
-def run_kadabra(graph: Graph, *, eps: float = 0.01, delta: float = 0.1,
+def run_kadabra(graph: Graph, *, eps: Optional[float] = None,
+                delta: Optional[float] = None,
                 key=None, mesh: Optional[Mesh] = None,
                 config: Optional[AdaptiveConfig] = None) -> BetweennessResult:
-    """Approximate betweenness with the paper's parallel KADABRA."""
-    cfg = config or AdaptiveConfig(eps=eps, delta=delta)
-    if config is None:
-        cfg = dataclasses.replace(cfg, eps=eps, delta=delta)
+    """Approximate betweenness with the paper's parallel KADABRA.
+
+    Explicitly passed ``eps``/``delta`` always take precedence over the
+    corresponding fields of ``config`` (the old guard only replaced them
+    when no config was given, silently ignoring explicit kwargs
+    otherwise); left as ``None`` they fall back to the config's values —
+    ``AdaptiveConfig``'s defaults (0.01 / 0.1) when no config either.
+    """
+    cfg = config if config is not None else AdaptiveConfig()
+    overrides = {}
+    if eps is not None:
+        overrides["eps"] = eps
+    if delta is not None:
+        overrides["delta"] = delta
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
     if key is None:
         key = jax.random.PRNGKey(0)
     if mesh is None or int(np.prod(mesh.devices.shape)) == 1:

@@ -12,17 +12,23 @@ edge-centric relaxation
 i.e. a masked SpMV over the COO edge list, expressed as a gather +
 ``segment_sum``.
 
-Everything in this module is *batched*: the state of B concurrent
-searches is a (B, V+1) frontier matrix and one relaxation is a masked
-SpMM that streams the edge list ONCE for all B searches —
+Everything in this module is *batched* and *vertex-major*: the state of
+B concurrent searches is a (V+1, B) frontier matrix — vertices down the
+rows, samples across the columns — and one relaxation is a masked SpMM
+that streams the edge list ONCE for all B searches —
 
-    contrib[b, v] = sum_{(u,v) in E} sigma[b, u] * [dist[b, u] == level[b]]
+    contrib[v, b] = sum_{(u,v) in E} sigma[u, b] * [dist[u, b] == level[b]]
 
 Relative to B independent SpMVs this amortizes the edge-index reads and
 turns the scatter into a wide segment reduction (on TPU: a one-hot MXU
 matmul with a (block_e, B) right-hand side — see ``repro.kernels.frontier``),
-raising arithmetic intensity by ~B on the memory-bound edge stream.  This
-is the intra-device analogue of the paper's epoch-level parallelism: each
+raising arithmetic intensity by ~B on the memory-bound edge stream.  The
+(V+1, B) orientation is exactly the kernels' native layout (both the
+flat and the two-level node-blocked kernel tile the vertex axis), so the
+batched state flows from init through both while_loops into the sampler
+without a single transpose — the previous sample-major (B, V+1) state
+paid three full-state copies per BFS level on TPU.  This is the
+intra-device analogue of the paper's epoch-level parallelism: each
 device relaxes B sample-frontiers per level instead of one.  Per-sample
 level counters, per-sample balanced-side selection and per-sample
 termination are handled by masking inside one shared ``while_loop`` that
@@ -31,7 +37,7 @@ runs until every search in the batch has met/finished.  The scalar
 
 Numerical note: shortest-path counts grow combinatorially (binomial on
 grid-like graphs), so float32 would overflow on high-diameter inputs.  We
-rescale each sample's ``sigma`` row by 1/max whenever its max crosses
+rescale each sample's ``sigma`` column by 1/max whenever its max crosses
 1e30.  Every consumer (path sampling, meeting-vertex selection) only uses
 *ratios* of sigma values under a uniform per-side scale, so the rescale is
 exact in distribution.  For small graphs the scale stays 1 and sigma
@@ -57,44 +63,59 @@ _SINK_DIST = jnp.int32(-3)   # dist value of the padding sink row
 
 
 class BFSResult(NamedTuple):
-    dist: jax.Array    # (..., V+1) int32; -1 = unreached, -3 = sink row
-    sigma: jax.Array   # (..., V+1) float32; rescaled shortest-path counts
-    levels: jax.Array  # (...) int32; number of levels expanded (= ecc(source))
+    """Result of (batched) single-source BFS with path counting.
+
+    ``dist``/``sigma`` are (V+1, B) vertex-major in the batched API and
+    (V+1,) in the scalar wrapper.  ``levels`` is the deepest *settled*
+    distance per sample: every vertex at distance <= levels has final
+    dist/sigma.  It equals ecc(source) only when the search ran to
+    frontier exhaustion; with ``stop_nodes`` the search exits as soon as
+    its stop node settles, so levels = dist(source, stop_node) — a
+    *lower bound* on the eccentricity, not the eccentricity itself.
+    Diameter estimation (``estimate_diameter``) therefore always runs
+    its sweeps without stop nodes.
+    """
+    dist: jax.Array    # (V+1, B) | (V+1,) int32; -1 unreached, -3 sink row
+    sigma: jax.Array   # (V+1, B) | (V+1,) float32; rescaled path counts
+    levels: jax.Array  # (B,) | () int32; deepest settled distance (see above)
 
 
 def _init_state(graph: Graph, sources):
-    """Batched BFS init: sources (B,) -> dist/sigma (B, V+1)."""
+    """Batched BFS init: sources (B,) -> vertex-major dist/sigma (V+1, B)."""
     b = sources.shape[0]
     v1 = graph.n_nodes + 1
-    rows = jnp.arange(b)
-    dist = jnp.full((b, v1), -1, jnp.int32)
-    dist = dist.at[:, graph.n_nodes].set(_SINK_DIST)
-    dist = dist.at[rows, sources].set(0)
-    sigma = jnp.zeros((b, v1), jnp.float32).at[rows, sources].set(1.0)
+    cols = jnp.arange(b)
+    dist = jnp.full((v1, b), -1, jnp.int32)
+    dist = dist.at[graph.n_nodes, :].set(_SINK_DIST)
+    dist = dist.at[sources, cols].set(0)
+    sigma = jnp.zeros((v1, b), jnp.float32).at[sources, cols].set(1.0)
     return dist, sigma
 
 
 def _expand_level(graph: Graph, dist, sigma, level, active):
     """One batched edge-centric BFS relaxation (a masked SpMM).
 
-    dist/sigma are (B, V+1), ``level`` is the per-sample (B,) frontier
-    depth and ``active`` a (B,) mask — inactive rows are left untouched.
-    The edge list is gathered once; the segment reduction carries all B
-    columns.  Returns updated (dist, sigma, n_new (B,)).
+    dist/sigma are vertex-major (V+1, B), ``level`` is the per-sample
+    (B,) frontier depth and ``active`` a (B,) mask — inactive columns
+    are left untouched.  The edge list is gathered once; the segment
+    reduction carries all B columns.  This is the XLA formulation of the
+    ``repro.kernels.frontier`` contract (same layout, same semantics —
+    the kernels drop in without any transpose).  Returns updated
+    (dist, sigma, n_new (B,)).
     """
-    src_vals = jnp.where(dist[:, graph.src] == level[:, None],
-                         sigma[:, graph.src], 0.0)          # (B, E) gather
-    contrib = jax.ops.segment_sum(src_vals.T, graph.dst,
-                                  num_segments=graph.n_nodes + 1).T
-    new = (contrib > 0) & (dist == -1) & active[:, None]
-    dist = jnp.where(new, level[:, None] + 1, dist)
+    src_vals = jnp.where(dist[graph.src, :] == level[None, :],
+                         sigma[graph.src, :], 0.0)         # (E, B) gather
+    contrib = jax.ops.segment_sum(src_vals, graph.dst,
+                                  num_segments=graph.n_nodes + 1)
+    new = (contrib > 0) & (dist == -1) & active[None, :]
+    dist = jnp.where(new, level[None, :] + 1, dist)
     sigma = jnp.where(new, contrib, sigma)
-    # rescale per sample to avoid float32 overflow (uniform row scale =>
-    # exact ratios)
-    m = jnp.max(jnp.where(new, sigma, 0.0), axis=1, keepdims=True)
+    # rescale per sample to avoid float32 overflow (uniform column scale
+    # => exact ratios)
+    m = jnp.max(jnp.where(new, sigma, 0.0), axis=0, keepdims=True)
     scale = jnp.where(m > _RESCALE_THRESHOLD, 1.0 / m, 1.0)
     sigma = sigma * scale
-    return dist, sigma, jnp.sum(new.astype(jnp.int32), axis=1)
+    return dist, sigma, jnp.sum(new.astype(jnp.int32), axis=0)
 
 
 def bfs_sssp_batched(graph: Graph, sources, *, stop_nodes=None) -> BFSResult:
@@ -104,17 +125,18 @@ def bfs_sssp_batched(graph: Graph, sources, *, stop_nodes=None) -> BFSResult:
     level and runs until every search exhausted its frontier.  If
     ``stop_nodes`` (B,) is given, each search additionally stops as soon
     as its own stop node is settled (the whole level is still fully
-    expanded, so sigma[b, stop_nodes[b]] is final).
+    expanded, so sigma[stop_nodes[b], b] is final) — in that case
+    ``levels`` under-reports the eccentricity (see :class:`BFSResult`).
     """
     sources = jnp.asarray(sources, jnp.int32)
     b = sources.shape[0]
     dist0, sigma0 = _init_state(graph, sources)
-    rows = jnp.arange(b)
+    cols = jnp.arange(b)
 
     def go_mask(dist, level, n_new):
         go = (n_new > 0) & (level < graph.n_nodes)
         if stop_nodes is not None:
-            go = go & (dist[rows, stop_nodes] < 0)
+            go = go & (dist[stop_nodes, cols] < 0)
         return go
 
     def cond(state):
@@ -132,42 +154,46 @@ def bfs_sssp_batched(graph: Graph, sources, *, stop_nodes=None) -> BFSResult:
     dist, sigma, _levels, _ = jax.lax.while_loop(
         cond, body, (dist0, sigma0, jnp.zeros((b,), jnp.int32),
                      jnp.ones((b,), jnp.int32)))
-    # eccentricity = deepest level actually reached per sample (the loop
-    # counter overshoots by one when a search exits on an empty frontier)
-    ecc = jnp.max(jnp.where(dist >= 0, dist, 0), axis=1)
-    return BFSResult(dist, sigma, ecc)
+    # deepest level actually settled per sample (the loop counter
+    # overshoots by one when a search exits on an empty frontier); equals
+    # ecc(source) iff the search ran to exhaustion
+    settled = jnp.max(jnp.where(dist >= 0, dist, 0), axis=0)
+    return BFSResult(dist, sigma, settled)
 
 
 def bfs_sssp(graph: Graph, source, *, stop_node=None) -> BFSResult:
     """Full single-source BFS with path counting (Brandes forward phase).
 
-    Thin B=1 wrapper over :func:`bfs_sssp_batched`.  If ``stop_node`` is
-    given, stops as soon as that node is settled.
+    Thin B=1 wrapper over :func:`bfs_sssp_batched` (the batch column is
+    squeezed away: dist/sigma come back as (V+1,)).  If ``stop_node`` is
+    given, stops as soon as that node is settled — ``levels`` then
+    reports dist(source, stop_node), not the eccentricity.
     """
     sources = jnp.asarray(source, jnp.int32).reshape(1)
     stops = (None if stop_node is None
              else jnp.asarray(stop_node, jnp.int32).reshape(1))
     res = bfs_sssp_batched(graph, sources, stop_nodes=stops)
-    return BFSResult(res.dist[0], res.sigma[0], res.levels[0])
+    return BFSResult(res.dist[:, 0], res.sigma[:, 0], res.levels[0])
 
 
 class BidirResult(NamedTuple):
     """State of balanced bidirectional BFS after the frontiers met.
 
-    All fields carry a leading batch axis in the batched API (squeezed
-    away by the scalar wrapper).  ``d`` is the s-t distance (or -1 if
-    s,t are disconnected).  ``split`` is the s-side level L such that
-    every shortest s-t path crosses exactly one vertex w with
+    ``dist_*``/``sigma_*`` are vertex-major (V+1, B) in the batched API
+    ((V+1,) from the scalar wrapper); ``d``/``split`` are (B,) (scalars
+    from the wrapper).  ``d`` is the s-t distance (or -1 if s,t are
+    disconnected).  ``split`` is the s-side level L such that every
+    shortest s-t path crosses exactly one vertex w with
     dist_s(w) == L; the set of such vertices carries weight
     sigma_s(w) * sigma_t(w).  Both sides' sigma values are final for
     all vertices at levels <= their expanded radius.
     """
-    dist_s: jax.Array   # (..., V+1) int32
-    dist_t: jax.Array   # (..., V+1) int32
-    sigma_s: jax.Array  # (..., V+1) float32
-    sigma_t: jax.Array  # (..., V+1) float32
-    d: jax.Array        # (...) int32
-    split: jax.Array    # (...) int32
+    dist_s: jax.Array   # (V+1, B) | (V+1,) int32
+    dist_t: jax.Array   # (V+1, B) | (V+1,) int32
+    sigma_s: jax.Array  # (V+1, B) | (V+1,) float32
+    sigma_t: jax.Array  # (V+1, B) | (V+1,) float32
+    d: jax.Array        # (B,) | () int32
+    split: jax.Array    # (B,) | () int32
 
 
 def bidirectional_bfs_batched(graph: Graph, s, t, *,
@@ -176,7 +202,7 @@ def bidirectional_bfs_batched(graph: Graph, s, t, *,
 
     ``s``/``t`` are (B,).  Each iteration every still-active sample
     expands its own smaller frontier (the "balanced" strategy of KADABRA):
-    the per-sample chosen side is gathered into one (B, V+1) matrix, a
+    the per-sample chosen side is gathered into one (V+1, B) matrix, a
     single batched relaxation streams the edge list once for all B
     searches, and the result is scattered back to the chosen side.  A
     sample leaves the loop when some vertex has a final distance from both
@@ -195,7 +221,7 @@ def bidirectional_bfs_batched(graph: Graph, s, t, *,
 
     def active_mask(dist_s, rad_s, dist_t, rad_t, alive):
         # met: some vertex settled from both sides
-        met = jnp.any((dist_s >= 0) & (dist_t >= 0), axis=1)
+        met = jnp.any((dist_s >= 0) & (dist_t >= 0), axis=0)
         return (~met) & alive & (rad_s + rad_t < max_levels)
 
     # state: dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive
@@ -206,23 +232,23 @@ def bidirectional_bfs_batched(graph: Graph, s, t, *,
     def body(st):
         dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive = st
         active = active_mask(dist_s, rad_s, dist_t, rad_t, alive)
-        fs = jnp.sum((dist_s == rad_s[:, None]).astype(jnp.int32), axis=1)
-        ft = jnp.sum((dist_t == rad_t[:, None]).astype(jnp.int32), axis=1)
+        fs = jnp.sum((dist_s == rad_s[None, :]).astype(jnp.int32), axis=0)
+        ft = jnp.sum((dist_t == rad_t[None, :]).astype(jnp.int32), axis=0)
         # Balanced rule, per sample: expand the smaller frontier; if a
         # side's frontier died out the pair is disconnected.
         pick_s = fs <= ft
-        exp_dist = jnp.where(pick_s[:, None], dist_s, dist_t)
-        exp_sigma = jnp.where(pick_s[:, None], sigma_s, sigma_t)
+        exp_dist = jnp.where(pick_s[None, :], dist_s, dist_t)
+        exp_sigma = jnp.where(pick_s[None, :], sigma_s, sigma_t)
         exp_level = jnp.where(pick_s, rad_s, rad_t)
         nd, ns, n_new = _expand_level(graph, exp_dist, exp_sigma, exp_level,
                                       active)
         upd_s = pick_s & active
         upd_t = (~pick_s) & active
-        dist_s = jnp.where(upd_s[:, None], nd, dist_s)
-        sigma_s = jnp.where(upd_s[:, None], ns, sigma_s)
+        dist_s = jnp.where(upd_s[None, :], nd, dist_s)
+        sigma_s = jnp.where(upd_s[None, :], ns, sigma_s)
         rad_s = jnp.where(upd_s, rad_s + 1, rad_s)
-        dist_t = jnp.where(upd_t[:, None], nd, dist_t)
-        sigma_t = jnp.where(upd_t[:, None], ns, sigma_t)
+        dist_t = jnp.where(upd_t[None, :], nd, dist_t)
+        sigma_t = jnp.where(upd_t[None, :], ns, sigma_t)
         rad_t = jnp.where(upd_t, rad_t + 1, rad_t)
         alive = jnp.where(active, n_new > 0, alive)
         return dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive
@@ -235,7 +261,7 @@ def bidirectional_bfs_batched(graph: Graph, s, t, *,
 
     both = (dist_s >= 0) & (dist_t >= 0)
     dsum = jnp.where(both, dist_s + dist_t, jnp.iinfo(jnp.int32).max)
-    d = jnp.min(dsum, axis=1)
+    d = jnp.min(dsum, axis=0)
     connected = d < jnp.iinfo(jnp.int32).max
     d = jnp.where(connected, d, -1)
     # Split level: all vertices with dist_s == split are settled on the s
@@ -256,5 +282,5 @@ def bidirectional_bfs(graph: Graph, s, t, *,
         jnp.asarray(s, jnp.int32).reshape(1),
         jnp.asarray(t, jnp.int32).reshape(1),
         max_levels=max_levels)
-    return BidirResult(res.dist_s[0], res.dist_t[0], res.sigma_s[0],
-                       res.sigma_t[0], res.d[0], res.split[0])
+    return BidirResult(res.dist_s[:, 0], res.dist_t[:, 0], res.sigma_s[:, 0],
+                       res.sigma_t[:, 0], res.d[0], res.split[0])

@@ -11,11 +11,15 @@ the same edge-centric BFS as the sampler:
   * upper bound            = 2 * min(ecc(seed), ecc(u))   [undirected]
 
 Double sweep is known to be exact on most real-world complex networks and
-the upper bound only loosens omega (never the guarantee).  Every BFS here
-is one device-local computation; with many devices we run independent
-sweeps from different seeds in parallel and take the best bounds (a small
-beyond-paper improvement: the paper runs this phase sequentially and it
-becomes its scalability bottleneck at P > 8, cf. its Fig. 2b).
+the upper bound only loosens omega (never the guarantee).  All K seed
+chains run as ONE ``bfs_sssp_batched`` call per sweep phase (K seeds
+batched, then their K far-vertices batched), so phase 1 — the paper's
+Fig. 2b scalability bottleneck, which it runs as sequential scalar BFS —
+uses the same batched (V+1, K) vertex-major relaxation lane as the
+sampling phase and streams the edge list once per level for all chains.
+Every BFS runs *without* stop nodes, so ``BFSResult.levels`` really is
+the eccentricity (with an early stop it would only be a lower bound —
+see the BFSResult contract).
 """
 from __future__ import annotations
 
@@ -24,7 +28,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bfs import bfs_sssp
+from .bfs import bfs_sssp_batched
 from .graph import Graph
 
 __all__ = ["DiameterEstimate", "estimate_diameter"]
@@ -36,30 +40,30 @@ class DiameterEstimate(NamedTuple):
     vertex_diameter: jax.Array  # () int32 — upper bound on VD = upper + 1
 
 
-def _sweep(graph: Graph, seed):
-    res = bfs_sssp(graph, seed)
-    ecc = res.levels
-    # farthest *reached* vertex (ties broken towards lower id)
-    far = jnp.argmax(jnp.where(res.dist >= 0, res.dist, -1)[: graph.n_nodes])
-    return ecc, far
+def _sweep_batched(graph: Graph, seeds):
+    """One batched sweep: K seeds -> (ecc (K,), farthest vertex (K,))."""
+    res = bfs_sssp_batched(graph, seeds)
+    # farthest *reached* vertex per chain (ties broken towards lower id)
+    far = jnp.argmax(jnp.where(res.dist >= 0, res.dist,
+                               -1)[: graph.n_nodes, :], axis=0)
+    return res.levels, far.astype(jnp.int32)
 
 
 def estimate_diameter(graph: Graph, key=None, n_sweeps: int = 2) -> DiameterEstimate:
-    """Double-sweep diameter bounds; extra sweeps tighten the bounds."""
+    """Double-sweep diameter bounds; extra sweeps tighten the bounds.
+
+    ``n_sweeps - 1`` independent chains (minimum one) run concurrently:
+    each phase is a single batched BFS over all chains' frontiers.
+    """
     if key is None:
         key = jax.random.PRNGKey(0)
     seeds = jax.random.randint(key, (max(1, n_sweeps - 1),), 0, graph.n_nodes)
 
-    def one_chain(seed):
-        ecc0, far0 = _sweep(graph, seed)
-        ecc1, _far1 = _sweep(graph, far0)
-        lower = ecc1                       # d(far0, far1) realized by BFS
-        upper = 2 * jnp.minimum(ecc0, ecc1)
-        upper = jnp.maximum(upper, lower)  # keep the interval consistent
-        return lower, upper
-
-    lowers, uppers = jax.lax.map(one_chain, seeds)
+    ecc0, far0 = _sweep_batched(graph, seeds)
+    ecc1, _far1 = _sweep_batched(graph, far0)
+    lowers = ecc1                       # d(far0, far1) realized by BFS
+    uppers = 2 * jnp.minimum(ecc0, ecc1)
+    uppers = jnp.maximum(uppers, lowers)  # keep each interval consistent
     lower = jnp.max(lowers)
-    upper = jnp.min(uppers)
-    upper = jnp.maximum(upper, lower)
+    upper = jnp.maximum(jnp.min(uppers), lower)
     return DiameterEstimate(lower, upper, upper + 1)

@@ -8,7 +8,7 @@ is replicated across every device of the mesh.  Only the *sampling state*
 (the per-device count vectors, i.e. the "state frames" of the paper) is
 ever communicated.
 
-Two edge layouts are kept side by side:
+Three edge layouts are kept side by side:
 
 * CSR (``indptr``/``indices``) — used by the backward path-sampling walk
   (per-node neighbor slices) and by the neighbor sampler.
@@ -17,6 +17,13 @@ Two edge layouts are kept side by side:
   ``segment_sum`` over the edge list; the Pallas kernel in
   ``repro.kernels.frontier`` implements the same contract with explicit
   VMEM tiling).
+* node-blocked CSC (:class:`CSCLayout`, built on demand by
+  :func:`build_csc_layout`) — edges bucketed by *destination-node block*
+  of ``block_v`` vertices, each bucket padded to a multiple of
+  ``block_e``.  This is the layout of the two-level frontier kernel: the
+  grid walks (node block, edge block) cells, only a (block_v, B) contrib
+  tile is VMEM-resident per step, so the kernel scales past the
+  all-state-resident V * B cap of the flat layout.
 
 All arrays are padded to a multiple of ``pad_to`` so BlockSpec tilings in
 the Pallas kernels stay aligned.  Padded edges point ``src = dst =
@@ -35,7 +42,9 @@ import numpy as np
 
 __all__ = [
     "Graph",
+    "CSCLayout",
     "build_graph",
+    "build_csc_layout",
     "from_edge_list",
     "rmat_graph",
     "hyperbolic_graph",
@@ -138,6 +147,114 @@ def build_graph(src: np.ndarray, dst: np.ndarray, n_nodes: int, *,
         n_nodes=int(n_nodes),
         n_edges=n_edges,
         max_degree=max_degree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Node-blocked CSC layout (the two-level frontier kernel's edge order)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSCLayout:
+    """Edges bucketed by destination-node block (CSC order), block-padded.
+
+    Vertices (including the sink row ``n_nodes``) are cut into
+    ``n_node_blocks`` blocks of ``block_v``.  Every edge lands in the
+    bucket of its *destination*; each bucket's edge range is padded with
+    sink->sink edges to a multiple of ``block_e`` (at least one block, so
+    every contrib tile is initialized even for empty buckets).  The
+    buckets are concatenated, giving ``n_edge_blocks`` edge blocks total;
+    ``block_nb[k]`` is the node block edge block ``k`` scatters into and
+    ``block_first[k]`` flags the first edge block of each bucket (the
+    kernel zeroes its contrib tile there).  This is the flattened
+    (node block, edge block) two-level grid: buckets have *variable*
+    length, so flattening avoids the rectangular-grid padding blowup a
+    power-law degree distribution would cause (the hub bucket would
+    otherwise size every bucket).
+    """
+
+    src: jax.Array        # (n_edge_blocks * block_e,) int32
+    dst: jax.Array        # (n_edge_blocks * block_e,) int32 — sorted by
+                          #   dst // block_v (stable, so CSR order within)
+    block_nb: jax.Array   # (n_edge_blocks,) int32 — dest node block per
+                          #   edge block (scalar-prefetched by the kernel)
+    block_first: jax.Array  # (n_edge_blocks,) int32 — 1 on each bucket's
+                          #   first edge block
+    block_v: int          # static: vertices per node block
+    block_e: int          # static: edges per edge block
+    n_node_blocks: int    # static
+    n_edge_blocks: int    # static
+    n_nodes: int          # static: logical vertex count (sink row = this)
+
+    def tree_flatten(self):
+        leaves = (self.src, self.dst, self.block_nb, self.block_first)
+        aux = (self.block_v, self.block_e, self.n_node_blocks,
+               self.n_edge_blocks, self.n_nodes)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def v_pad(self) -> int:
+        """Padded vertex count covered by the node-block tiling."""
+        return self.n_node_blocks * self.block_v
+
+    @property
+    def e_slots(self) -> int:
+        return int(self.src.shape[0])
+
+
+def build_csc_layout(graph: Graph, *, block_v: int = 512,
+                     block_e: int = 1024) -> CSCLayout:
+    """Bucket ``graph``'s edges by destination-node block of ``block_v``.
+
+    Pure numpy, one stable sort over the edge list; call once per
+    (graph, blocking) and reuse — the layout is immutable.  Padded slots
+    are sink->sink edges (``src = dst = n_nodes``): their gathered value
+    is 0 (the sink's dist never matches a frontier level), and their
+    local destination row either falls outside the tile or hits the sink
+    row with a 0 value, so they contribute exactly nothing.
+    """
+    v1 = graph.n_nodes + 1
+    n_nb = -(-v1 // block_v)
+    src = np.asarray(graph.src[: graph.n_edges], dtype=np.int64)
+    dst = np.asarray(graph.dst[: graph.n_edges], dtype=np.int64)
+    nb = dst // block_v
+    counts = np.bincount(nb, minlength=n_nb).astype(np.int64)
+    # per-bucket slot count: padded to block_e, at least one block each
+    slots = np.maximum(block_e, -(-counts // block_e) * block_e)
+    slot_starts = np.zeros(n_nb + 1, np.int64)
+    np.cumsum(slots, out=slot_starts[1:])
+    total = int(slot_starts[-1])
+    out_src = np.full(total, graph.n_nodes, np.int32)
+    out_dst = np.full(total, graph.n_nodes, np.int32)
+    order = np.argsort(nb, kind="stable")
+    edge_starts = np.zeros(n_nb + 1, np.int64)
+    np.cumsum(counts, out=edge_starts[1:])
+    nb_sorted = nb[order]
+    pos = (slot_starts[nb_sorted]
+           + np.arange(order.shape[0], dtype=np.int64)
+           - edge_starts[nb_sorted])
+    out_src[pos] = src[order]
+    out_dst[pos] = dst[order]
+    eblocks = slots // block_e
+    block_nb = np.repeat(np.arange(n_nb, dtype=np.int32),
+                         eblocks.astype(np.int64))
+    block_first = np.zeros(block_nb.shape[0], np.int32)
+    block_first[slot_starts[:-1] // block_e] = 1
+    return CSCLayout(
+        src=jnp.asarray(out_src),
+        dst=jnp.asarray(out_dst),
+        block_nb=jnp.asarray(block_nb),
+        block_first=jnp.asarray(block_first),
+        block_v=int(block_v),
+        block_e=int(block_e),
+        n_node_blocks=int(n_nb),
+        n_edge_blocks=int(block_nb.shape[0]),
+        n_nodes=int(graph.n_nodes),
     )
 
 

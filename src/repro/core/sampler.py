@@ -20,7 +20,7 @@ Uniform path sampling is factorized through the BFS DAG:
     dist_s(w) == L (the split level returned by the bidirectional search);
     the number of paths through w is sigma_s(w) * sigma_t(w), so w is
     drawn with probability proportional to that product (a batched
-    row-wise Gumbel-max over the (B, V+1) weight matrix);
+    per-column Gumbel-max over the vertex-major (V+1, B) weight matrix);
   * from w we walk backwards to s: at a vertex v on level l, the
     predecessor u in N(v) with dist_s(u) == l-1 is drawn with probability
     sigma_s(u) / sum(sigma_s over predecessors); symmetrically towards t.
@@ -72,11 +72,13 @@ def sample_pair(key, n_nodes: int):
     return s[0], t[0]
 
 
-def _gumbel_argmax(key, logw):
-    """Row-wise Gumbel-max draw; works on (C,) and (B, C) weight arrays."""
+def _gumbel_argmax(key, logw, axis=-1):
+    """Gumbel-max draw along ``axis``; works on (C,) weight vectors and
+    on vertex-major (V+1, B) weight matrices (axis=0: one draw per sample
+    column)."""
     g = -jnp.log(-jnp.log(jax.random.uniform(
         key, logw.shape, minval=1e-20, maxval=1.0)))
-    return jnp.argmax(logw + g, axis=-1)
+    return jnp.argmax(logw + g, axis=axis)
 
 
 def _sample_predecessor(graph: Graph, key, v, level, dist, sigma):
@@ -129,9 +131,10 @@ def _walk_to_source(graph: Graph, key, start_node, start_level, dist, sigma,
 def sample_path_batched(graph: Graph, key, batch: int) -> PathSample:
     """Take ``batch`` KADABRA samples concurrently.
 
-    One batched bidirectional BFS serves all B pairs (shared edge stream);
-    the meeting-vertex draw is a row-wise Gumbel-max over the (B, V+1)
-    path-count products; the two backward walks are vmapped.  Returns a
+    One batched bidirectional BFS serves all B pairs (shared edge
+    stream, vertex-major (V+1, B) state); the meeting-vertex draw is a
+    per-column Gumbel-max over the path-count products; the two backward
+    walks are vmapped over the state's sample axis.  Returns a
     PathSample whose fields have a leading (B,) axis — fold ``contrib``
     with one sum over axis 0 to get the per-round count increment.
     """
@@ -141,15 +144,16 @@ def sample_path_batched(graph: Graph, key, batch: int) -> PathSample:
     valid = res.d >= 0                                          # (B,)
 
     # --- choose the meeting vertices w ~ sigma_s(w) * sigma_t(w) --------
-    on_split = ((res.dist_s == res.split[:, None])
-                & (res.dist_t == (res.d - res.split)[:, None]))
+    # (vertex-major (V+1, B) BFS state: one Gumbel-max per sample column)
+    on_split = ((res.dist_s == res.split[None, :])
+                & (res.dist_t == (res.d - res.split)[None, :]))
     logw = jnp.where(
-        on_split & valid[:, None],
+        on_split & valid[None, :],
         jnp.log(jnp.maximum(res.sigma_s, 1e-30))
         + jnp.log(jnp.maximum(res.sigma_t, 1e-30)),
         _NEG_INF,
     )
-    w = _gumbel_argmax(k_meet, logw).astype(jnp.int32)          # (B,)
+    w = _gumbel_argmax(k_meet, logw, axis=0).astype(jnp.int32)  # (B,)
 
     contrib = jnp.zeros((batch, graph.n_nodes + 1), jnp.float32)
     # w itself is internal iff it is neither s (split==0) nor t (split==d)
@@ -158,9 +162,12 @@ def sample_path_batched(graph: Graph, key, batch: int) -> PathSample:
         jnp.where(w_internal, 1.0, 0.0))
 
     # --- backward walks; skipped naturally when levels are 0/invalid ----
+    # (each walk reads its own sample's (V+1,) column: in_axes=1 on the
+    # vertex-major state; contrib stays sample-major — it is reduced over
+    # samples right after, never streamed through the kernels)
     lvl_s = jnp.where(valid, res.split, 0)
     lvl_t = jnp.where(valid, res.d - res.split, 0)
-    walk = jax.vmap(_walk_to_source, in_axes=(None, 0, 0, 0, 0, 0, 0))
+    walk = jax.vmap(_walk_to_source, in_axes=(None, 0, 0, 0, 1, 1, 0))
     contrib = walk(graph, jax.random.split(k_s, batch), w, lvl_s,
                    res.dist_s, res.sigma_s, contrib)
     contrib = walk(graph, jax.random.split(k_t, batch), w, lvl_t,

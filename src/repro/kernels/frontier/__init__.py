@@ -1,7 +1,14 @@
-from .kernel import frontier_expand_batched_pallas, frontier_expand_pallas
-from .ops import frontier_expand, pallas_supported
-from .ref import frontier_expand_batched_ref, frontier_expand_ref
+from .kernel import (frontier_expand_batched_pallas,
+                     frontier_expand_node_blocked_pallas,
+                     frontier_expand_pallas)
+from .ops import (frontier_expand, node_blocked_supported, pallas_supported,
+                  select_route)
+from .ref import (frontier_expand_batched_ref,
+                  frontier_expand_node_blocked_ref, frontier_expand_ref)
 
 __all__ = ["frontier_expand", "frontier_expand_batched_pallas",
-           "frontier_expand_batched_ref", "frontier_expand_pallas",
-           "frontier_expand_ref", "pallas_supported"]
+           "frontier_expand_batched_ref",
+           "frontier_expand_node_blocked_pallas",
+           "frontier_expand_node_blocked_ref", "frontier_expand_pallas",
+           "frontier_expand_ref", "node_blocked_supported",
+           "pallas_supported", "select_route"]

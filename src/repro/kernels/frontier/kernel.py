@@ -1,36 +1,58 @@
-"""Pallas TPU kernel: batched edge-centric BFS frontier expansion.
+"""Pallas TPU kernels: batched edge-centric BFS frontier expansion.
 
 This is the hot loop of the paper's sampler (one bidirectional BFS per
 sample; each level is one frontier expansion).  The GPU/CPU formulation
 is a queue + atomics; the TPU-native adaptation is:
 
-  * edges live in HBM as a COO list, streamed through VMEM in blocks of
-    ``block_e`` (BlockSpec over the edge dimension — purely sequential,
-    perfectly prefetchable);
-  * the frontier state (dist, sigma) of all B concurrent samples is
-    resident in VMEM across all grid steps in vertex-major (V+1, B)
-    layout (BlockSpec index_map pinning block 0) — random gathers stay
-    on-chip instead of hitting HBM;
+  * edges live in HBM as an index list, streamed through VMEM in blocks
+    of ``block_e`` (BlockSpec over the edge dimension — purely
+    sequential, perfectly prefetchable);
+  * the BFS state (dist, sigma, contrib) of all B concurrent samples is
+    *vertex-major* ``(V+1, B)`` — the layout ``repro.core.bfs`` now keeps
+    end-to-end, so no transposes happen on the way in or out;
   * the scatter-accumulate into ``contrib`` is a *one-hot matmul*:
-    scattering the (block_e, B) value matrix to rows ``dst_local`` is
-    onehot(dst)ᵀ @ vals — a (block_v x block_e) x (block_e x B) MXU
-    product.  With B > 1 the systolic array finally has a real
-    right-hand side: the edge block (and the one-hot operand built from
-    it) is read ONCE for all B samples, so arithmetic intensity on the
-    edge stream grows linearly in B.  B = 1 degenerates to the width-1
-    product of the unbatched kernel.
+    scattering the (block_e, B) value matrix to rows ``dst`` is
+    onehot(dst)ᵀ @ vals — a (rows x block_e) x (block_e x B) MXU
+    product.  With B > 1 the systolic array has a real right-hand side:
+    the edge block (and the one-hot operand built from it) is read ONCE
+    for all B samples, so arithmetic intensity on the edge stream grows
+    linearly in B.
+
+Two kernels share that skeleton:
+
+``frontier_expand_batched_pallas`` — the *flat* (single-level) kernel.
+Grid ``(E_pad / block_e,)``; the whole (V+1, B) dist/sigma/contrib state
+is VMEM-resident across all steps and the one-hot operand is
+(V+1, block_e).  Fast while V * B fits in VMEM (~1.3M cells in 16 MiB at
+12 B per cell, i.e. ~20K vertices at B=64), impossible beyond.
+
+``frontier_expand_node_blocked_pallas`` — the *two-level* (node-blocked
+CSC) kernel that lifts the cap.  Edges are pre-bucketed by
+destination-node block (:class:`repro.core.graph.CSCLayout`); the grid
+walks the flattened (node block, edge block) cells.  Per step only the
+``(block_v, B)`` contrib tile of the current node block is VMEM-resident
+(zeroed on each bucket's first edge block via the scalar-prefetched
+``block_first`` flags; the output index map follows ``block_nb``), the
+one-hot operand shrinks from (V+1, block_e) to (block_v, block_e), and
+dist/sigma stay in ``pltpu.ANY`` memory — gathered per edge block rather
+than pinned whole.  VMEM residency is O(block_v * B + block_v * block_e)
+independent of V, so the kernel reaches million-vertex graphs; it also
+does V/block_v fewer one-hot MACs than the flat kernel (each edge is
+compared against one tile of rows, not all of them).  Revisits of an
+output tile are consecutive (buckets are contiguous), which is exactly
+the accumulation pattern Mosaic supports.
 
 On real TPUs pick B as a multiple of the f32 lane tiling (8; ideally 128
-to fill the MXU); interpret mode accepts any B.
+to fill the MXU); the flat kernel compiles with ``interpret=False``.
+The node-blocked kernel's per-edge gather from ``pltpu.ANY`` refs is
+exercised in interpret mode only: a compiled Mosaic version must stage
+the per-block state slices through explicit ``pltpu.make_async_copy``
+DMA instead of indexing the ANY refs directly (see the ROADMAP
+follow-up) — the blocking, layout and parity contract here are the
+hardware design, the DMA plumbing is not written yet.
 
-The VMEM-residency requirement bounds V * B: dist+sigma+contrib = 12
-bytes per (vertex, sample) cell (~1.3M cells in 16 MiB VMEM, i.e. ~20K
-vertices at B=64).  ``ops.py`` dispatches to the XLA segment-sum path
-above that size; DESIGN.md and ROADMAP discuss the two-level
-(node-blocked CSC) extension for billion-edge graphs.
-
-Grid: (E_pad / block_e,).  All shapes static; padded edges target the sink
-row V (dist = -3) and contribute exactly 0.
+All shapes static; padded edges target the sink row V (dist = -3) and
+contribute exactly 0.
 """
 from __future__ import annotations
 
@@ -39,12 +61,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_E = 2048
+# node-blocked tile defaults: the (block_v, block_e) one-hot operand is
+# the VMEM-dominant term, so the two-level blocks are sized below the
+# flat kernel's edge block (512 * 1024 + streams ~ 0.7M cells at B=64)
+DEFAULT_BLOCK_V = 512
+DEFAULT_CSC_BLOCK_E = 1024
 
 
-def _kernel(src_ref, dst_ref, dist_ref, sigma_ref, level_ref, out_ref, *,
-            block_e: int, v1: int):
+def _flat_kernel(src_ref, dst_ref, dist_ref, sigma_ref, level_ref, out_ref,
+                 *, block_e: int, v1: int):
     step = pl.program_id(0)
 
     @pl.when(step == 0)
@@ -83,20 +111,22 @@ def frontier_expand_batched_pallas(src, dst, dist, sigma, levels, *,
                                    interpret: bool = True):
     """B batched BFS frontier expansions sharing one edge stream.
 
-    ``dist``/``sigma`` are (B, V+1) with per-sample frontier depths
-    ``levels`` (B,); returns the (B, V+1) contribution matrix.  Same
-    contract as ``ref.frontier_expand_batched_ref``.
+    ``dist``/``sigma`` are vertex-major (V+1, B) with per-sample frontier
+    depths ``levels`` (B,); returns the (V+1, B) contribution matrix.
+    Same contract as ``ref.frontier_expand_batched_ref`` — no layout
+    conversions happen here, the caller's vertex-major state is used
+    as-is.
 
     ``interpret=True`` executes the kernel body on CPU (this container);
     on a real TPU pass ``interpret=False``.
     """
-    batch, v1 = dist.shape
+    v1, batch = dist.shape
     src, dst = _pad_edges(src, dst, block_e, v1 - 1)
     grid = (src.shape[0] // block_e,)
     levels = jnp.asarray(levels, jnp.int32).reshape(batch)
 
-    out = pl.pallas_call(
-        functools.partial(_kernel, block_e=block_e, v1=v1),
+    return pl.pallas_call(
+        functools.partial(_flat_kernel, block_e=block_e, v1=v1),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_e,), lambda i: (i,)),     # src: stream blocks
@@ -108,8 +138,7 @@ def frontier_expand_batched_pallas(src, dst, dist, sigma, levels, *,
         out_specs=pl.BlockSpec((v1, batch), lambda i: (0, 0)),  # accumulate
         out_shape=jax.ShapeDtypeStruct((v1, batch), jnp.float32),
         interpret=interpret,
-    )(src, dst, dist.T, sigma.T, levels)
-    return out.T
+    )(src, dst, dist, sigma, levels)
 
 
 def frontier_expand_pallas(src, dst, dist, sigma, level, *,
@@ -118,7 +147,87 @@ def frontier_expand_pallas(src, dst, dist, sigma, level, *,
     """One BFS frontier expansion (B=1 lane of the batched kernel); same
     contract as ``ref.frontier_expand_ref``."""
     out = frontier_expand_batched_pallas(
-        src, dst, dist[None, :], sigma[None, :],
+        src, dst, dist[:, None], sigma[:, None],
         jnp.asarray(level, jnp.int32).reshape(1),
         block_e=block_e, interpret=interpret)
-    return out[0]
+    return out[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Two-level node-blocked CSC kernel
+# ---------------------------------------------------------------------------
+
+def _nb_kernel(nb_ref, first_ref, src_ref, dst_ref, level_ref, dist_ref,
+               sigma_ref, out_ref, *, block_v: int, block_e: int):
+    k = pl.program_id(0)         # flattened (node block, edge block) cell
+
+    @pl.when(first_ref[k] == 1)
+    def _init():                 # first edge block of this bucket
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    src = src_ref[...]           # (block_e,)
+    dst = dst_ref[...]           # (block_e,) — all inside this node block
+    levels = level_ref[...]      # (B,)
+    # per-edge-block gather from the (ANY-space) vertex-major state: the
+    # node state is NOT pinned in VMEM — only these (block_e, B) values
+    vals = jnp.where(dist_ref[src, :] == levels[None, :],
+                     sigma_ref[src, :], 0.0)              # (block_e, B)
+    # local scatter rows inside the current (block_v, B) contrib tile;
+    # sink-padded edges fall outside [0, block_v) (all-zero one-hot
+    # column) or hit the sink row with a 0 value — either way inert
+    dst_local = dst - nb_ref[k] * block_v
+    onehot = (dst_local[None, :] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_v, block_e), 0)).astype(jnp.float32)
+    out_ref[...] += jnp.dot(onehot, vals,
+                            preferred_element_type=jnp.float32)
+
+
+def frontier_expand_node_blocked_pallas(csc, dist, sigma, levels, *,
+                                        interpret: bool = True):
+    """Two-level frontier expansion over a node-blocked CSC layout.
+
+    ``csc`` is a :class:`repro.core.graph.CSCLayout`; ``dist``/``sigma``
+    are vertex-major (V+1, B), ``levels`` (B,).  Returns the (V+1, B)
+    contribution matrix — numerically identical (bit-for-bit on exact
+    sigma) to the flat kernel and the XLA reference, but with only a
+    (block_v, B) contrib tile VMEM-resident per grid step, so V is no
+    longer bounded by the VMEM cell budget.
+
+    ``block_nb``/``block_first`` ride in as scalar-prefetch operands
+    (``PrefetchScalarGridSpec``): the output index map follows
+    ``block_nb`` to the current node block's tile, and the tile is
+    zeroed on each bucket's first edge block.
+    """
+    v1, batch = dist.shape
+    levels = jnp.asarray(levels, jnp.int32).reshape(batch)
+    v_pad = csc.v_pad
+    if v_pad > v1:
+        # rows in [V+1, v_pad) back the last tile; no edge targets them.
+        # NOTE: this pad (and the [:v1] slice below) copies the full
+        # state per call; a BFS driver that loops on this kernel should
+        # allocate its state at v_pad rows up front to stay copy-free
+        # (ROADMAP: CSC-aware BFS driver).
+        dist = jnp.pad(dist, ((0, v_pad - v1), (0, 0)), constant_values=-3)
+        sigma = jnp.pad(sigma, ((0, v_pad - v1), (0, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,   # block_nb, block_first
+        grid=(csc.n_edge_blocks,),
+        in_specs=[
+            pl.BlockSpec((csc.block_e,), lambda k, nb, first: (k,)),  # src
+            pl.BlockSpec((csc.block_e,), lambda k, nb, first: (k,)),  # dst
+            pl.BlockSpec((batch,), lambda k, nb, first: (0,)),  # levels
+            pl.BlockSpec(memory_space=pltpu.ANY),   # dist: gathered, not pinned
+            pl.BlockSpec(memory_space=pltpu.ANY),   # sigma: gathered, not pinned
+        ],
+        out_specs=pl.BlockSpec((csc.block_v, batch),
+                               lambda k, nb, first: (nb[k], 0)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_nb_kernel, block_v=csc.block_v,
+                          block_e=csc.block_e),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((v_pad, batch), jnp.float32),
+        interpret=interpret,
+    )(csc.block_nb, csc.block_first, csc.src, csc.dst, levels, dist, sigma)
+    return out[:v1]

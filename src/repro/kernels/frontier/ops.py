@@ -1,14 +1,39 @@
-"""Dispatching wrapper for the frontier-expansion kernel.
+"""Dispatching wrapper for the frontier-expansion kernels.
 
-``frontier_expand`` picks the Pallas kernel when the node state fits the
-VMEM budget and the edge list is block-aligned, otherwise the XLA
-segment-sum reference.  It accepts both the unbatched contract
-(dist/sigma (V1,), scalar level) and the batched one (dist/sigma
-(B, V1), levels (B,)) — the batch width divides the VMEM row budget
-because dist+sigma+contrib of every sample column must stay resident.
-The jit'd API is what ``repro.core.bfs`` would call on TPU; on this CPU
-container the core BFS uses the XLA path directly (identical numerics —
-asserted by the kernel tests) so that lax.while_loop tracing stays fast.
+``frontier_expand`` routes one batched (or unbatched) frontier expansion
+to the right lane.  The routing decision is the pure function
+:func:`select_route` (exported so tests can assert the chosen lane
+without relying on output differences — all lanes agree bit-for-bit by
+design).  With the default ``use_pallas=None`` the dispatch is automatic
+and actually consults the fit predicates:
+
+  * flat Pallas kernel      — when :func:`pallas_supported` says the
+    whole vertex-major (V+1, B) dist/sigma/contrib state fits the VMEM
+    cell budget;
+  * node-blocked kernel     — above that budget, when a
+    :class:`repro.core.graph.CSCLayout` is supplied (``csc=...``) and
+    :func:`node_blocked_supported` accepts its per-step tiles;
+  * XLA segment-sum ref     — otherwise (no CSC layout, or tiles sized
+    beyond the budget), and ALWAYS under ``interpret=True``:
+    interpret-mode Pallas executes the kernel body op-by-op on CPU —
+    a debugging lane, never a performance win — so the automatic route
+    only engages the Pallas kernels when compiling for real hardware
+    (``interpret=False``).
+
+Forcing a lane (``use_pallas=True`` for flat, ``use_pallas="node_blocked"``,
+``use_pallas=False`` for the XLA ref) bypasses the automatic choice —
+that is how the parity tests drive the interpret-mode kernels — but
+*fails loudly* with a ``ValueError`` at trace time when the forced path
+cannot fit, instead of silently compiling a VMEM-busting kernel.  Edge
+alignment is NOT a fit constraint: both kernels pad the edge stream to
+``block_e`` internally with inert sink->sink edges.
+
+Batched state is vertex-major (V+1, B) end-to-end (``levels`` (B,)); the
+unbatched contract (dist/sigma (V1,), scalar level) is routed through
+the same lanes.  The jit'd API is what ``repro.core.bfs`` would call on
+TPU; on this CPU container the core BFS uses the XLA path directly
+(identical numerics — asserted by the kernel tests) so that
+lax.while_loop tracing stays fast.
 """
 from __future__ import annotations
 
@@ -18,30 +43,109 @@ import jax
 import jax.numpy as jnp
 
 from .kernel import (DEFAULT_BLOCK_E, frontier_expand_batched_pallas,
+                     frontier_expand_node_blocked_pallas,
                      frontier_expand_pallas)
-from .ref import frontier_expand_batched_ref, frontier_expand_ref
+from .ref import (frontier_expand_batched_ref,
+                  frontier_expand_node_blocked_ref, frontier_expand_ref)
 
 # dist(4B) + sigma(4B) + contrib(4B) per (vertex, sample) cell, 16 MiB
 # VMEM, ~25% headroom
 _VMEM_CELL_BUDGET = 1_000_000
 
 
+def pallas_supported(n_nodes: int, e_pad: int,
+                     block_e: int = DEFAULT_BLOCK_E, batch: int = 1) -> bool:
+    """True when the *flat* kernel's all-resident state fits VMEM.
+
+    Purely a cell-budget check on the (V+1, B) dist/sigma/contrib state;
+    ``e_pad``/``block_e`` do not constrain it (the kernel pads the edge
+    stream to ``block_e`` internally with inert sink edges — requiring
+    pre-aligned inputs here used to spuriously reject ~15/16 of real
+    graphs, whose arrays are padded to 128, not 2048).
+    """
+    del e_pad, block_e  # kept for API stability; alignment is internal
+    return (n_nodes + 1) * max(batch, 1) <= _VMEM_CELL_BUDGET
+
+
+def node_blocked_supported(csc, batch: int = 1) -> bool:
+    """True when the node-blocked kernel's per-step tiles fit VMEM.
+
+    Resident per grid step: the (block_v, B) contrib tile, the
+    (block_v, block_e) one-hot operand, and the (block_e, B) gathered
+    values + edge-index blocks — independent of V.
+    """
+    b = max(batch, 1)
+    cells = (csc.block_v * b                 # contrib tile
+             + csc.block_v * csc.block_e     # one-hot operand
+             + 2 * csc.block_e * b           # gathered dist/sigma values
+             + 2 * csc.block_e)              # src/dst index blocks
+    return cells <= _VMEM_CELL_BUDGET
+
+
+def select_route(n_nodes: int, e_pad: int, batch: int, *, csc=None,
+                 use_pallas=None, interpret: bool = True,
+                 block_e: int = DEFAULT_BLOCK_E) -> str:
+    """The dispatch decision of :func:`frontier_expand`, as a pure
+    function of static shapes/flags: one of "flat", "node_blocked",
+    "ref".  Raises ``ValueError`` when a forced lane cannot fit."""
+    flat_ok = pallas_supported(n_nodes, e_pad, block_e, batch)
+    nb_ok = csc is not None and node_blocked_supported(csc, batch)
+    if use_pallas is None:                       # automatic dispatch
+        if interpret:
+            # interpreted Pallas is a debug lane (force it to use it);
+            # the XLA ref is strictly faster off-TPU
+            return "ref"
+        return ("flat" if flat_ok else
+                "node_blocked" if nb_ok else "ref")
+    if use_pallas is False:
+        return "ref"
+    if use_pallas == "node_blocked":
+        if csc is None:
+            raise ValueError(
+                "use_pallas='node_blocked' requires a CSCLayout (csc=...)")
+        if not nb_ok:
+            raise ValueError(
+                f"node-blocked tiles (block_v={csc.block_v}, "
+                f"block_e={csc.block_e}, B={batch}) exceed the VMEM cell "
+                f"budget {_VMEM_CELL_BUDGET}; shrink the blocking")
+        return "node_blocked"
+    # use_pallas=True: the flat kernel
+    if not flat_ok:
+        raise ValueError(
+            f"flat Pallas kernel forced but (V+1)*B = "
+            f"{(n_nodes + 1) * batch} cells exceed the VMEM budget "
+            f"{_VMEM_CELL_BUDGET}; pass a CSCLayout and "
+            f"use_pallas='node_blocked', or use_pallas=None to "
+            f"auto-dispatch")
+    return "flat"
+
+
 @partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_e"))
-def frontier_expand(src, dst, dist, sigma, level, *, use_pallas=False,
-                    interpret=True, block_e=DEFAULT_BLOCK_E):
-    if dist.ndim == 2:
-        if use_pallas:
+def frontier_expand(src, dst, dist, sigma, level, *, csc=None,
+                    use_pallas=None, interpret=True,
+                    block_e=DEFAULT_BLOCK_E):
+    batched = dist.ndim == 2
+    batch = dist.shape[1] if batched else 1
+    v1 = dist.shape[0]
+    route = select_route(v1 - 1, src.shape[0], batch, csc=csc,
+                         use_pallas=use_pallas, interpret=interpret,
+                         block_e=block_e)
+
+    if route == "node_blocked":
+        d2 = dist if batched else dist[:, None]
+        s2 = sigma if batched else sigma[:, None]
+        lv = (jnp.asarray(level, jnp.int32).reshape(batch) if batched
+              else jnp.asarray(level, jnp.int32).reshape(1))
+        out = frontier_expand_node_blocked_pallas(csc, d2, s2, lv,
+                                                  interpret=interpret)
+        return out if batched else out[:, 0]
+    if route == "flat":
+        if batched:
             return frontier_expand_batched_pallas(
                 src, dst, dist, sigma, level, block_e=block_e,
                 interpret=interpret)
-        return frontier_expand_batched_ref(src, dst, dist, sigma, level)
-    if use_pallas:
         return frontier_expand_pallas(src, dst, dist, sigma, level,
                                       block_e=block_e, interpret=interpret)
+    if batched:
+        return frontier_expand_batched_ref(src, dst, dist, sigma, level)
     return frontier_expand_ref(src, dst, dist, sigma, level)
-
-
-def pallas_supported(n_nodes: int, e_pad: int,
-                     block_e: int = DEFAULT_BLOCK_E, batch: int = 1) -> bool:
-    return ((n_nodes + 1) * max(batch, 1) <= _VMEM_CELL_BUDGET
-            and e_pad % block_e == 0)

@@ -1,24 +1,31 @@
-"""Pure-jnp oracles for the BFS frontier-expansion kernel.
+"""Pure-jnp oracles for the BFS frontier-expansion kernels.
 
 Contract (one BFS level, edge-centric, batched over B concurrent
-samples):
+samples, *vertex-major* state):
 
-    contrib[b, v] = sum_{e: dst[e] == v}
-                        sigma[b, src[e]] * [dist[b, src[e]] == levels[b]]
+    contrib[v, b] = sum_{e: dst[e] == v}
+                        sigma[src[e], b] * [dist[src[e], b] == levels[b]]
 
 Inputs
   src, dst : (E,) int32 — COO edge list, shared by all samples; padded
              slots point at row V (``n_nodes`` sink) whose dist is never
              equal to a level.
-  dist     : (B, V1) int32  (V1 = V + 1, includes the sink row)
-  sigma    : (B, V1) float32
+  dist     : (V1, B) int32  (V1 = V + 1, includes the sink row)
+  sigma    : (V1, B) float32
   levels   : (B,) int32 — per-sample frontier depth
 
 Output
-  contrib  : (B, V1) float32
+  contrib  : (V1, B) float32
 
 The unbatched oracle ``frontier_expand_ref`` is the B=1 case with the
 batch axis squeezed away (dist (V1,), sigma (V1,), level ()).
+
+``frontier_expand_node_blocked_ref`` is the same computation driven by a
+node-blocked :class:`repro.core.graph.CSCLayout` instead of the COO
+arrays — the XLA lane of the two-level kernel.  Since the layout holds
+every real edge exactly once (plus inert sink padding), its output must
+match the COO oracles exactly; the kernel tests assert all three lanes
+agree bit-for-bit on BFS-derived (integer-valued) sigma.
 """
 from __future__ import annotations
 
@@ -27,10 +34,26 @@ import jax.numpy as jnp
 
 
 def frontier_expand_batched_ref(src, dst, dist, sigma, levels):
-    vals = jnp.where(dist[:, src] == levels[:, None], sigma[:, src], 0.0)
-    return jax.ops.segment_sum(vals.T, dst, num_segments=dist.shape[1]).T
+    vals = jnp.where(dist[src, :] == levels[None, :], sigma[src, :], 0.0)
+    return jax.ops.segment_sum(vals, dst, num_segments=dist.shape[0])
 
 
 def frontier_expand_ref(src, dst, dist, sigma, level):
     vals = jnp.where(dist[src] == level, sigma[src], 0.0)
     return jax.ops.segment_sum(vals, dst, num_segments=dist.shape[0])
+
+
+def frontier_expand_node_blocked_ref(csc, dist, sigma, levels):
+    """Node-blocked reference lane: expand over the CSC edge order.
+
+    ``dist``/``sigma`` are vertex-major (V+1, B).  The segment reduction
+    runs over the padded vertex range ``csc.v_pad`` so sink-padded edges
+    whose local row falls outside the logical range stay in bounds; the
+    result is sliced back to (V+1, B).
+    """
+    v1 = dist.shape[0]
+    vals = jnp.where(dist[csc.src, :] == levels[None, :],
+                     sigma[csc.src, :], 0.0)
+    out = jax.ops.segment_sum(vals, csc.dst,
+                              num_segments=max(csc.v_pad, v1))
+    return out[:v1]

@@ -33,6 +33,31 @@ def test_kadabra_single_device_guarantee():
     assert (res.btilde >= 0).all() and (res.btilde <= 1).all()
 
 
+def test_explicit_eps_delta_override_provided_config():
+    """Regression: explicit eps/delta kwargs must override a provided
+    config (the old `if config is None: replace(...)` guard only fired
+    when the replace was a no-op, silently ignoring explicit kwargs).
+    The override must land in the KadabraParams: omega is a direct
+    function of (vertex diameter, eps, delta)."""
+    from repro.core import compute_omega
+    g, _ = _small_world()
+    cfg = AdaptiveConfig(eps=0.05, delta=0.1, n0_base=50)
+    over = run_kadabra(g, config=cfg, eps=0.2, delta=0.3)
+    assert over.omega == pytest.approx(
+        float(compute_omega(over.vertex_diameter, 0.2, 0.3)))
+    # and NOT the config's (eps, delta)
+    assert over.omega != pytest.approx(
+        float(compute_omega(over.vertex_diameter, cfg.eps, cfg.delta)))
+    # partial override: only eps passed, delta falls back to the config's
+    partial_over = run_kadabra(g, config=cfg, eps=0.2)
+    assert partial_over.omega == pytest.approx(
+        float(compute_omega(partial_over.vertex_diameter, 0.2, cfg.delta)))
+    # no kwargs: the config is used untouched
+    base = run_kadabra(g, config=cfg)
+    assert base.omega == pytest.approx(
+        float(compute_omega(base.vertex_diameter, cfg.eps, cfg.delta)))
+
+
 def test_kadabra_adaptivity_tracks_instance_difficulty():
     """Paper Table II behavior: #samples adapts to the instance.
 

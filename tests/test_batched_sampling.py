@@ -45,12 +45,41 @@ def test_batched_bidir_matches_scalar_lane():
         # picks depend on the shared loop), but the crossing-weight total
         # must equal the true number of shortest paths either way
         d, L = int(bres.d[b]), int(bres.split[b])
-        mask = (np.asarray(bres.dist_s[b]) == L) & \
-               (np.asarray(bres.dist_t[b]) == d - L)
-        total = float(np.sum(np.asarray(bres.sigma_s[b]) *
-                             np.asarray(bres.sigma_t[b]) * mask))
+        mask = (np.asarray(bres.dist_s[:, b]) == L) & \
+               (np.asarray(bres.dist_t[:, b]) == d - L)
+        total = float(np.sum(np.asarray(bres.sigma_s[:, b]) *
+                             np.asarray(bres.sigma_t[:, b]) * mask))
         n_paths = len(list(nx.all_shortest_paths(G, int(s[b]), int(t[b]))))
         assert total == pytest.approx(n_paths, rel=1e-6)
+
+
+def test_vertex_major_state_matches_sample_major_columns():
+    """The vertex-major (V+1, B) BFS state is a pure layout change: under
+    fixed keys/sources, column b of the batched state equals the (V+1,)
+    state of the scalar (sample-major-squeezed) B=1 lane, and sampling
+    draws identical counts for identical keys regardless of layout."""
+    from repro.core import sample_path
+    from repro.core.bfs import bfs_sssp, bfs_sssp_batched
+    g, _G = _test_graph(seed=3, n=35)
+    sources = np.array([0, 7, 19, 34])
+    bres = jax.jit(lambda g, s: bfs_sssp_batched(g, s))(
+        g, jnp.asarray(sources, jnp.int32))
+    assert bres.dist.shape == (g.n_nodes + 1, len(sources))
+    for b, s in enumerate(sources):
+        sres = jax.jit(lambda g, s: bfs_sssp(g, s))(g, int(s))
+        assert sres.dist.shape == (g.n_nodes + 1,)
+        np.testing.assert_array_equal(np.asarray(bres.dist[:, b]),
+                                      np.asarray(sres.dist))
+        np.testing.assert_array_equal(np.asarray(bres.sigma[:, b]),
+                                      np.asarray(sres.sigma))
+        assert int(bres.levels[b]) == int(sres.levels)
+    # the B=1 sampling wrapper (squeezed layout) matches the batched lane
+    key = jax.random.PRNGKey(21)
+    one = jax.jit(lambda k: sample_path(g, k))(key)
+    bat = jax.jit(lambda k: sample_path_batched(g, k, 1))(key)
+    np.testing.assert_array_equal(np.asarray(one.contrib),
+                                  np.asarray(bat.contrib[0]))
+    assert bool(one.valid) == bool(bat.valid[0])
 
 
 def test_batched_per_sample_invariants():

@@ -104,6 +104,33 @@ def test_bidirectional_path_count_consistency():
         assert total == pytest.approx(n_paths, rel=1e-6)
 
 
+def test_bfs_levels_is_ecc_only_without_early_stop():
+    """BFSResult.levels contract: the deepest *settled* distance.  It
+    equals ecc(source) when the search exhausts its frontier, but with a
+    stop_node the search exits early and levels = dist(source, stop) —
+    a lower bound on the eccentricity, NOT the eccentricity (the bug was
+    a docstring claiming levels = ecc unconditionally while
+    estimate_diameter consumed it as ecc)."""
+    g = grid_graph(12, 1)  # path graph 0-1-...-11; ecc(0) = 11
+    full = bfs_sssp(g, 0)
+    assert int(full.levels) == 11
+    early = bfs_sssp(g, 0, stop_node=3)
+    assert int(early.levels) == 3          # dist(0, 3), not ecc
+    assert int(early.levels) < int(full.levels)
+    # the stop level itself is fully expanded: dist/sigma final there
+    assert int(early.dist[3]) == 3
+    assert float(early.sigma[3]) == 1.0
+    # vertices beyond the stop level are untouched
+    assert int(early.dist[11]) == -1
+    # batched lane: per-sample stop nodes, mixed early/exhausted
+    import jax.numpy as jnp
+    from repro.core import bfs_sssp_batched
+    res = bfs_sssp_batched(g, jnp.asarray([0, 0], jnp.int32),
+                           stop_nodes=jnp.asarray([5, 11], jnp.int32))
+    assert int(res.levels[0]) == 5
+    assert int(res.levels[1]) == 11
+
+
 def test_diameter_bounds():
     g = grid_graph(9, 7)  # exact diameter = 8 + 6 = 14
     est = jax.jit(lambda g: estimate_diameter(g))(g)

@@ -38,23 +38,25 @@ def test_frontier_kernel_shape_sweep(n, deg, block_e):
 
 @pytest.mark.parametrize("batch,block_e", [(4, 128), (8, 256), (5, 128)])
 def test_frontier_kernel_batched_heterogeneous_levels(batch, block_e):
-    """B>1 lane: per-sample levels, (block_e, B) MXU right-hand side."""
+    """B>1 lane: per-sample levels, (block_e, B) MXU right-hand side,
+    vertex-major (V+1, B) state end-to-end (no transposes anywhere)."""
     g = erdos_renyi_graph(400, 7.0, seed=batch)
     rng = np.random.default_rng(batch)
     sources = jnp.asarray(rng.integers(0, g.n_nodes, batch), jnp.int32)
     res = bfs_sssp_batched(g, sources)
+    assert res.dist.shape == (g.n_nodes + 1, batch)  # vertex-major
     levels = jnp.asarray(rng.integers(0, 4, batch), jnp.int32)
     ref = frontier_expand_batched_ref(g.src, g.dst, res.dist, res.sigma,
                                       levels)
     got = frontier_expand_batched_pallas(g.src, g.dst, res.dist, res.sigma,
                                          levels, block_e=block_e)
-    assert got.shape == (batch, g.n_nodes + 1)
+    assert got.shape == (g.n_nodes + 1, batch)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-6)
-    # each row must equal the corresponding scalar expansion
+    # each sample column must equal the corresponding scalar expansion
     for b in range(batch):
-        row = frontier_expand_ref(g.src, g.dst, res.dist[b], res.sigma[b],
-                                  levels[b])
-        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(row),
+        col = frontier_expand_ref(g.src, g.dst, res.dist[:, b],
+                                  res.sigma[:, b], levels[b])
+        np.testing.assert_allclose(np.asarray(got[:, b]), np.asarray(col),
                                    rtol=1e-6)
 
 
