@@ -22,6 +22,11 @@ report).  Laptop-scale stand-ins for the paper's instances:
            Frontier-lane throughput (flat Pallas vs node-blocked CSC
            Pallas vs XLA ref) at V in {2^12, 2^15, 2^17} — the two-level
            kernel's scaling story past the flat kernel's VMEM cap.
+  csc_driver_sweep
+           Occupancy-skipping work efficiency on a high-diameter grid
+           at V=2^15: per-BFS-level skipped-block ratios and the
+           skip/no-skip speedup of the node-blocked kernel (the
+           O(frontier)-blocks-per-level story of the CSC BFS driver).
   kernels  Pallas-kernel oracle microbenches (XLA path timings; the
            Pallas path is interpret-mode on CPU and not timed).
 
@@ -168,10 +173,15 @@ def bench_fig3(full: bool):
     from repro.core import rmat_graph
     from repro.core.sampler import sample_batch
     from repro.core.epoch import epoch_length
-    from repro.core.adaptive import DEFAULT_SAMPLE_BATCH_SIZE
+    from repro.core.adaptive import resolve_sample_batch_size
+    from repro.core.diameter import estimate_diameter
     g = rmat_graph(11 if full else 9, 8, seed=3)
     n = 64
-    B = DEFAULT_SAMPLE_BATCH_SIZE  # the run_kadabra default lane
+    # the lane run_kadabra actually executes on this instance: B is
+    # resolved from the phase-1 diameter estimate, exactly as the driver
+    # does (B=16 was the old fixed default; R-MAT resolves wider)
+    vd = int(jax.jit(estimate_diameter)(g).vertex_diameter)
+    B = resolve_sample_batch_size(None, g.n_nodes, vd)
     fn = jax.jit(lambda k: sample_batch(g, k, n, batch_size=B))
     us = _time_call(fn, jax.random.PRNGKey(0))
     rate = n / (us / 1e6)
@@ -344,6 +354,127 @@ def bench_node_blocked_sweep(full: bool):
 
 
 # ---------------------------------------------------------------------------
+# CSC driver sweep: occupancy skipping on a high-diameter grid
+# ---------------------------------------------------------------------------
+
+def run_csc_driver_sweep(scale: int = 15, batch: int = 8, reps: int = 1,
+                         probe_levels=None, write_json: bool = True,
+                         full: bool = False):
+    """Level-throughput of the CSC frontier lanes on a high-diameter grid.
+
+    The workload occupancy skipping exists for: a 2^scale-vertex 2D grid
+    (the paper's road-network stand-in), BFS states taken from a real
+    corner-seeded search, so the frontier at level L is the genuine
+    anti-diagonal — O(L) vertices out of 2^scale, touching O(L / rows)
+    of the edge blocks.  Per probed level the node-blocked kernel runs
+    twice — occupancy bitmap on vs forced all-ones — plus the XLA ref;
+    recorded per level: the skipped-block ratio and the skip/no-skip
+    speedup.  Both kernel lanes are interpret-mode on CPU, so absolute
+    rates understate real hardware, but the skip/no-skip ratio is the
+    work-efficiency measurement itself (identical kernel, identical
+    schedule, only inactive grid cells differ).  Returns the result
+    rows; ``write_json`` appends them to BENCH_sampling.json.
+    """
+    from repro.core import grid_graph, with_csc_layout
+    from repro.core.bfs import bfs_sssp_batched
+    from repro.kernels.frontier import (frontier_block_bitmap,
+                                        frontier_expand_batched_ref,
+                                        frontier_expand_node_blocked_pallas)
+    width = 1 << ((scale + 1) // 2)
+    height = 1 << (scale // 2)
+    g = grid_graph(width, height)
+    gc = with_csc_layout(g, batch=batch)
+    csc = gc.csc
+    # corner-seeded searches: the deepest frontiers a grid offers
+    sources = jnp.zeros((batch,), jnp.int32)
+    res = jax.jit(bfs_sssp_batched)(gc, sources)
+    dist, sigma = res.dist, res.sigma
+    depth = int(res.levels[0])
+    if probe_levels is None:
+        probe_levels = sorted({1, 2, depth // 8, depth // 4, depth // 2,
+                               depth - 2} - {0})
+    print(f"\n== csc_driver_sweep: occupancy skipping, grid "
+          f"{width}x{height} (V=2^{scale}) ==")
+    print(f"  B={batch}, blocks (v={csc.block_v}, e={csc.block_e}), "
+          f"{csc.n_edge_blocks} edge blocks, depth={depth}")
+    # mean occupancy over the whole search (bitmap only — cheap)
+    bitmap_fn = jax.jit(lambda d, lv: frontier_block_bitmap(csc, d, lv))
+    occ = []
+    for lv in range(depth):
+        lvv = jnp.full((batch,), lv, jnp.int32)
+        occ.append(int(jnp.sum(bitmap_fn(dist, lvv))))
+    mean_active = float(np.mean(occ))
+    print(f"  mean active edge blocks over {depth} levels: "
+          f"{mean_active:.1f} / {csc.n_edge_blocks} "
+          f"(mean skipped ratio {1 - mean_active / csc.n_edge_blocks:.3f})")
+
+    skip_fn = jax.jit(lambda d, s, lv: frontier_expand_node_blocked_pallas(
+        csc, d, s, lv, skip_inactive=True))
+    noskip_fn = jax.jit(lambda d, s, lv: frontier_expand_node_blocked_pallas(
+        csc, d, s, lv, skip_inactive=False))
+    ref_fn = jax.jit(lambda d, s, lv: frontier_expand_batched_ref(
+        g.src, g.dst, d, s, lv))
+    # warm the allocator/dispatch path beyond the compile call — the very
+    # first executed call otherwise pollutes the first probed level
+    warm = jnp.full((batch,), int(probe_levels[0]), jnp.int32)
+    for fn in (skip_fn, noskip_fn, ref_fn):
+        jax.block_until_ready(fn(dist, sigma, warm))
+    rows = []
+    tot_skip = tot_noskip = 0.0
+    for lv in probe_levels:
+        lvv = jnp.full((batch,), lv, jnp.int32)
+        active = int(jnp.sum(bitmap_fn(dist, lvv)))
+        us_skip = _time_call(skip_fn, dist, sigma, lvv, reps=reps)
+        us_noskip = _time_call(noskip_fn, dist, sigma, lvv, reps=reps)
+        us_ref = _time_call(ref_fn, dist, sigma, lvv, reps=reps)
+        speedup = us_noskip / us_skip
+        tot_skip += us_skip
+        tot_noskip += us_noskip
+        skipped = 1 - active / csc.n_edge_blocks
+        rows.append({
+            "level": lv, "active_blocks": active,
+            "n_edge_blocks": csc.n_edge_blocks,
+            "skipped_ratio": skipped,
+            "us_skip": us_skip, "us_noskip": us_noskip, "us_xla_ref": us_ref,
+            "samples_per_s_skip": batch / (us_skip / 1e6),
+            "speedup_skip_vs_noskip": speedup,
+        })
+        print(f"  L={lv:<4} active={active:>4}/{csc.n_edge_blocks} "
+              f"skip={us_skip:>10,.0f}us noskip={us_noskip:>10,.0f}us "
+              f"ref={us_ref:>8,.0f}us  speedup={speedup:5.2f}x")
+        emit(f"csc_driver_sweep.L{lv}", us_skip,
+             f"speedup={speedup:.2f};skipped_ratio={skipped:.3f}")
+    overall = tot_noskip / max(tot_skip, 1e-9)
+    print(f"  aggregate over probed levels: {overall:.2f}x from skipping")
+    record = {
+        "section": "csc_driver_sweep",
+        "instance": {"family": "grid", "width": width, "height": height,
+                     "n_nodes": g.n_nodes,
+                     "n_edges_directed": int(g.n_edges)},
+        "blocking": {"block_v": csc.block_v, "block_e": csc.block_e,
+                     "n_edge_blocks": csc.n_edge_blocks,
+                     "v_pad": csc.v_pad},
+        "batch": batch, "bfs_depth": depth,
+        "mean_active_blocks": mean_active,
+        "metric": "per-level frontier expansion; speedup = t(all-ones "
+                  "bitmap) / t(occupancy bitmap), interpret-mode Pallas",
+        "aggregate_speedup": overall,
+        "full": full,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "device": jax.devices()[0].platform,
+        "results": rows,
+    }
+    if write_json:
+        _append_bench_record(record)
+    return record
+
+
+def bench_csc_driver_sweep(full: bool):
+    run_csc_driver_sweep(scale=15, batch=8, reps=3 if full else 1,
+                         full=full)
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenches
 # ---------------------------------------------------------------------------
 
@@ -381,7 +512,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     sections = ["table2", "fig2", "fig3", "fig4", "batch_sweep",
-                "node_blocked_sweep", "kernels"]
+                "node_blocked_sweep", "csc_driver_sweep", "kernels"]
     ap.add_argument("section", nargs="?", default=None, choices=sections,
                     help="run a single section (same as --only)")
     ap.add_argument("--only", default=None, choices=sections)
@@ -395,6 +526,7 @@ def main():
         "table2": bench_table2, "fig2": bench_fig2, "fig3": bench_fig3,
         "fig4": bench_fig4, "batch_sweep": bench_batch_sweep,
         "node_blocked_sweep": bench_node_blocked_sweep,
+        "csc_driver_sweep": bench_csc_driver_sweep,
         "kernels": bench_kernels,
     }
     for name, fn in jobs.items():

@@ -2,7 +2,7 @@
 # for betweenness approximation, mapped onto a JAX TPU mesh.
 from .graph import (CSCLayout, Graph, build_csc_layout, build_graph,
                     erdos_renyi_graph, from_edge_list, grid_graph,
-                    hyperbolic_graph, rmat_graph)
+                    hyperbolic_graph, rmat_graph, with_csc_layout)
 from .bfs import (BFSResult, BidirResult, bfs_sssp, bfs_sssp_batched,
                   bidirectional_bfs, bidirectional_bfs_batched)
 from .brandes import brandes_jax, brandes_numpy
@@ -18,7 +18,7 @@ from . import distributed
 
 __all__ = [
     "Graph", "CSCLayout", "build_graph", "build_csc_layout",
-    "from_edge_list", "rmat_graph",
+    "with_csc_layout", "from_edge_list", "rmat_graph",
     "hyperbolic_graph", "grid_graph", "erdos_renyi_graph",
     "BFSResult", "BidirResult", "bfs_sssp", "bfs_sssp_batched",
     "bidirectional_bfs", "bidirectional_bfs_batched",

@@ -47,13 +47,42 @@ from .kadabra import (KadabraParams, calibrate_deltas, check_stop,
 from .sampler import sample_batch
 
 __all__ = ["DEFAULT_SAMPLE_BATCH_SIZE", "AdaptiveConfig",
-           "BetweennessResult", "EpochStats", "run_kadabra",
-           "run_fixed_sampling"]
+           "BetweennessResult", "EpochStats", "resolve_sample_batch_size",
+           "run_kadabra", "run_fixed_sampling"]
 
-# Default B of the batched sampling lane (concurrent samples per BFS
-# round); shared by AdaptiveConfig, the fixed-sampling baseline, the
-# dry-run, and the benchmarks so they all measure the same lane.
+# Fallback B of the batched sampling lane (concurrent samples per BFS
+# round) for entry points that run without a diameter estimate (the
+# fixed-sampling baseline, the dry-run, the benchmarks).  run_kadabra
+# itself resolves B per instance — see resolve_sample_batch_size.
 DEFAULT_SAMPLE_BATCH_SIZE = 16
+
+
+def resolve_sample_batch_size(requested, n_nodes: int,
+                              vertex_diameter: int) -> int:
+    """Pick the concurrent-sample width B for an instance.
+
+    An explicitly ``requested`` B always wins.  Left as ``None`` it is
+    derived from the phase-1 diameter estimate (free by the time
+    sampling starts) and V: per-sample BFS depth tracks the diameter,
+    and the batched lane masks a sample's column once its own search
+    finishes while the rest of the batch keeps relaxing — so wide
+    batches only pay off when path lengths are short and uniform.
+    Low-diameter instances (R-MAT/social: VD within ~4 log2 V) run wide
+    (B=64, edge-stream amortization maxed); mid-range runs the default
+    16; high-diameter instances (grids/roads: VD beyond ~12 log2 V,
+    widely varying path lengths within a batch) drop to 8 to bound the
+    masked-round waste.  The batch_sweep/csc_driver_sweep sections of
+    ``benchmarks/run.py`` are the empirical basis (BENCH_sampling.json).
+    """
+    if requested is not None:
+        return max(1, int(requested))
+    logv = max(1.0, float(np.log2(max(n_nodes, 2))))
+    ratio = float(vertex_diameter) / logv
+    if ratio <= 4.0:
+        return 64
+    if ratio <= 12.0:
+        return DEFAULT_SAMPLE_BATCH_SIZE
+    return 8
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,8 +98,10 @@ class AdaptiveConfig:
     # Concurrent samples per batched BFS round: each device draws
     # ceil(n0 / B) rounds of B samples sharing one edge stream per BFS
     # level (the intra-device analogue of the paper's thread parallelism).
-    # 1 = the paper's sequential per-thread lane.
-    sample_batch_size: int = DEFAULT_SAMPLE_BATCH_SIZE
+    # None = resolve per instance from the diameter estimate and V at
+    # run time (resolve_sample_batch_size); an explicit value always
+    # wins.  1 = the paper's sequential per-thread lane.
+    sample_batch_size: Optional[int] = None
 
 
 class EpochStats(NamedTuple):
@@ -119,12 +150,13 @@ def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
         graph)
     vd = int(diam.vertex_diameter)
     t_diam = time.perf_counter() - t0
+    bsz = resolve_sample_batch_size(cfg.sample_batch_size, graph.n_nodes, vd)
 
     t0 = time.perf_counter()
     key, k_cal = jax.random.split(key)
     counts0, tau0 = jax.jit(partial(sample_batch,
                                     n_samples=cfg.calib_samples_per_device,
-                                    batch_size=cfg.sample_batch_size))(
+                                    batch_size=bsz))(
         graph, k_cal)
     btilde0 = (counts0[: graph.n_nodes]
                / jnp.maximum(tau0.astype(jnp.float32), 1.0))
@@ -133,19 +165,28 @@ def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
     t_cal = time.perf_counter() - t0
 
     n0 = epoch_length(1, base=cfg.n0_base, exponent=cfg.n0_exponent)
+    v1 = graph.n_nodes + 1
 
     @jax.jit
-    def epoch_step(agg_counts, agg_tau, frame_counts, frame_tau, k):
+    def epoch_step(agg_counts, agg_tau, frame_counts, frame_tau,
+                   sur_counts, sur_tau, k):
         agg_counts = agg_counts + frame_counts
         agg_tau = agg_tau + frame_tau
-        c, t = sample_batch(graph, k, n0, batch_size=cfg.sample_batch_size)
+        # surplus reuse: the masked tail of the previous epoch's last
+        # round seeds this epoch's frame (valid i.i.d. samples; tau
+        # counts them, so the estimator stays exact)
+        (c, t), (sc, st) = sample_batch(graph, k, n0, batch_size=bsz,
+                                        carry=(sur_counts, sur_tau),
+                                        return_carry=True)
         new_counts = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
         agg = StateFrame(agg_counts, agg_tau)
         done, mf, mg = _check(agg, params, graph.n_nodes)
-        return agg_counts, agg_tau, new_counts, t, done, mf, mg
+        return agg_counts, agg_tau, new_counts, t, sc, st, done, mf, mg
 
     agg = zero_frame(v_pad)
     frame = zero_frame(v_pad)
+    sur_counts = jnp.zeros((v1,), jnp.float32)
+    sur_tau = jnp.int32(0)
     # seed the pipeline: the calibration samples are *not* reused for the
     # adaptive estimate (they informed the deltas; reusing them would break
     # the martingale argument) — matching NetworKit's implementation.
@@ -157,16 +198,20 @@ def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
     while not done and epoch < cfg.max_epochs:
         te = time.perf_counter()
         k, ke = jax.random.split(k)
-        ac, at, fc, ft, done_dev, mf, mg = epoch_step(
-            agg.counts, agg.tau, frame.counts, frame.tau, ke)
+        ac, at, fc, ft, sur_counts, sur_tau, done_dev, mf, mg = epoch_step(
+            agg.counts, agg.tau, frame.counts, frame.tau,
+            sur_counts, sur_tau, ke)
         agg = StateFrame(ac, at)
         frame = StateFrame(fc, ft)
         done = bool(done_dev)
         epoch += 1
         stats.append(EpochStats(epoch, int(agg.tau), float(mf), float(mg),
                                 time.perf_counter() - te))
-    # final flush: the frame sampled during the last epoch still counts
+    # final flush: the frame sampled during the last epoch still counts,
+    # and so does its surplus tail (computed, valid, tau-counted)
     agg = agg + frame
+    agg = StateFrame(
+        agg.counts.at[:v1].add(sur_counts), agg.tau + sur_tau)
     t_samp = time.perf_counter() - t0
 
     tau = int(agg.tau)
@@ -199,13 +244,14 @@ def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
         graph)
     vd = int(diam.vertex_diameter)
     t_diam = time.perf_counter() - t0
+    bsz = resolve_sample_batch_size(cfg.sample_batch_size, graph.n_nodes, vd)
 
     # ---- calibration: pleasingly parallel sampling + blocking reduce ----
     @partial(shard_map, mesh=mesh, in_specs=(gspec, key_spec),
              out_specs=(rep, rep), check_vma=False)
     def calib_step(g, keys):
         c, t = sample_batch(g, keys[0], cfg.calib_samples_per_device,
-                            batch_size=cfg.sample_batch_size)
+                            batch_size=bsz)
         cp = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
         return dist.flat_allreduce(cp, all_axes), dist.flat_allreduce(
             t, all_axes)
@@ -225,15 +271,22 @@ def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
     # ---- adaptive epochs --------------------------------------------------
     epoch_step = make_epoch_step_spmd(mesh, cfg.aggregation,
                                       graph.n_nodes, v_pad, n0,
-                                      batch_size=cfg.sample_batch_size)
+                                      batch_size=bsz)
     epoch_jit = jax.jit(epoch_step)
 
+    v1 = graph.n_nodes + 1
     zero_counts = jnp.zeros((v_pad,), jnp.float32)
     agg_counts, agg_tau = zero_counts, jnp.int32(0)
     frame_counts = jax.device_put(
         jnp.zeros((n_dev, v_pad), jnp.float32),
         NamedSharding(mesh, frame_spec))
     frame_tau = jnp.int32(0)
+    # per-device surplus frames (the masked tail of each device's last
+    # sampling round, reused as the seed of its next epoch's frame)
+    sur_counts = jax.device_put(
+        jnp.zeros((n_dev, v1), jnp.float32),
+        NamedSharding(mesh, frame_spec))
+    sur_tau = jnp.int32(0)
 
     stats = []
     t0 = time.perf_counter()
@@ -245,22 +298,27 @@ def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
         k, ke = jax.random.split(k)
         dev_keys = jax.device_put(jax.random.split(ke, n_dev),
                                   NamedSharding(mesh, key_spec))
-        agg_counts, agg_tau, frame_counts, frame_tau, done_dev, mf, mg = \
+        (agg_counts, agg_tau, frame_counts, frame_tau, sur_counts, sur_tau,
+         done_dev, mf, mg) = \
             epoch_jit(graph, params, agg_counts, agg_tau, frame_counts,
-                      frame_tau, dev_keys)
+                      frame_tau, sur_counts, sur_tau, dev_keys)
         done = bool(done_dev)
         epoch += 1
         stats.append(EpochStats(epoch, int(agg_tau), float(mf), float(mg),
                                 time.perf_counter() - te))
 
-    # final flush of the in-flight frame
-    @partial(shard_map, mesh=mesh, in_specs=(frame_spec, rep),
+    # final flush of the in-flight frame + the last surplus tail (both
+    # computed and tau-counted; dropping them would only waste samples)
+    @partial(shard_map, mesh=mesh,
+             in_specs=(frame_spec, rep, frame_spec, rep),
              out_specs=(rep, rep), check_vma=False)
-    def flush(frame_counts, frame_tau):
-        return (agg_fn(frame_counts[0]),
-                dist.flat_allreduce(frame_tau, all_axes))
+    def flush(frame_counts, frame_tau, sur_counts, sur_tau):
+        c = frame_counts[0].at[:v1].add(sur_counts[0])
+        return (agg_fn(c),
+                dist.flat_allreduce(frame_tau + sur_tau, all_axes))
 
-    inc_c, inc_t = jax.jit(flush)(frame_counts, frame_tau)
+    inc_c, inc_t = jax.jit(flush)(frame_counts, frame_tau,
+                                  sur_counts, sur_tau)
     agg_counts = agg_counts + inc_c
     agg_tau = agg_tau + inc_t
     t_samp = time.perf_counter() - t0
@@ -292,10 +350,17 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
     multi-pod dry-run can .lower()/.compile() it on the production mesh
     and extract its roofline terms (EXPERIMENTS.md §Perf, cell #3).
 
+    Each device's masked surplus tail (ceil(n0/B)*B - n0 extra i.i.d.
+    samples of its last round) is carried into its next epoch's frame
+    instead of dropped — the (n_dev, V+1) ``sur_counts`` / scalar
+    ``sur_tau`` loop state below.
+
     Signature of the returned fn:
       (graph, params: KadabraParams, agg_counts (V_pad,), agg_tau (),
-       frame_counts (n_dev, V_pad) sharded, frame_tau (), keys (n_dev, 2))
-      -> (agg_counts, agg_tau, new_frame, new_tau, done, max_f, max_g)
+       frame_counts (n_dev, V_pad) sharded, frame_tau (),
+       sur_counts (n_dev, V+1) sharded, sur_tau (), keys (n_dev, 2))
+      -> (agg_counts, agg_tau, new_frame, new_tau, new_sur_counts,
+          new_sur_tau, done, max_f, max_g)
     """
     all_axes = tuple(mesh.axis_names)
     agg_fn = make_agg_fn(mesh, aggregation)
@@ -304,35 +369,44 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
     key_spec = P(all_axes)
 
     def epoch_step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
-                   keys):
+                   sur_counts, sur_tau, keys):
         gspec = jax.tree.map(lambda _: rep, g)
         pspec = jax.tree.map(lambda _: rep, params)
 
         @partial(shard_map, mesh=mesh,
                  in_specs=(gspec, pspec, rep, rep, frame_spec, rep,
-                           key_spec),
-                 out_specs=(rep, rep, frame_spec, rep, rep, rep, rep),
+                           frame_spec, rep, key_spec),
+                 out_specs=(rep, rep, frame_spec, rep, frame_spec, rep,
+                            rep, rep, rep),
                  check_vma=False)
         def _step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
-                  keys):
+                  sur_counts, sur_tau, keys):
             # 1. hand the previous frame to the (async) reduction
             inc_counts = agg_fn(frame_counts[0])
             inc_tau = dist.flat_allreduce(frame_tau, all_axes)
             # 2. sample the next frame — no data dependency on the
             #    collective, so the scheduler overlaps it (paper Alg. 2,
-            #    lines 15/21/27)
-            c, t = sample_batch(g, keys[0], n0, batch_size=batch_size)
+            #    lines 15/21/27); the previous surplus tail seeds it,
+            #    this round's tail comes back as the next carry (the
+            #    surplus sample count is the same on every device, so
+            #    new_sur_tau stays a replicated scalar)
+            (c, t), (sc, st) = sample_batch(g, keys[0], n0,
+                                            batch_size=batch_size,
+                                            carry=(sur_counts[0], sur_tau),
+                                            return_carry=True)
             new_counts = jnp.zeros((1, v_pad),
                                    jnp.float32).at[0, : c.shape[0]].set(c)
+            new_sur = sc[None, :]
             # 3. thread-0-equivalent: stop rule on the consistent snapshot
             agg_counts = agg_counts + inc_counts
             agg_tau = agg_tau + inc_tau
             done, mf, mg = _check(StateFrame(agg_counts, agg_tau), params,
                                   n_nodes)
-            return agg_counts, agg_tau, new_counts, t, done, mf, mg
+            return (agg_counts, agg_tau, new_counts, t, new_sur, st,
+                    done, mf, mg)
 
         return _step(g, params, agg_counts, agg_tau, frame_counts,
-                     frame_tau, keys)
+                     frame_tau, sur_counts, sur_tau, keys)
 
     return epoch_step
 
@@ -372,8 +446,10 @@ def run_fixed_sampling(graph: Graph, n_samples: int, *, key=None,
                        batch_size: Optional[int] = None):
     """Non-adaptive baseline (RK-style fixed sample count, no stop rule).
 
-    Defaults to the same batched lane as ``run_kadabra``
-    (``AdaptiveConfig.sample_batch_size``)."""
+    ``batch_size=None`` falls back to ``DEFAULT_SAMPLE_BATCH_SIZE``
+    (this baseline skips phase 1, so there is no diameter estimate to
+    resolve ``run_kadabra``'s per-instance B from); pass an explicit
+    width to measure a specific lane."""
     if key is None:
         key = jax.random.PRNGKey(0)
     if batch_size is None:

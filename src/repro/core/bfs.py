@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from .graph import Graph
+from repro.kernels.frontier.ops import frontier_expand
 
 __all__ = [
     "BFSResult", "bfs_sssp", "bfs_sssp_batched",
@@ -66,47 +67,63 @@ class BFSResult(NamedTuple):
     """Result of (batched) single-source BFS with path counting.
 
     ``dist``/``sigma`` are (V+1, B) vertex-major in the batched API and
-    (V+1,) in the scalar wrapper.  ``levels`` is the deepest *settled*
-    distance per sample: every vertex at distance <= levels has final
-    dist/sigma.  It equals ecc(source) only when the search ran to
-    frontier exhaustion; with ``stop_nodes`` the search exits as soon as
-    its stop node settles, so levels = dist(source, stop_node) — a
-    *lower bound* on the eccentricity, not the eccentricity itself.
-    Diameter estimation (``estimate_diameter``) therefore always runs
-    its sweeps without stop nodes.
+    (V+1,) in the scalar wrapper — (csc.v_pad, B) / (csc.v_pad,) when
+    the graph carries a persisted CSC layout (rows past the sink are
+    inert: dist -3, sigma 0; slice to ``n_nodes`` for per-vertex
+    consumers, exactly as with the sink row).  ``levels`` is the
+    deepest *settled* distance per sample: every vertex at distance <=
+    levels has final dist/sigma.  It equals ecc(source) only when the
+    search ran to frontier exhaustion; with ``stop_nodes`` the search
+    exits as soon as its stop node settles, so levels = dist(source,
+    stop_node) — a *lower bound* on the eccentricity, not the
+    eccentricity itself.  Diameter estimation (``estimate_diameter``)
+    therefore always runs its sweeps without stop nodes.
     """
-    dist: jax.Array    # (V+1, B) | (V+1,) int32; -1 unreached, -3 sink row
-    sigma: jax.Array   # (V+1, B) | (V+1,) float32; rescaled path counts
+    dist: jax.Array    # (rows, B) | (rows,) int32; -1 unreached, -3 sink/pad
+    sigma: jax.Array   # (rows, B) | (rows,) float32; rescaled path counts
     levels: jax.Array  # (B,) | () int32; deepest settled distance (see above)
 
 
+def _state_rows(graph: Graph) -> int:
+    """Rows of the batched BFS state: V+1, or csc.v_pad when a CSC
+    layout is persisted — allocating at the kernel's padded row count up
+    front is what makes every while_loop iteration pad/slice-free."""
+    return graph.csc.v_pad if graph.csc is not None else graph.n_nodes + 1
+
+
 def _init_state(graph: Graph, sources):
-    """Batched BFS init: sources (B,) -> vertex-major dist/sigma (V+1, B)."""
+    """Batched BFS init: sources (B,) -> vertex-major dist/sigma.
+
+    (V+1, B), or (csc.v_pad, B) for a graph with a persisted CSC layout
+    — all rows >= n_nodes (the sink and the tile-padding rows) start at
+    dist -3 / sigma 0 and stay there: no edge targets them.
+    """
     b = sources.shape[0]
-    v1 = graph.n_nodes + 1
+    rows = _state_rows(graph)
     cols = jnp.arange(b)
-    dist = jnp.full((v1, b), -1, jnp.int32)
-    dist = dist.at[graph.n_nodes, :].set(_SINK_DIST)
+    dist = jnp.full((rows, b), -1, jnp.int32)
+    dist = dist.at[graph.n_nodes:, :].set(_SINK_DIST)
     dist = dist.at[sources, cols].set(0)
-    sigma = jnp.zeros((v1, b), jnp.float32).at[sources, cols].set(1.0)
+    sigma = jnp.zeros((rows, b), jnp.float32).at[sources, cols].set(1.0)
     return dist, sigma
 
 
 def _expand_level(graph: Graph, dist, sigma, level, active):
     """One batched edge-centric BFS relaxation (a masked SpMM).
 
-    dist/sigma are vertex-major (V+1, B), ``level`` is the per-sample
+    dist/sigma are vertex-major (rows, B), ``level`` is the per-sample
     (B,) frontier depth and ``active`` a (B,) mask — inactive columns
-    are left untouched.  The edge list is gathered once; the segment
-    reduction carries all B columns.  This is the XLA formulation of the
-    ``repro.kernels.frontier`` contract (same layout, same semantics —
-    the kernels drop in without any transpose).  Returns updated
-    (dist, sigma, n_new (B,)).
+    are left untouched.  The contribution matrix comes from the
+    ``repro.kernels.frontier`` dispatcher: the graph's persisted CSC
+    layout (if any) rides along, so on TPU hardware the expansion runs
+    the node-blocked kernel with occupancy skipping, and on this
+    container it auto-routes to the bit-identical XLA reference — the
+    state layout is the kernels' native one either way, no transposes,
+    no pads.  Both BFS drivers (single-source and bidirectional) share
+    this one expansion.  Returns updated (dist, sigma, n_new (B,)).
     """
-    src_vals = jnp.where(dist[graph.src, :] == level[None, :],
-                         sigma[graph.src, :], 0.0)         # (E, B) gather
-    contrib = jax.ops.segment_sum(src_vals, graph.dst,
-                                  num_segments=graph.n_nodes + 1)
+    contrib = frontier_expand(graph.src, graph.dst, dist, sigma, level,
+                              csc=graph.csc)
     new = (contrib > 0) & (dist == -1) & active[None, :]
     dist = jnp.where(new, level[None, :] + 1, dist)
     sigma = jnp.where(new, contrib, sigma)

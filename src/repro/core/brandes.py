@@ -66,8 +66,11 @@ def brandes_numpy(graph: Graph) -> np.ndarray:
 def _single_source_dependency(graph: Graph, s):
     """One Brandes iteration (forward BFS + backward accumulation) in JAX."""
     res = bfs_sssp(graph, s)
-    dist, sigma = res.dist, res.sigma
     v1 = graph.n_nodes + 1
+    # a graph with a persisted CSC layout hands back (csc.v_pad,) state;
+    # the backward phase works on the logical V+1 rows (one cut per
+    # source, on the BFS *result* — like the sampler's meeting draw)
+    dist, sigma = res.dist[:v1], res.sigma[:v1]
 
     # Backward phase, level-synchronous: delta[u] += sigma[u]/sigma[v] *
     # (1 + delta[v]) over edges (u, v) with dist[v] == dist[u] + 1.

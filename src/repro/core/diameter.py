@@ -15,8 +15,13 @@ the upper bound only loosens omega (never the guarantee).  All K seed
 chains run as ONE ``bfs_sssp_batched`` call per sweep phase (K seeds
 batched, then their K far-vertices batched), so phase 1 — the paper's
 Fig. 2b scalability bottleneck, which it runs as sequential scalar BFS —
-uses the same batched (V+1, K) vertex-major relaxation lane as the
-sampling phase and streams the edge list once per level for all chains.
+uses the same batched vertex-major relaxation lane as the sampling phase
+and streams the edge list once per level for all chains.  On a graph
+with a persisted CSC layout the sweeps inherit the CSC-aware driver
+wholesale: the (csc.v_pad, K) state is allocated padded up front and
+every level runs the node-blocked/occupancy-skipping dispatcher lane
+with zero per-call pads or slices (the ``[: graph.n_nodes]`` cut below
+happens once per sweep, on the *result*, exactly like the sink-row cut).
 Every BFS runs *without* stop nodes, so ``BFSResult.levels`` really is
 the eccentricity (with an early stop it would only be a lower bound —
 see the BFSResult contract).

@@ -17,13 +17,17 @@ Three edge layouts are kept side by side:
   ``segment_sum`` over the edge list; the Pallas kernel in
   ``repro.kernels.frontier`` implements the same contract with explicit
   VMEM tiling).
-* node-blocked CSC (:class:`CSCLayout`, built on demand by
-  :func:`build_csc_layout`) — edges bucketed by *destination-node block*
+* node-blocked CSC (:class:`CSCLayout`, built by
+  :func:`build_csc_layout` and *persisted on the graph* by
+  :func:`with_csc_layout`) — edges bucketed by *destination-node block*
   of ``block_v`` vertices, each bucket padded to a multiple of
   ``block_e``.  This is the layout of the two-level frontier kernel: the
   grid walks (node block, edge block) cells, only a (block_v, B) contrib
   tile is VMEM-resident per step, so the kernel scales past the
-  all-state-resident V * B cap of the flat layout.
+  all-state-resident V * B cap of the flat layout.  A graph carrying a
+  layout (``graph.csc is not None``) switches the BFS drivers to the
+  CSC lane end-to-end: batched state allocated at ``csc.v_pad`` rows,
+  no per-call pad/slice anywhere in the while_loop bodies.
 
 All arrays are padded to a multiple of ``pad_to`` so BlockSpec tilings in
 the Pallas kernels stay aligned.  Padded edges point ``src = dst =
@@ -45,6 +49,7 @@ __all__ = [
     "CSCLayout",
     "build_graph",
     "build_csc_layout",
+    "with_csc_layout",
     "from_edge_list",
     "rmat_graph",
     "hyperbolic_graph",
@@ -72,18 +77,26 @@ class Graph:
     n_nodes: int           # static
     n_edges: int           # static: directed edge slots actually used
     max_degree: int        # static
+    # Optional persisted node-blocked CSC layout (see with_csc_layout):
+    # when present, the BFS drivers allocate their batched state at
+    # csc.v_pad rows and run the frontier dispatcher's CSC lane
+    # end-to-end with zero per-call pads/slices of dist/sigma.
+    csc: "CSCLayout | None" = None
 
-    # -- pytree plumbing (static ints live in aux data) -------------------
+    # -- pytree plumbing (static ints live in aux data; the optional CSC
+    # layout is a child pytree — None flattens to nothing) ----------------
     def tree_flatten(self):
-        leaves = (self.indptr, self.indices, self.src, self.dst, self.degree)
+        leaves = (self.indptr, self.indices, self.src, self.dst, self.degree,
+                  self.csc)
         aux = (self.n_nodes, self.n_edges, self.max_degree)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        indptr, indices, src, dst, degree = leaves
+        indptr, indices, src, dst, degree, csc = leaves
         n_nodes, n_edges, max_degree = aux
-        return cls(indptr, indices, src, dst, degree, n_nodes, n_edges, max_degree)
+        return cls(indptr, indices, src, dst, degree, n_nodes, n_edges,
+                   max_degree, csc)
 
     @property
     def n_edges_undirected(self) -> int:
@@ -207,8 +220,9 @@ class CSCLayout:
         return int(self.src.shape[0])
 
 
-def build_csc_layout(graph: Graph, *, block_v: int = 512,
-                     block_e: int = 1024) -> CSCLayout:
+def build_csc_layout(graph: Graph, *, block_v: int | None = None,
+                     block_e: int | None = None,
+                     batch: int = 16) -> CSCLayout:
     """Bucket ``graph``'s edges by destination-node block of ``block_v``.
 
     Pure numpy, one stable sort over the edge list; call once per
@@ -217,7 +231,17 @@ def build_csc_layout(graph: Graph, *, block_v: int = 512,
     is 0 (the sink's dist never matches a frontier level), and their
     local destination row either falls outside the tile or hits the sink
     row with a 0 value, so they contribute exactly nothing.
+
+    ``block_v``/``block_e`` left as ``None`` are chosen by the VMEM
+    budget + 128-alignment heuristic of
+    :func:`repro.kernels.frontier.choose_csc_blocks` at the expected
+    sample-batch width ``batch``; explicit values always win.
     """
+    if block_v is None or block_e is None:
+        from repro.kernels.frontier.ops import choose_csc_blocks
+        auto_v, auto_e = choose_csc_blocks(graph.n_nodes, batch)
+        block_v = auto_v if block_v is None else block_v
+        block_e = auto_e if block_e is None else block_e
     v1 = graph.n_nodes + 1
     n_nb = -(-v1 // block_v)
     src = np.asarray(graph.src[: graph.n_edges], dtype=np.int64)
@@ -256,6 +280,23 @@ def build_csc_layout(graph: Graph, *, block_v: int = 512,
         n_edge_blocks=int(block_nb.shape[0]),
         n_nodes=int(graph.n_nodes),
     )
+
+
+def with_csc_layout(graph: Graph, *, block_v: int | None = None,
+                    block_e: int | None = None, batch: int = 16) -> Graph:
+    """Return ``graph`` with a persisted :class:`CSCLayout` attached.
+
+    This is the graph-construction hook of the CSC-aware BFS driver:
+    once the layout rides on the graph, ``bfs_sssp_batched`` /
+    ``bidirectional_bfs_batched`` allocate their batched state at
+    ``csc.v_pad`` rows and route every frontier expansion through the
+    CSC lane of ``repro.kernels.frontier.frontier_expand`` with zero
+    per-call pads/slices.  Blocking defaults to the VMEM-budget
+    heuristic (see :func:`build_csc_layout`).
+    """
+    csc = build_csc_layout(graph, block_v=block_v, block_e=block_e,
+                           batch=batch)
+    return dataclasses.replace(graph, csc=csc)
 
 
 # ---------------------------------------------------------------------------

@@ -144,13 +144,18 @@ def sample_path_batched(graph: Graph, key, batch: int) -> PathSample:
     valid = res.d >= 0                                          # (B,)
 
     # --- choose the meeting vertices w ~ sigma_s(w) * sigma_t(w) --------
-    # (vertex-major (V+1, B) BFS state: one Gumbel-max per sample column)
-    on_split = ((res.dist_s == res.split[None, :])
-                & (res.dist_t == (res.d - res.split)[None, :]))
+    # (vertex-major BFS state: one Gumbel-max per sample column; the
+    # weight matrix is cut to the logical V+1 rows so the Gumbel noise
+    # shape — and with it the whole sample stream — is independent of
+    # whether the state rides at csc.v_pad rows: a graph with and
+    # without a persisted CSC layout draws identical samples)
+    v1 = graph.n_nodes + 1
+    on_split = ((res.dist_s[:v1] == res.split[None, :])
+                & (res.dist_t[:v1] == (res.d - res.split)[None, :]))
     logw = jnp.where(
         on_split & valid[None, :],
-        jnp.log(jnp.maximum(res.sigma_s, 1e-30))
-        + jnp.log(jnp.maximum(res.sigma_t, 1e-30)),
+        jnp.log(jnp.maximum(res.sigma_s[:v1], 1e-30))
+        + jnp.log(jnp.maximum(res.sigma_t[:v1], 1e-30)),
         _NEG_INF,
     )
     w = _gumbel_argmax(k_meet, logw, axis=0).astype(jnp.int32)  # (B,)
@@ -183,36 +188,76 @@ def sample_path(graph: Graph, key) -> PathSample:
     return PathSample(ps.contrib[0], ps.valid[0], ps.length[0])
 
 
-def sample_batch(graph: Graph, key, n_samples: int, *, batch_size: int = 1):
-    """Take exactly ``n_samples`` samples, accumulating counts.
+def sample_batch(graph: Graph, key, n_samples: int, *, batch_size: int = 1,
+                 carry=None, return_carry: bool = False):
+    """Take exactly ``n_samples`` *new* samples, accumulating counts.
 
     ``batch_size`` = B concurrent samples per round; ceil(n_samples / B)
     rounds run under a ``lax.scan`` so memory stays O(B * V) regardless of
-    the epoch length.  When B does not divide n_samples the surplus
-    samples of the final round are masked out (they are i.i.d., so
-    dropping a fixed suffix is exact), keeping tau — and with it the
-    epoch/omega bookkeeping of the adaptive driver — identical to the
-    sequential lane.  B = 1 reproduces the paper's one-sample-per-thread
-    formulation exactly (one (V+1,) frontier per scan step).
-    Returns (counts (V+1,) float32, tau () int32 = n_samples).
+    the epoch length.  When B does not divide n_samples the
+    ``ceil(n/B) * B - n`` surplus samples of the final round are masked
+    out of the returned frame (they are i.i.d., so cutting a fixed
+    suffix is exact) — but they are *computed* either way, and with
+    ``return_carry=True`` they come back as a second ``(surplus_counts
+    (V+1,), surplus_tau ())`` frame that the adaptive driver folds into
+    the NEXT epoch via ``carry=...`` instead of dropping: every sample
+    the BFS paid for lands in some frame exactly once, and every frame's
+    tau counts exactly the samples inside it, so the estimator and the
+    epoch/omega bookkeeping stay exact (reusing i.i.d. surplus only
+    reshuffles which frame a sample is attributed to — the estimate is
+    unchanged in distribution).
+
+    ``carry`` (counts (V+1,), tau ()) from a previous call's surplus is
+    folded into the returned frame: counts/tau come back as carry +
+    the ``n_samples`` new draws.  B = 1 reproduces the paper's
+    one-sample-per-thread formulation exactly (one (V+1,) frontier per
+    scan step, never any surplus).
+
+    Returns ``(counts (V+1,) float32, tau () int32)`` — plus the
+    surplus frame when ``return_carry=True``.
     """
     # clamp: a batch wider than the request would only compute masked work
     batch_size = max(1, min(int(batch_size), int(n_samples)))
     rounds = -(-n_samples // batch_size)
+    v1 = graph.n_nodes + 1
 
-    def step(carry, xs):
-        counts, tau = carry
+    def step(state, xs):
+        # the surplus accumulators only ride in the scan carry when the
+        # caller asked for them (return_carry is a static python bool):
+        # the common mask-and-drop lane pays nothing extra
+        if return_carry:
+            counts, tau, sur_counts, sur_tau = state
+        else:
+            counts, tau = state
         k, offset = xs
         ps = sample_path_batched(graph, k, batch_size)
         keep = (offset + jnp.arange(batch_size)) < n_samples
         counts = counts + jnp.sum(
             jnp.where(keep[:, None], ps.contrib, 0.0), axis=0)
         tau = tau + jnp.sum(keep.astype(jnp.int32))
-        return (counts, tau), jnp.sum((ps.valid & keep).astype(jnp.int32))
+        if return_carry:
+            # the masked suffix of the last round — valid i.i.d. samples
+            sur_counts = sur_counts + jnp.sum(
+                jnp.where(keep[:, None], 0.0, ps.contrib), axis=0)
+            sur_tau = sur_tau + jnp.sum((~keep).astype(jnp.int32))
+            state = (counts, tau, sur_counts, sur_tau)
+        else:
+            state = (counts, tau)
+        return state, jnp.sum((ps.valid & keep).astype(jnp.int32))
 
+    if carry is None:
+        counts0, tau0 = jnp.zeros((v1,), jnp.float32), jnp.int32(0)
+    else:
+        counts0 = jnp.asarray(carry[0], jnp.float32).reshape(v1)
+        tau0 = jnp.asarray(carry[1], jnp.int32).reshape(())
+    init = (counts0, tau0)
+    if return_carry:
+        init = init + (jnp.zeros((v1,), jnp.float32), jnp.int32(0))
     keys = jax.random.split(key, rounds)
     offsets = jnp.arange(rounds, dtype=jnp.int32) * batch_size
-    (counts, tau), _valids = jax.lax.scan(
-        step, (jnp.zeros((graph.n_nodes + 1,), jnp.float32), jnp.int32(0)),
-        (keys, offsets))
+    state, _valids = jax.lax.scan(step, init, (keys, offsets))
+    if return_carry:
+        counts, tau, sur_counts, sur_tau = state
+        return (counts, tau), (sur_counts, sur_tau)
+    counts, tau = state
     return counts, tau

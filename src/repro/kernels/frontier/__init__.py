@@ -1,13 +1,13 @@
-from .kernel import (frontier_expand_batched_pallas,
+from .kernel import (frontier_block_bitmap, frontier_expand_batched_pallas,
                      frontier_expand_node_blocked_pallas,
                      frontier_expand_pallas)
-from .ops import (frontier_expand, node_blocked_supported, pallas_supported,
-                  select_route)
+from .ops import (choose_csc_blocks, frontier_expand, node_blocked_supported,
+                  pallas_supported, select_route)
 from .ref import (frontier_expand_batched_ref,
                   frontier_expand_node_blocked_ref, frontier_expand_ref)
 
-__all__ = ["frontier_expand", "frontier_expand_batched_pallas",
-           "frontier_expand_batched_ref",
+__all__ = ["choose_csc_blocks", "frontier_block_bitmap", "frontier_expand",
+           "frontier_expand_batched_pallas", "frontier_expand_batched_ref",
            "frontier_expand_node_blocked_pallas",
            "frontier_expand_node_blocked_ref", "frontier_expand_pallas",
            "frontier_expand_ref", "node_blocked_supported",

@@ -42,14 +42,51 @@ compared against one tile of rows, not all of them).  Revisits of an
 output tile are consecutive (buckets are contiguous), which is exactly
 the accumulation pattern Mosaic supports.
 
-On real TPUs pick B as a multiple of the f32 lane tiling (8; ideally 128
-to fill the MXU); the flat kernel compiles with ``interpret=False``.
-The node-blocked kernel's per-edge gather from ``pltpu.ANY`` refs is
-exercised in interpret mode only: a compiled Mosaic version must stage
-the per-block state slices through explicit ``pltpu.make_async_copy``
-DMA instead of indexing the ANY refs directly (see the ROADMAP
-follow-up) — the blocking, layout and parity contract here are the
-hardware design, the DMA plumbing is not written yet.
+Two work-efficiency mechanisms ride on the two-level grid:
+
+**Occupancy bitmap (grid-cell skipping).**  A BFS level only has to
+touch edge blocks that contain at least one *frontier source* — on
+high-diameter graphs (grids, roads) that is O(frontier) blocks, not
+O(E / block_e).  The contract: ``block_active`` is an
+``(n_edge_blocks,)`` int32 vector, ``block_active[k] == 1`` iff edge
+block ``k`` holds at least one edge whose source ``u`` satisfies
+``dist[u, b] == levels[b]`` for *some* sample ``b``
+(:func:`frontier_block_bitmap` computes exactly this: a blockwise
+segment-max of the per-sample frontier mask gathered over the CSC
+source ids).  It rides in as a third scalar-prefetch operand; inactive
+cells skip the whole DMA + gather + matmul body under ``pl.when`` and
+only perform the (mandatory) tile zeroing on each bucket's first edge
+block.  A conservative all-ones bitmap is always legal — skipping is
+semantics-preserving, the kernel output is bit-identical with any
+correct bitmap.  Cost trade-off: the bitmap itself is one O(E) integer
+pass per level, so skipping pays on high-diameter instances (grids,
+roads — most levels touch O(frontier) blocks; up to ~20x per level in
+csc_driver_sweep) and roughly breaks even when nearly every block is
+active (dense-frontier levels of low-diameter graphs; the sweep's
+0.74-0.97x rows are interpret-mode numbers whose per-cell cond
+overhead overstates the penalty a compiled kernel would see).  Callers
+that know their frontiers are dense can pass ``skip_inactive=False``
+through the dispatcher.
+
+**Double-buffered edge-block pipeline.**  The ``src``/``dst`` edge
+blocks live in ``pltpu.ANY`` (HBM) and are staged into VMEM scratch by
+explicit ``pltpu.make_async_copy`` DMA with two slots: at grid step
+``k`` the copy for block ``k + 1`` is started *before* the gather +
+one-hot MXU matmul of block ``k`` runs, so the next block's edge
+stream is in flight behind the current block's compute (slot parity
+``k % 2``; inactive blocks start no copy and wait on none).  This
+replaces the BlockSpec auto-pipeline so the copy schedule can follow
+the occupancy bitmap — an auto-pipelined operand would prefetch
+skipped blocks too.
+
+On real TPUs pick B as a multiple of the f32 lane tiling (8; ideally
+128 to fill the MXU); the flat kernel compiles with
+``interpret=False``.  The node-blocked kernel's per-edge gather of
+dist/sigma from ``pltpu.ANY`` refs is exercised in interpret mode
+only: a compiled Mosaic version must additionally stage those gathers
+through DMA (the edge-block pipeline above is written; the
+gather-side DMA is the remaining ROADMAP follow-up together with the
+Mosaic compile itself).
 
 All shapes static; padded edges target the sink row V (dist = -3) and
 contribute exactly 0.
@@ -157,71 +194,150 @@ def frontier_expand_pallas(src, dst, dist, sigma, level, *,
 # Two-level node-blocked CSC kernel
 # ---------------------------------------------------------------------------
 
-def _nb_kernel(nb_ref, first_ref, src_ref, dst_ref, level_ref, dist_ref,
-               sigma_ref, out_ref, *, block_v: int, block_e: int):
+def frontier_block_bitmap(csc, dist, levels):
+    """Per-edge-block "any active source" occupancy bitmap.
+
+    ``dist`` is vertex-major (rows, B) with rows >= n_nodes + 1 (the
+    sink row's dist of -3 never matches a level), ``levels`` (B,).
+    Returns an (n_edge_blocks,) int32 vector with 1 exactly on the
+    blocks that hold at least one edge whose source is on some sample's
+    frontier — a blockwise segment-max of the frontier mask gathered
+    over the CSC source ids (blocks are fixed-size, so the segment-max
+    is a reshape + max).  O(E) comparisons, no floats, no matmuls —
+    cheap relative to the expansion it lets the kernel skip.
+    """
+    frontier = jnp.any(dist == levels[None, :], axis=1)        # (rows,)
+    hit = frontier[csc.src]                                    # (e_slots,)
+    return jnp.max(hit.reshape(csc.n_edge_blocks, csc.block_e)
+                   .astype(jnp.int32), axis=1)
+
+
+def _nb_kernel(nb_ref, first_ref, act_ref, level_ref, src_any, dst_any,
+               dist_ref, sigma_ref, out_ref, src_s, dst_s, sem, *,
+               block_v: int, block_e: int):
     k = pl.program_id(0)         # flattened (node block, edge block) cell
+    nsteps = pl.num_programs(0)
+    slot = jax.lax.rem(k, 2)
+
+    def edge_dma(block_idx, s):
+        # HBM -> VMEM stage of one (block_e,) src/dst edge block
+        return (pltpu.make_async_copy(
+                    src_any.at[pl.ds(block_idx * block_e, block_e)],
+                    src_s.at[s], sem.at[s, 0]),
+                pltpu.make_async_copy(
+                    dst_any.at[pl.ds(block_idx * block_e, block_e)],
+                    dst_s.at[s], sem.at[s, 1]))
+
+    # -- double-buffered pipeline: block k+1's copy is started before
+    # block k's compute; slots alternate on block-index parity.  Copies
+    # are only issued for ACTIVE blocks (an auto-pipelined BlockSpec
+    # operand would prefetch skipped blocks too), and only waited on by
+    # the matching active compute step below.
+    @pl.when((k == 0) & (act_ref[0] == 1))
+    def _warmup():               # block 0 has no predecessor step
+        for dma in edge_dma(0, 0):
+            dma.start()
+
+    nxt = jnp.minimum(k + 1, nsteps - 1)     # clamp: trace-safe at the end
+
+    @pl.when((k + 1 < nsteps) & (act_ref[nxt] == 1))
+    def _prefetch_next():
+        for dma in edge_dma(nxt, jax.lax.rem(k + 1, 2)):
+            dma.start()
 
     @pl.when(first_ref[k] == 1)
-    def _init():                 # first edge block of this bucket
-        out_ref[...] = jnp.zeros_like(out_ref)
+    def _init():                 # first edge block of this bucket: the
+        out_ref[...] = jnp.zeros_like(out_ref)   # tile must always zero
 
-    src = src_ref[...]           # (block_e,)
-    dst = dst_ref[...]           # (block_e,) — all inside this node block
-    levels = level_ref[...]      # (B,)
-    # per-edge-block gather from the (ANY-space) vertex-major state: the
-    # node state is NOT pinned in VMEM — only these (block_e, B) values
-    vals = jnp.where(dist_ref[src, :] == levels[None, :],
-                     sigma_ref[src, :], 0.0)              # (block_e, B)
-    # local scatter rows inside the current (block_v, B) contrib tile;
-    # sink-padded edges fall outside [0, block_v) (all-zero one-hot
-    # column) or hit the sink row with a 0 value — either way inert
-    dst_local = dst - nb_ref[k] * block_v
-    onehot = (dst_local[None, :] == jax.lax.broadcasted_iota(
-        jnp.int32, (block_v, block_e), 0)).astype(jnp.float32)
-    out_ref[...] += jnp.dot(onehot, vals,
-                            preferred_element_type=jnp.float32)
+    @pl.when(act_ref[k] == 1)
+    def _expand():               # skipped entirely on inactive cells
+        for dma in edge_dma(k, slot):
+            dma.wait()
+        src = src_s[slot]        # (block_e,)
+        dst = dst_s[slot]        # (block_e,) — all inside this node block
+        levels = level_ref[...]  # (B,)
+        # per-edge-block gather from the (ANY-space) vertex-major state:
+        # the node state is NOT pinned in VMEM — only these (block_e, B)
+        # values (interpret-mode only; Mosaic needs a DMA stage here)
+        vals = jnp.where(dist_ref[src, :] == levels[None, :],
+                         sigma_ref[src, :], 0.0)          # (block_e, B)
+        # local scatter rows inside the current (block_v, B) contrib
+        # tile; sink-padded edges fall outside [0, block_v) (all-zero
+        # one-hot column) or hit the sink row with a 0 value — inert
+        dst_local = dst - nb_ref[k] * block_v
+        onehot = (dst_local[None, :] == jax.lax.broadcasted_iota(
+            jnp.int32, (block_v, block_e), 0)).astype(jnp.float32)
+        out_ref[...] += jnp.dot(onehot, vals,
+                                preferred_element_type=jnp.float32)
 
 
 def frontier_expand_node_blocked_pallas(csc, dist, sigma, levels, *,
-                                        interpret: bool = True):
+                                        interpret: bool = True,
+                                        block_active=None,
+                                        skip_inactive: bool = True):
     """Two-level frontier expansion over a node-blocked CSC layout.
 
     ``csc`` is a :class:`repro.core.graph.CSCLayout`; ``dist``/``sigma``
-    are vertex-major (V+1, B), ``levels`` (B,).  Returns the (V+1, B)
-    contribution matrix — numerically identical (bit-for-bit on exact
-    sigma) to the flat kernel and the XLA reference, but with only a
-    (block_v, B) contrib tile VMEM-resident per grid step, so V is no
-    longer bounded by the VMEM cell budget.
+    are vertex-major (V+1, B) — or, copy-free, already padded to
+    (csc.v_pad, B) as the CSC-aware BFS driver allocates them —
+    ``levels`` (B,).  Returns the contribution matrix at the same row
+    count it was handed (padded in -> padded out, NO per-call pad/slice
+    of the state), numerically identical (bit-for-bit on exact sigma)
+    to the flat kernel and the XLA reference: only a (block_v, B)
+    contrib tile is VMEM-resident per grid step, so V is not bounded by
+    the VMEM cell budget.
 
-    ``block_nb``/``block_first`` ride in as scalar-prefetch operands
-    (``PrefetchScalarGridSpec``): the output index map follows
-    ``block_nb`` to the current node block's tile, and the tile is
-    zeroed on each bucket's first edge block.
+    ``block_nb``/``block_first``/``block_active`` ride in as
+    scalar-prefetch operands (``PrefetchScalarGridSpec``): the output
+    index map follows ``block_nb`` to the current node block's tile,
+    the tile is zeroed on each bucket's first edge block, and cells
+    whose edge block holds no frontier source are skipped (see the
+    module docstring for the bitmap contract).  ``block_active=None``
+    with ``skip_inactive=True`` computes the bitmap from dist/levels;
+    ``skip_inactive=False`` forces the all-ones bitmap (every cell
+    runs — the lane the occupancy benchmark compares against).
     """
-    v1, batch = dist.shape
+    v_rows, batch = dist.shape
     levels = jnp.asarray(levels, jnp.int32).reshape(batch)
     v_pad = csc.v_pad
-    if v_pad > v1:
-        # rows in [V+1, v_pad) back the last tile; no edge targets them.
-        # NOTE: this pad (and the [:v1] slice below) copies the full
-        # state per call; a BFS driver that loops on this kernel should
-        # allocate its state at v_pad rows up front to stay copy-free
-        # (ROADMAP: CSC-aware BFS driver).
-        dist = jnp.pad(dist, ((0, v_pad - v1), (0, 0)), constant_values=-3)
-        sigma = jnp.pad(sigma, ((0, v_pad - v1), (0, 0)))
+    if v_pad > v_rows:
+        # Compat lane for (V+1, B) callers: rows in [V+1, v_pad) back the
+        # last tile; no edge targets them.  This pad (and the [:v_rows]
+        # slice below) copies the full state per call — the CSC-aware
+        # BFS driver avoids it by allocating at v_pad rows up front.
+        dist = jnp.pad(dist, ((0, v_pad - v_rows), (0, 0)),
+                       constant_values=-3)
+        sigma = jnp.pad(sigma, ((0, v_pad - v_rows), (0, 0)))
+    elif v_rows != v_pad:
+        raise ValueError(
+            f"state rows {v_rows} exceed the CSC layout's v_pad {v_pad}")
+
+    if block_active is None:
+        if skip_inactive:
+            block_active = frontier_block_bitmap(csc, dist, levels)
+        else:
+            block_active = jnp.ones((csc.n_edge_blocks,), jnp.int32)
+    else:
+        block_active = jnp.asarray(block_active, jnp.int32).reshape(
+            csc.n_edge_blocks)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,   # block_nb, block_first
+        num_scalar_prefetch=3,   # block_nb, block_first, block_active
         grid=(csc.n_edge_blocks,),
         in_specs=[
-            pl.BlockSpec((csc.block_e,), lambda k, nb, first: (k,)),  # src
-            pl.BlockSpec((csc.block_e,), lambda k, nb, first: (k,)),  # dst
-            pl.BlockSpec((batch,), lambda k, nb, first: (0,)),  # levels
+            pl.BlockSpec((batch,), lambda k, nb, first, act: (0,)),  # levels
+            pl.BlockSpec(memory_space=pltpu.ANY),   # src: manual DMA stage
+            pl.BlockSpec(memory_space=pltpu.ANY),   # dst: manual DMA stage
             pl.BlockSpec(memory_space=pltpu.ANY),   # dist: gathered, not pinned
             pl.BlockSpec(memory_space=pltpu.ANY),   # sigma: gathered, not pinned
         ],
         out_specs=pl.BlockSpec((csc.block_v, batch),
-                               lambda k, nb, first: (nb[k], 0)),
+                               lambda k, nb, first, act: (nb[k], 0)),
+        scratch_shapes=[
+            pltpu.VMEM((2, csc.block_e), jnp.int32),   # src double buffer
+            pltpu.VMEM((2, csc.block_e), jnp.int32),   # dst double buffer
+            pltpu.SemaphoreType.DMA((2, 2)),           # (slot, src|dst)
+        ],
     )
     out = pl.pallas_call(
         functools.partial(_nb_kernel, block_v=csc.block_v,
@@ -229,5 +345,6 @@ def frontier_expand_node_blocked_pallas(csc, dist, sigma, levels, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((v_pad, batch), jnp.float32),
         interpret=interpret,
-    )(csc.block_nb, csc.block_first, csc.src, csc.dst, levels, dist, sigma)
-    return out[:v1]
+    )(csc.block_nb, csc.block_first, block_active, levels,
+      csc.src, csc.dst, dist, sigma)
+    return out if v_rows == v_pad else out[:v_rows]

@@ -28,12 +28,23 @@ cannot fit, instead of silently compiling a VMEM-busting kernel.  Edge
 alignment is NOT a fit constraint: both kernels pad the edge stream to
 ``block_e`` internally with inert sink->sink edges.
 
-Batched state is vertex-major (V+1, B) end-to-end (``levels`` (B,)); the
-unbatched contract (dist/sigma (V1,), scalar level) is routed through
-the same lanes.  The jit'd API is what ``repro.core.bfs`` would call on
-TPU; on this CPU container the core BFS uses the XLA path directly
-(identical numerics — asserted by the kernel tests) so that
-lax.while_loop tracing stays fast.
+Batched state is vertex-major end-to-end (``levels`` (B,)): (V+1, B),
+or — when the caller persists a CSC layout on its graph and allocates
+its BFS state at ``csc.v_pad`` rows — the padded row count, which every
+lane preserves exactly (padded in -> padded out, zero pads/slices per
+call).  The unbatched contract (dist/sigma (V1,), scalar level) is
+routed through the same lanes.  ``repro.core.bfs._expand_level`` calls
+this dispatcher inside its while_loop bodies with ``interpret`` left at
+its ``None`` default, which resolves by backend (``interpret=False``
+iff running on real TPUs): on TPU that engages the Pallas kernels —
+with occupancy skipping on the node-blocked lane, see ``skip_inactive``
+and the bitmap contract in ``kernel.py`` — while on this CPU container
+the automatic route is the XLA path (identical numerics — asserted by
+the kernel tests).
+
+:func:`choose_csc_blocks` is the blocking policy: (block_v, block_e)
+from the VMEM cell budget with 128-alignment on both axes, the default
+of ``repro.core.graph.build_csc_layout``.
 """
 from __future__ import annotations
 
@@ -42,7 +53,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .kernel import (DEFAULT_BLOCK_E, frontier_expand_batched_pallas,
+from .kernel import (DEFAULT_BLOCK_E, frontier_block_bitmap,
+                     frontier_expand_batched_pallas,
                      frontier_expand_node_blocked_pallas,
                      frontier_expand_pallas)
 from .ref import (frontier_expand_batched_ref,
@@ -71,15 +83,55 @@ def node_blocked_supported(csc, batch: int = 1) -> bool:
     """True when the node-blocked kernel's per-step tiles fit VMEM.
 
     Resident per grid step: the (block_v, B) contrib tile, the
-    (block_v, block_e) one-hot operand, and the (block_e, B) gathered
-    values + edge-index blocks — independent of V.
+    (block_v, block_e) one-hot operand, the (block_e, B) gathered
+    values, and the double-buffered (2, block_e) src/dst edge-block
+    stage — independent of V.
     """
     b = max(batch, 1)
-    cells = (csc.block_v * b                 # contrib tile
-             + csc.block_v * csc.block_e     # one-hot operand
-             + 2 * csc.block_e * b           # gathered dist/sigma values
-             + 2 * csc.block_e)              # src/dst index blocks
+    cells = _nb_cells(csc.block_v, csc.block_e, b)
     return cells <= _VMEM_CELL_BUDGET
+
+
+def _nb_cells(block_v: int, block_e: int, b: int) -> int:
+    return (block_v * b                 # contrib tile
+            + block_v * block_e         # one-hot operand
+            + 2 * block_e * b           # gathered dist/sigma values
+            + 2 * 2 * block_e)          # double-buffered src/dst stage
+
+
+def choose_csc_blocks(n_nodes: int, batch: int = 16, *,
+                      budget: int = _VMEM_CELL_BUDGET) -> tuple:
+    """Pick ``(block_v, block_e)`` for a :class:`CSCLayout` from the
+    VMEM cell budget, 128-aligned on both axes (f32 MXU tiling).
+
+    ``block_e`` is taken as large as possible — longer contiguous DMA
+    bursts amortize the double-buffered edge stream — subject to
+    leaving room for a contrib/one-hot tile of at least 256 vertex
+    rows; ``block_v`` is then the largest 128-multiple whose per-step
+    residency (:func:`node_blocked_supported`'s accounting) fits,
+    capped at the graph's padded vertex count (tiling past the graph
+    only adds inert sink cells).
+    """
+    b = max(int(batch), 1)
+    v_cap = max(128, -(-(n_nodes + 1) // 128) * 128)
+    best = None
+    for block_e in (2048, 1024, 512, 256, 128):
+        rem = budget - 2 * block_e * b - 4 * block_e
+        if rem <= 0:
+            continue  # the edge-stream residency alone busts the budget
+        block_v = min((rem // (b + block_e)) // 128 * 128, v_cap)
+        if block_v >= 256 or block_v == v_cap:
+            return block_v, block_e
+        if block_v >= 128 and best is None:
+            best = (block_v, block_e)
+    if best is None:
+        # even the minimum 128-aligned tiling cannot fit: fail loudly
+        # here rather than persisting a layout node_blocked_supported
+        # would reject downstream
+        raise ValueError(
+            f"no 128-aligned (block_v, block_e) fits the VMEM cell budget "
+            f"{budget} at batch={b}; shrink the sample batch")
+    return best
 
 
 def select_route(n_nodes: int, e_pad: int, batch: int, *, csc=None,
@@ -120,13 +172,24 @@ def select_route(n_nodes: int, e_pad: int, batch: int, *, csc=None,
     return "flat"
 
 
-@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_e"))
+@partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_e",
+                                   "skip_inactive"))
 def frontier_expand(src, dst, dist, sigma, level, *, csc=None,
-                    use_pallas=None, interpret=True,
-                    block_e=DEFAULT_BLOCK_E):
+                    use_pallas=None, interpret=None,
+                    block_e=DEFAULT_BLOCK_E, skip_inactive=True):
+    if interpret is None:
+        # default by backend: compile the Pallas kernels on real TPUs,
+        # interpret (and hence auto-route to the XLA ref) elsewhere —
+        # this is what makes the CSC lane reachable from the BFS
+        # drivers, which call this dispatcher without an interpret flag
+        interpret = jax.default_backend() != "tpu"
     batched = dist.ndim == 2
     batch = dist.shape[1] if batched else 1
     v1 = dist.shape[0]
+    # dist may arrive pre-padded to csc.v_pad rows (the CSC-aware BFS
+    # driver's allocation): every lane is row-count-preserving, so the
+    # caller's shape flows through with zero pads/slices; v1 - 1 is then
+    # a conservative stand-in for n_nodes in the flat-fit check.
     route = select_route(v1 - 1, src.shape[0], batch, csc=csc,
                          use_pallas=use_pallas, interpret=interpret,
                          block_e=block_e)
@@ -136,8 +199,9 @@ def frontier_expand(src, dst, dist, sigma, level, *, csc=None,
         s2 = sigma if batched else sigma[:, None]
         lv = (jnp.asarray(level, jnp.int32).reshape(batch) if batched
               else jnp.asarray(level, jnp.int32).reshape(1))
-        out = frontier_expand_node_blocked_pallas(csc, d2, s2, lv,
-                                                  interpret=interpret)
+        out = frontier_expand_node_blocked_pallas(
+            csc, d2, s2, lv, interpret=interpret,
+            skip_inactive=skip_inactive)
         return out if batched else out[:, 0]
     if route == "flat":
         if batched:

@@ -46,14 +46,17 @@ def frontier_expand_ref(src, dst, dist, sigma, level):
 def frontier_expand_node_blocked_ref(csc, dist, sigma, levels):
     """Node-blocked reference lane: expand over the CSC edge order.
 
-    ``dist``/``sigma`` are vertex-major (V+1, B).  The segment reduction
-    runs over the padded vertex range ``csc.v_pad`` so sink-padded edges
-    whose local row falls outside the logical range stay in bounds; the
-    result is sliced back to (V+1, B).
+    ``dist``/``sigma`` are vertex-major (V+1, B) — or already padded to
+    (csc.v_pad, B), the allocation of the CSC-aware BFS driver.  The
+    segment reduction runs over the padded vertex range ``csc.v_pad`` so
+    sink-padded edges whose local row falls outside the logical range
+    stay in bounds; the result comes back at the row count it was
+    handed (padded in -> padded out, no slice — shape identity is how
+    the driver tests assert the copy-free path).
     """
-    v1 = dist.shape[0]
+    rows = dist.shape[0]
     vals = jnp.where(dist[csc.src, :] == levels[None, :],
                      sigma[csc.src, :], 0.0)
     out = jax.ops.segment_sum(vals, csc.dst,
-                              num_segments=max(csc.v_pad, v1))
-    return out[:v1]
+                              num_segments=max(csc.v_pad, rows))
+    return out if rows >= csc.v_pad else out[:rows]

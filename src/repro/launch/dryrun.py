@@ -426,13 +426,18 @@ def run_betweenness(mesh_name: str, aggregation: str,
         log_inv_delta_u=sds((v,), jnp.float32))
     args = (graph, params, sds((v_pad,), jnp.float32), sds((), jnp.int32),
             sds((n_dev, v_pad), jnp.float32), sds((), jnp.int32),
+            sds((n_dev, v + 1), jnp.float32), sds((), jnp.int32),
             sds((n_dev, 2), jnp.uint32))
 
-    # lower the same lane run_kadabra executes: the batched sampler with
-    # the default B.  sample_batch clamps B to n0 (no point computing
-    # masked surplus columns), so the effective width — what the compiled
-    # program and run_kadabra at this epoch length actually run — is
-    # min(B, n0); record that, not the requested B.
+    # lower the batched sampling lane at an explicit width.  The graph
+    # here is abstract (ShapeDtypeStructs — no diameter estimate to
+    # resolve run_kadabra's per-instance B from), so batch_size=None
+    # falls back to DEFAULT_SAMPLE_BATCH_SIZE; pass the width
+    # resolve_sample_batch_size would pick (64 for R-MAT-like diameters)
+    # to lower exactly run_kadabra's lane.  sample_batch clamps B to n0
+    # (no point computing masked surplus columns), so the effective
+    # width — what the compiled program actually runs — is min(B, n0);
+    # record that, not the requested B.
     if batch_size is None:
         from repro.core.adaptive import DEFAULT_SAMPLE_BATCH_SIZE
         batch_size = DEFAULT_SAMPLE_BATCH_SIZE

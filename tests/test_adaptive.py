@@ -95,6 +95,40 @@ def test_kadabra_high_diameter_graph():
     assert np.abs(res.btilde - exact).max() < 0.1
 
 
+def test_sample_batch_size_resolution():
+    """The B heuristic reads (V, diameter estimate): wide batches on
+    low-diameter instances, narrow on high-diameter ones — and an
+    explicitly requested B always wins, at any diameter."""
+    from repro.core.adaptive import resolve_sample_batch_size
+    assert resolve_sample_batch_size(7, 100_000, 5) == 7
+    assert resolve_sample_batch_size(1, 100, 1000) == 1
+    assert resolve_sample_batch_size(None, 1 << 12, 8) == 64     # R-MAT-ish
+    assert resolve_sample_batch_size(None, 1 << 12, 100) == 16   # mid
+    assert resolve_sample_batch_size(None, 1 << 15, 400) == 8    # grid/road
+    # the config default defers to the heuristic
+    assert AdaptiveConfig().sample_batch_size is None
+
+
+def test_explicit_sample_batch_size_wins_end_to_end():
+    """Regression: an explicit sample_batch_size must drive the run.
+    On this low-diameter instance the heuristic resolves to B=64, so an
+    explicit 64 reproduces the auto run bit-for-bit under the same key,
+    while an explicit B=1 (a different sample stream) does not."""
+    g, _ = _small_world(seed=5, n=40)
+    cfg = AdaptiveConfig(eps=0.15, delta=0.1, n0_base=50)
+    from repro.core.adaptive import resolve_sample_batch_size
+    from repro.core.diameter import estimate_diameter
+    vd = int(estimate_diameter(g).vertex_diameter)
+    assert resolve_sample_batch_size(None, g.n_nodes, vd) == 64
+    import dataclasses as dc
+    res_auto = run_kadabra(g, config=cfg)
+    res_b64 = run_kadabra(g, config=dc.replace(cfg, sample_batch_size=64))
+    res_b1 = run_kadabra(g, config=dc.replace(cfg, sample_batch_size=1))
+    np.testing.assert_array_equal(res_auto.btilde, res_b64.btilde)
+    assert res_auto.tau == res_b64.tau
+    assert not np.array_equal(res_auto.btilde, res_b1.btilde)
+
+
 def test_fixed_sampling_baseline():
     g, _ = _small_world(seed=3)
     b = run_fixed_sampling(g, 2000)

@@ -140,6 +140,74 @@ def test_batched_convergence_to_exact_betweenness():
     np.testing.assert_allclose(btilde, exact, atol=0.04)
 
 
+def test_surplus_frame_decomposition_identity():
+    """The surplus frame IS the masked tail: the frame returned for n
+    samples plus its surplus frame equals, bit-for-bit, the frame of
+    ceil(n/B)*B samples under the same key (same rounds, same draws —
+    only the keep-mask attribution differs).  Reuse therefore cannot
+    change the estimate's distribution: it only moves i.i.d. samples
+    from the dropped tail of one epoch into the next epoch's frame."""
+    g, _G = _test_graph(seed=6, n=25)
+    n, B = 10, 4                      # 3 rounds, surplus = 2
+    key = jax.random.PRNGKey(13)
+    (c, tau), (sc, st) = jax.jit(
+        lambda k: sample_batch(g, k, n, batch_size=B,
+                               return_carry=True))(key)
+    assert int(tau) == n and int(st) == 2
+    c_full, tau_full = jax.jit(
+        lambda k: sample_batch(g, k, 12, batch_size=B))(key)
+    np.testing.assert_array_equal(np.asarray(c + sc), np.asarray(c_full))
+    assert int(tau + st) == int(tau_full) == 12
+    # B | n: no surplus
+    (_, _), (sc0, st0) = jax.jit(
+        lambda k: sample_batch(g, k, 8, batch_size=B,
+                               return_carry=True))(key)
+    assert int(st0) == 0 and float(jnp.abs(sc0).max()) == 0.0
+
+
+def test_surplus_carry_folds_into_next_frame():
+    """carry=(counts, tau) seeds the next call's frame additively —
+    exactly how the adaptive driver chains epochs."""
+    g, _G = _test_graph(seed=6, n=25)
+    key1, key2 = jax.random.PRNGKey(1), jax.random.PRNGKey(2)
+    (_, _), (sc, st) = jax.jit(
+        lambda k: sample_batch(g, k, 10, batch_size=4,
+                               return_carry=True))(key1)
+    (c_carried, t_carried), _ = jax.jit(
+        lambda k: sample_batch(g, k, 10, batch_size=4, carry=(sc, st),
+                               return_carry=True))(key2)
+    (c_bare, t_bare), _ = jax.jit(
+        lambda k: sample_batch(g, k, 10, batch_size=4,
+                               return_carry=True))(key2)
+    np.testing.assert_array_equal(np.asarray(c_carried),
+                                  np.asarray(c_bare + sc))
+    assert int(t_carried) == int(t_bare) + int(st)
+
+
+def test_surplus_reuse_estimates_converge_to_exact():
+    """Chained surplus-reusing epochs (the adaptive driver's loop shape)
+    stay an unbiased estimator: the pooled estimate converges to exact
+    Brandes betweenness within the same standard-error tolerance as the
+    mask-and-drop lane."""
+    g, _G = _test_graph(seed=0, n=30)
+    epochs, n0, B = 12, 250, 32       # surplus = 6 per epoch, reused
+    counts = jnp.zeros((g.n_nodes + 1,), jnp.float32)
+    tau = jnp.int32(0)
+    sc, st = jnp.zeros((g.n_nodes + 1,), jnp.float32), jnp.int32(0)
+    step = jax.jit(lambda k, sc, st: sample_batch(
+        g, k, n0, batch_size=B, carry=(sc, st), return_carry=True))
+    key = jax.random.PRNGKey(17)
+    for _ in range(epochs):
+        key, ke = jax.random.split(key)
+        (c, t), (sc, st) = step(ke, sc, st)
+        counts = counts + c
+        tau = tau + t
+    assert int(tau) == epochs * n0 + (epochs - 1) * 6
+    btilde = np.asarray(counts[: g.n_nodes]) / int(tau)
+    exact = brandes_numpy(g)
+    np.testing.assert_allclose(btilde, exact, atol=0.04)
+
+
 def test_batched_disconnected_pairs_are_dropped():
     """Invalid (disconnected) samples contribute nothing but still count
     toward tau — identical to the sequential lane's semantics."""
