@@ -120,7 +120,7 @@ def main():
     for mesh in ("single", "multi"):
         print(f"\n=== roofline ({mesh}-pod, baselines) ===")
         print(format_table(rows, mesh))
-    print("\n=== perf variants (hillclimb; see EXPERIMENTS.md §Perf) ===")
+    print("\n=== perf variants (hillclimb; see DESIGN.md §Perf) ===")
     print(format_table(rows, "single", variants=True))
     print(format_table(rows, "multi", variants=True))
     n_ok = sum(1 for r in rows if "compute_s" in r)

@@ -27,6 +27,13 @@ report).  Laptop-scale stand-ins for the paper's instances:
            at V=2^15: per-BFS-level skipped-block ratios and the
            skip/no-skip speedup of the node-blocked kernel (the
            O(frontier)-blocks-per-level story of the CSC BFS driver).
+  partition_sweep
+           Replicated vs vertex-sharded frontier lane at V in
+           {2^15, 2^17} on an 8-fake-device mesh (subprocess):
+           per-device frontier-lane graph bytes (asserted at
+           <= (1/n_dev + eps) of the replicated CSCLayout), per-level
+           frontier-exchange volume, and samples/s of the independent
+           vs cooperative sampling lanes.
   kernels  Pallas-kernel oracle microbenches (XLA path timings; the
            Pallas path is interpret-mode on CPU and not timed).
 
@@ -475,6 +482,182 @@ def bench_csc_driver_sweep(full: bool):
 
 
 # ---------------------------------------------------------------------------
+# Partition sweep: replicated vs vertex-sharded frontier lane
+# ---------------------------------------------------------------------------
+
+_PARTITION_SCRIPT = r"""
+import os, json, sys, time
+args = json.loads(os.environ.get("PARTITION_SWEEP_ARGS", "{}"))
+n_dev = int(args.get("n_dev", 8))
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={n_dev}")
+import jax, jax.numpy as jnp, numpy as np
+from functools import partial
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map, make_mesh_compat
+from repro.core import build_csc_layout, erdos_renyi_graph, partition_graph
+from repro.core.bfs import bfs_sssp_batched
+from repro.core.sampler import sample_batch
+
+B = int(args.get("batch", 8))
+n = int(args.get("n_samples", 16))
+reps = int(args.get("reps", 1))
+mesh = make_mesh_compat((n_dev,), ("data",))
+axes = ("data",)
+
+def timeit(fn, *a):
+    # compile + warm; block so the async warmup dispatch cannot leak
+    # into the timed window (worst at reps=1)
+    jax.block_until_ready(fn(*a))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+for scale in args.get("scales", [15, 17]):
+    v = 1 << scale
+    g = erdos_renyi_graph(v, 4.0, seed=scale)
+    csc = build_csc_layout(g, batch=B)
+    pg = partition_graph(g, n_dev, batch=B)
+    # --- per-device graph bytes: the frontier-lane edge structure ------
+    rep_bytes = sum(int(np.asarray(a).nbytes) for a in
+                    (csc.src, csc.dst, csc.block_nb, csc.block_first))
+    tot_shard = sum(int(np.asarray(a).nbytes) for a in
+                    (pg.shards.src, pg.shards.dst, pg.shards.block_nb,
+                     pg.shards.block_first))
+    per_dev = tot_shard // n_dev
+    # acceptance: per-device shard bytes <= (1/n_dev + eps) * replicated
+    # (eps covers the per-bucket block padding of small shards)
+    assert per_dev <= rep_bytes * (1.0 / n_dev + 0.20), (per_dev, rep_bytes)
+    # --- per-level frontier-exchange volume (real BFS trace) -----------
+    rng = np.random.default_rng(scale)
+    sources = jnp.asarray(rng.integers(0, v, B), jnp.int32)
+    res = jax.jit(bfs_sssp_batched)(g, sources)
+    dist = np.asarray(res.dist)
+    depth = int(np.asarray(res.levels).max())
+    # masked_frontier_bytes is the LOGICAL frontier volume per level —
+    # what the bitmap-scheduled exchange (ROADMAP follow-up) would move;
+    # the shipped lane all-gathers the dense (v_pad, B) slice every
+    # level (dense_gather_bytes)
+    levels = []
+    for lv in range(depth + 1):
+        rows = int(((dist == lv).any(axis=1)).sum())
+        levels.append({"level": lv, "frontier_rows": rows,
+                       "masked_frontier_bytes": rows * B * 4,
+                       "dense_gather_bytes": pg.v_pad * B * 4})
+    # --- samples/s: replicated independent vs sharded cooperative ------
+    gspec = pg.partition_spec(axes)
+    rep_gspec = jax.tree.map(lambda _: P(), g)
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(gspec, P()),
+             out_specs=(P(), P()), check_vma=False)
+    def shard_samp(pgl, k):
+        return sample_batch(pgl, k, n, batch_size=B, axis=axes)
+
+    @jax.jit
+    @partial(shard_map, mesh=mesh, in_specs=(rep_gspec, P("data")),
+             out_specs=(P("data"), P("data")), check_vma=False)
+    def rep_samp(gl, ks):
+        c, t = sample_batch(gl, ks[0], n, batch_size=B)
+        return c[None], t.reshape(1)
+
+    key = jax.random.PRNGKey(scale)
+    t_shard = timeit(shard_samp, pg, key)
+    t_rep = timeit(rep_samp, g, jax.random.split(key, n_dev))
+    row = {
+        "scale": scale, "n_nodes": v, "n_edges_directed": int(g.n_edges),
+        "n_dev": n_dev, "batch": B, "n_samples": n,
+        "blocking": {"block_v": pg.shards.block_v,
+                     "block_e": pg.shards.block_e,
+                     "shard_rows": pg.shard_rows, "v_pad": pg.v_pad},
+        "replicated_csc_bytes": rep_bytes,
+        "per_device_shard_bytes": per_dev,
+        "bytes_ratio": per_dev / rep_bytes,
+        "dense_gather_bytes_per_level": pg.v_pad * B * 4,
+        "bfs_depth": depth,
+        "exchange_per_level": levels,
+        "samples_per_s_sharded": n / t_shard,
+        "samples_per_s_replicated_total": n_dev * n / t_rep,
+        "seconds_sharded": t_shard, "seconds_replicated": t_rep,
+    }
+    print("ROW " + json.dumps(row), flush=True)
+print("PARTITION SWEEP OK")
+"""
+
+
+def run_partition_sweep(scales, n_dev: int = 8, batch: int = 8,
+                        n_samples: int = 16, reps: int = 1,
+                        write_json: bool = True, full: bool = False):
+    """Replicated vs vertex-sharded frontier lane (subprocess: the fake
+    device count must be set before JAX initializes).
+
+    Measures, per scale: (i) the per-device frontier-lane graph bytes —
+    the acceptance claim of the partitioning subsystem, asserted inside
+    the script at <= (1/n_dev + eps) of the replicated CSCLayout; (ii)
+    the per-level frontier-exchange volume (dense_gather_bytes = the
+    v_pad * B * 4 all-gather the shipped lane performs each level;
+    masked_frontier_bytes = the logical rows * B * 4 a bitmap-scheduled
+    exchange would move — the recorded follow-up); (iii) samples/s of
+    the replicated
+    independent lane (n_dev * n samples) vs the sharded cooperative
+    lane (n samples, the whole mesh on one batch).  On this container
+    fake devices serialize, so the sharded lane's absolute rate
+    understates real hardware, but the memory + exchange columns are
+    exact.  Returns the rows; ``write_json`` appends to
+    BENCH_sampling.json."""
+    import json
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PARTITION_SWEEP_ARGS"] = json.dumps({
+        "scales": list(scales), "n_dev": n_dev, "batch": batch,
+        "n_samples": n_samples, "reps": reps})
+    out = subprocess.run([sys.executable, "-c", _PARTITION_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=3600)
+    if out.returncode or "PARTITION SWEEP OK" not in out.stdout:
+        raise RuntimeError(f"partition sweep subprocess failed:\n"
+                           f"stdout:{out.stdout[-2000:]}\n"
+                           f"stderr:{out.stderr[-2000:]}")
+    rows = [json.loads(line[4:]) for line in out.stdout.splitlines()
+            if line.startswith("ROW ")]
+    for row in rows:
+        print(f"  V=2^{row['scale']:<3} shard/replicated bytes "
+              f"{row['bytes_ratio']:.3f} (1/n_dev={1/row['n_dev']:.3f})  "
+              f"sharded {row['samples_per_s_sharded']:,.1f} samples/s vs "
+              f"replicated {row['samples_per_s_replicated_total']:,.1f} "
+              f"(x{row['n_dev']} devices)")
+        emit(f"partition_sweep.s{row['scale']}.sharded",
+             row["seconds_sharded"] * 1e6 / row["n_samples"],
+             f"bytes_ratio={row['bytes_ratio']:.3f};"
+             f"samples_per_s={row['samples_per_s_sharded']:.1f}")
+    record = {
+        "section": "partition_sweep",
+        "instance": {"family": "erdos_renyi", "avg_degree": 4.0},
+        "metric": "per-device frontier-lane bytes (sharded vs replicated "
+                  "CSCLayout); per-level exchange: dense_gather_bytes = "
+                  "actual all-gather, masked_frontier_bytes = logical "
+                  "frontier (bitmap-exchange follow-up); samples/s "
+                  "replicated-independent vs sharded-cooperative; fake "
+                  "devices serialize",
+        "full": full,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "device": "cpu",
+        "results": rows,
+    }
+    if write_json:
+        _append_bench_record(record)
+    return record
+
+
+def bench_partition_sweep(full: bool):
+    print("\n== partition sweep: replicated vs vertex-sharded lane ==")
+    run_partition_sweep([15, 17], n_dev=8, batch=8,
+                        n_samples=32 if full else 16,
+                        reps=3 if full else 1, full=full)
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenches
 # ---------------------------------------------------------------------------
 
@@ -512,7 +695,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     sections = ["table2", "fig2", "fig3", "fig4", "batch_sweep",
-                "node_blocked_sweep", "csc_driver_sweep", "kernels"]
+                "node_blocked_sweep", "csc_driver_sweep", "partition_sweep",
+                "kernels"]
     ap.add_argument("section", nargs="?", default=None, choices=sections,
                     help="run a single section (same as --only)")
     ap.add_argument("--only", default=None, choices=sections)
@@ -527,6 +711,7 @@ def main():
         "fig4": bench_fig4, "batch_sweep": bench_batch_sweep,
         "node_blocked_sweep": bench_node_blocked_sweep,
         "csc_driver_sweep": bench_csc_driver_sweep,
+        "partition_sweep": bench_partition_sweep,
         "kernels": bench_kernels,
     }
     for name, fn in jobs.items():

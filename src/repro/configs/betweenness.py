@@ -2,8 +2,8 @@
 
 Not part of the 40 assigned cells — registered so the launcher /
 benchmarks can drive it through the same interface, and so the dry-run
-can lower one SPMD epoch step on the production mesh (EXPERIMENTS.md
-§Dry-run, bonus row).  Graph scale: R-MAT 2^20 x 30 for laptop runs;
+can lower one SPMD epoch step on the production mesh (DESIGN.md §Perf,
+cell 3).  Graph scale: R-MAT 2^20 x 30 for laptop runs;
 the dry-run lowers abstract edge arrays at scale 2^22 (the 16 GiB HBM of
 a v5e bounds a *replicated* graph at ~1.5 B directed edges — DESIGN.md
 §Hardware adaptation discusses the edge-sharded mode beyond that)."""

@@ -1,33 +1,43 @@
 # The paper's primary contribution: MPI-style parallel adaptive sampling
 # for betweenness approximation, mapped onto a JAX TPU mesh.
-from .graph import (CSCLayout, Graph, build_csc_layout, build_graph,
-                    erdos_renyi_graph, from_edge_list, grid_graph,
-                    hyperbolic_graph, rmat_graph, with_csc_layout)
+from .graph import (CSCLayout, Graph, bucket_layout, build_csc_layout,
+                    build_graph, erdos_renyi_graph, from_edge_list,
+                    grid_graph, hyperbolic_graph, rmat_graph,
+                    with_csc_layout)
+from .partition import (PartitionedGraph, ShardedCSCLayout, global_row,
+                        partition_graph, shard_vertex_range, vertex_owner)
 from .bfs import (BFSResult, BidirResult, bfs_sssp, bfs_sssp_batched,
-                  bidirectional_bfs, bidirectional_bfs_batched)
+                  bfs_sssp_batched_sharded, bidirectional_bfs,
+                  bidirectional_bfs_batched,
+                  bidirectional_bfs_batched_sharded)
 from .brandes import brandes_jax, brandes_numpy
-from .diameter import DiameterEstimate, estimate_diameter
+from .diameter import (DiameterEstimate, estimate_diameter,
+                       estimate_diameter_sharded)
 from .kadabra import (KadabraParams, calibrate_deltas, check_stop,
                       compute_omega, f_term, g_term)
 from .sampler import (PathSample, sample_batch, sample_pair, sample_pairs,
-                      sample_path, sample_path_batched)
+                      sample_path, sample_path_batched,
+                      sample_path_batched_sharded)
 from .epoch import StateFrame, epoch_length, zero_frame
 from .adaptive import (AdaptiveConfig, BetweennessResult, EpochStats,
                        run_fixed_sampling, run_kadabra)
 from . import distributed
 
 __all__ = [
-    "Graph", "CSCLayout", "build_graph", "build_csc_layout",
-    "with_csc_layout", "from_edge_list", "rmat_graph",
+    "Graph", "CSCLayout", "bucket_layout", "build_graph",
+    "build_csc_layout", "with_csc_layout", "from_edge_list", "rmat_graph",
     "hyperbolic_graph", "grid_graph", "erdos_renyi_graph",
+    "PartitionedGraph", "ShardedCSCLayout", "partition_graph",
+    "vertex_owner", "global_row", "shard_vertex_range",
     "BFSResult", "BidirResult", "bfs_sssp", "bfs_sssp_batched",
-    "bidirectional_bfs", "bidirectional_bfs_batched",
+    "bfs_sssp_batched_sharded", "bidirectional_bfs",
+    "bidirectional_bfs_batched", "bidirectional_bfs_batched_sharded",
     "brandes_jax", "brandes_numpy",
-    "DiameterEstimate", "estimate_diameter",
+    "DiameterEstimate", "estimate_diameter", "estimate_diameter_sharded",
     "KadabraParams", "calibrate_deltas", "check_stop", "compute_omega",
     "f_term", "g_term",
     "PathSample", "sample_batch", "sample_pair", "sample_pairs",
-    "sample_path", "sample_path_batched",
+    "sample_path", "sample_path_batched", "sample_path_batched_sharded",
     "StateFrame", "epoch_length", "zero_frame",
     "AdaptiveConfig", "BetweennessResult", "EpochStats",
     "run_fixed_sampling", "run_kadabra", "distributed",

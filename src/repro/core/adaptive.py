@@ -17,13 +17,23 @@ state is a (counts, tau) frame and whose stop rule reads an aggregated
 frame fits the same driver (the paper's closing claim).  The stopping rule
 is a callback as well.
 
-Two execution paths share the epoch logic:
+Three execution paths share the epoch logic:
 
   * ``mesh=None`` — single-device (the "shared-memory competitor" lane,
     used by unit tests and the laptop benchmarks);
   * ``mesh=...``  — SPMD via shard_map; frames carry a leading device
     axis sharded over all mesh axes; aggregation is the hierarchical
-    reduce of repro.core.distributed.
+    reduce of repro.core.distributed;
+  * a :class:`repro.core.partition.PartitionedGraph` + ``mesh=...`` —
+    the vertex-sharded lane (DESIGN.md §Partitioning): the graph's
+    frontier structure is partitioned over the mesh and every phase
+    samples COOPERATIVELY (one collective BFS batch at a time), so the
+    per-device graph memory is O(E / n_dev) and the frames come back
+    replicated without any reduction collective.
+
+``checkpoint_dir=``/``checkpoint_every=`` add mid-run persistence and
+bit-identical resume to all three lanes (the elastic-restart story for
+long billion-edge runs).
 """
 from __future__ import annotations
 
@@ -39,11 +49,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from . import distributed as dist
-from .diameter import estimate_diameter
+from .diameter import estimate_diameter, estimate_diameter_sharded
 from .epoch import StateFrame, epoch_length, zero_frame
 from .graph import Graph
 from .kadabra import (KadabraParams, calibrate_deltas, check_stop,
                       compute_omega)
+from .partition import PartitionedGraph
 from .sampler import sample_batch
 
 __all__ = ["DEFAULT_SAMPLE_BATCH_SIZE", "AdaptiveConfig",
@@ -139,11 +150,75 @@ def _check(agg: StateFrame, params: KadabraParams, n_nodes: int):
     return check_stop(agg.counts[:n_nodes], agg.tau, params)
 
 
+class _EpochCheckpointer:
+    """Mid-run persistence of the adaptive loop's state (the elastic
+    restart of long billion-edge runs): every ``checkpoint_every``
+    epochs the tuple ``(agg counts, agg tau, frame counts, frame tau,
+    surplus counts, surplus tau, rng key)`` is published atomically via
+    ``repro.checkpoint.store.CheckpointManager``; a fresh ``run_kadabra``
+    pointed at the same directory re-derives the deterministic phases
+    1-2 (diameter + calibration replay bit-for-bit from the run key) and
+    resumes the epoch loop from ``latest_step`` — the resumed trajectory
+    is identical to the uninterrupted one because the loop key is saved
+    *after* the epoch's split.  ``shardings`` (optional pytree matching
+    the state tuple) re-places the restored host arrays onto whatever
+    mesh the restoring job runs (the store's elastic-restore path; the
+    frame's leading device axis must still match the new mesh size).
+    """
+
+    def __init__(self, checkpoint_dir, checkpoint_every: int,
+                 shardings=None):
+        self.mgr = None
+        self.shardings = shardings
+        if checkpoint_dir:
+            from repro.checkpoint.store import CheckpointManager
+            self.mgr = CheckpointManager(checkpoint_dir, keep=3,
+                                         save_every=max(1, checkpoint_every))
+
+    # The state tuple's field order lives ONLY in the two methods below:
+    # every lane packs/unpacks through them, so a layout change cannot
+    # desynchronize save and restore (equal-shape counts/tau leaves
+    # would otherwise mix silently).
+
+    def restore_state(self, agg, frame, sur_counts, sur_tau, key):
+        """-> (agg, frame, sur_counts, sur_tau, key, epoch, done): the
+        latest checkpoint when one exists, the passed-in templates
+        (epoch 0, not done) otherwise.  ``agg``/``frame`` are
+        StateFrames.  ``done`` short-circuits the epoch loop when the
+        checkpointed run had already converged — resuming a completed
+        run must re-flush the same state, not sample extra epochs."""
+        fresh = (agg, frame, sur_counts, sur_tau, key, 0, False)
+        if self.mgr is None:
+            return fresh
+        out = self.mgr.restore_or_none(
+            (agg.counts, agg.tau, frame.counts, frame.tau, sur_counts,
+             sur_tau, key), shardings=self.shardings)
+        if out is None:
+            return fresh
+        (ac, at, fc, ft, sc, st, k), step, meta = out
+        return (StateFrame(ac, at), StateFrame(fc, ft), sc, st, k,
+                int(meta.get("epoch", step)), bool(meta.get("done", False)))
+
+    def save_state(self, epoch: int, agg, frame, sur_counts, sur_tau, key,
+                   done: bool = False):
+        if self.mgr is not None:
+            self.mgr.maybe_save(
+                epoch, (agg.counts, agg.tau, frame.counts, frame.tau,
+                        sur_counts, sur_tau, key),
+                metadata={"epoch": epoch, "done": bool(done)})
+
+    def wait(self):
+        if self.mgr is not None:
+            self.mgr.wait()
+
+
 # ---------------------------------------------------------------------------
 # Single-device lane
 # ---------------------------------------------------------------------------
 
-def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
+def _run_single(graph: Graph, cfg: AdaptiveConfig, key,
+                ckpt: Optional[_EpochCheckpointer] = None
+                ) -> BetweennessResult:
     v_pad = _pad_len(graph.n_nodes, 1)
     t0 = time.perf_counter()
     diam = jax.jit(partial(estimate_diameter, n_sweeps=cfg.diameter_sweeps))(
@@ -195,6 +270,9 @@ def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
     done = False
     epoch = 0
     k = key
+    if ckpt is not None:
+        agg, frame, sur_counts, sur_tau, k, epoch, done = ckpt.restore_state(
+            agg, frame, sur_counts, sur_tau, k)
     while not done and epoch < cfg.max_epochs:
         te = time.perf_counter()
         k, ke = jax.random.split(k)
@@ -207,6 +285,11 @@ def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
         epoch += 1
         stats.append(EpochStats(epoch, int(agg.tau), float(mf), float(mg),
                                 time.perf_counter() - te))
+        if ckpt is not None:
+            ckpt.save_state(epoch, agg, frame, sur_counts, sur_tau, k,
+                            done=done)
+    if ckpt is not None:
+        ckpt.wait()
     # final flush: the frame sampled during the last epoch still counts,
     # and so does its surplus tail (computed, valid, tau-counted)
     agg = agg + frame
@@ -225,8 +308,9 @@ def _run_single(graph: Graph, cfg: AdaptiveConfig, key) -> BetweennessResult:
 # SPMD lane (shard_map over the production mesh)
 # ---------------------------------------------------------------------------
 
-def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
-              mesh: Mesh) -> BetweennessResult:
+def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key, mesh: Mesh,
+              ckpt: Optional[_EpochCheckpointer] = None
+              ) -> BetweennessResult:
     all_axes = tuple(mesh.axis_names)
     n_dev = int(np.prod(mesh.devices.shape))
     local_axes, global_axes = dist.sampler_axes(mesh)
@@ -293,6 +377,21 @@ def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
     done = False
     epoch = 0
     k = key
+    if ckpt is not None:
+        # shardings follow the restore_state tuple order: (agg counts,
+        # agg tau, frame counts, frame tau, surplus counts, surplus
+        # tau, key) — frames sharded, everything else replicated
+        ckpt.shardings = (
+            NamedSharding(mesh, rep), NamedSharding(mesh, rep),
+            NamedSharding(mesh, frame_spec), NamedSharding(mesh, rep),
+            NamedSharding(mesh, frame_spec), NamedSharding(mesh, rep),
+            NamedSharding(mesh, rep))
+        (aggf, framef, sur_counts, sur_tau, k, epoch,
+         done) = ckpt.restore_state(
+            StateFrame(agg_counts, agg_tau),
+            StateFrame(frame_counts, frame_tau), sur_counts, sur_tau, k)
+        agg_counts, agg_tau = aggf
+        frame_counts, frame_tau = framef
     while not done and epoch < cfg.max_epochs:
         te = time.perf_counter()
         k, ke = jax.random.split(k)
@@ -306,6 +405,12 @@ def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key,
         epoch += 1
         stats.append(EpochStats(epoch, int(agg_tau), float(mf), float(mg),
                                 time.perf_counter() - te))
+        if ckpt is not None:
+            ckpt.save_state(epoch, StateFrame(agg_counts, agg_tau),
+                            StateFrame(frame_counts, frame_tau),
+                            sur_counts, sur_tau, k, done=done)
+    if ckpt is not None:
+        ckpt.wait()
 
     # final flush of the in-flight frame + the last surplus tail (both
     # computed and tau-counted; dropping them would only waste samples)
@@ -348,7 +453,7 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
     batch_size) batched BFS rounds per device — then evaluate the stop
     rule on the consistent snapshot.  Exposed at module level so the
     multi-pod dry-run can .lower()/.compile() it on the production mesh
-    and extract its roofline terms (EXPERIMENTS.md §Perf, cell #3).
+    and extract its roofline terms (DESIGN.md §Perf, cell #3).
 
     Each device's masked surplus tail (ceil(n0/B)*B - n0 extra i.i.d.
     samples of its last round) is carried into its next epoch's frame
@@ -412,13 +517,186 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
 
 
 # ---------------------------------------------------------------------------
+# Sharded lane (vertex-partitioned graph over the mesh)
+# ---------------------------------------------------------------------------
+
+def make_epoch_step_sharded(mesh, n_nodes: int, v_pad: int, n0: int,
+                            batch_size: int = 1):
+    """One jit-able COOPERATIVE epoch on a :class:`PartitionedGraph`.
+
+    The graph is sharded over the whole mesh, so the mesh advances one
+    batch of B samples per BFS round *collectively* (sharded frontier
+    exchange inside ``repro.core.bfs``) instead of sampling
+    independently per device: the frame is replicated by construction
+    and folds into the aggregate without any reduction collective — the
+    paper's epoch double-buffering survives purely as the dataflow that
+    lets the scheduler overlap the stop-rule evaluation with the next
+    frame's sampling.  ``n0`` is samples per epoch for the WHOLE mesh
+    (``epoch_length(1)``: the cooperative mesh is one fast sampler).
+
+    Signature of the returned fn (all frames replicated):
+      (pg, params, agg_counts (V_pad,), agg_tau (), frame_counts
+       (V_pad,), frame_tau (), sur_counts (V+1,), sur_tau (),
+       key (2,) replicated)
+      -> (agg_counts, agg_tau, new_frame, new_tau, new_sur_counts,
+          new_sur_tau, done, max_f, max_g)
+
+    Exposed at module level so the multi-pod dry-run can
+    .lower()/.compile() it on the production mesh and read the
+    per-level frontier-exchange volume off its optimized HLO
+    (DESIGN.md §Partitioning).
+    """
+    all_axes = tuple(mesh.axis_names)
+    rep = P()
+
+    def epoch_step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
+                   sur_counts, sur_tau, k):
+        gspec = g.partition_spec(all_axes)
+        pspec = jax.tree.map(lambda _: rep, params)
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(gspec, pspec, rep, rep, rep, rep, rep, rep, rep),
+                 out_specs=(rep,) * 9, check_vma=False)
+        def _step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
+                  sur_counts, sur_tau, k):
+            # 1. previous frame -> aggregate (replicated: no collective)
+            agg_counts = agg_counts + frame_counts
+            agg_tau = agg_tau + frame_tau
+            # 2. cooperatively sample the next frame over the sharded
+            #    graph; the previous surplus tail seeds it
+            (c, t), (sc, st) = sample_batch(g, k, n0,
+                                            batch_size=batch_size,
+                                            carry=(sur_counts, sur_tau),
+                                            return_carry=True,
+                                            axis=all_axes)
+            new_counts = jnp.zeros((v_pad,),
+                                   jnp.float32).at[: c.shape[0]].set(c)
+            # 3. stop rule on the consistent snapshot
+            done, mf, mg = _check(StateFrame(agg_counts, agg_tau), params,
+                                  n_nodes)
+            return (agg_counts, agg_tau, new_counts, t, sc, st,
+                    done, mf, mg)
+
+        return _step(g, params, agg_counts, agg_tau, frame_counts,
+                     frame_tau, sur_counts, sur_tau, k)
+
+    return epoch_step
+
+
+def _run_spmd_sharded(pg: PartitionedGraph, cfg: AdaptiveConfig, key,
+                      mesh: Mesh,
+                      ckpt: Optional[_EpochCheckpointer] = None
+                      ) -> BetweennessResult:
+    """The adaptive loop on a vertex-partitioned graph: every phase
+    (diameter, calibration, epochs) runs the cooperative sharded lane —
+    no device ever materializes the full frontier-lane edge structure.
+    """
+    all_axes = tuple(mesh.axis_names)
+    n_dev = int(np.prod(mesh.devices.shape))
+    if pg.n_shards != n_dev:
+        raise ValueError(
+            f"PartitionedGraph carries {pg.n_shards} shards but the mesh "
+            f"has {n_dev} devices; rebuild with partition_graph(graph, "
+            f"{n_dev})")
+    rep = P()
+    gspec = pg.partition_spec(all_axes)
+    v_pad = _pad_len(pg.n_nodes, n_dev)
+    v1 = pg.n_nodes + 1
+
+    # ---- phase 1: sharded double-sweep diameter -------------------------
+    @partial(shard_map, mesh=mesh, in_specs=(gspec,), out_specs=rep,
+             check_vma=False)
+    def diam_step(g):
+        est = estimate_diameter_sharded(g, n_sweeps=cfg.diameter_sweeps,
+                                        axis=all_axes)
+        return est.vertex_diameter
+
+    t0 = time.perf_counter()
+    vd = int(jax.jit(diam_step)(pg))
+    t_diam = time.perf_counter() - t0
+    bsz = resolve_sample_batch_size(cfg.sample_batch_size, pg.n_nodes, vd)
+
+    # ---- phase 2: cooperative calibration (one shared sample stream) ----
+    # calib_samples_per_device keeps its meaning across lanes: the mesh
+    # cooperatively draws what n_dev independent devices would, so
+    # btilde0's noise level matches the replicated SPMD lane at the
+    # same config
+    n_cal = cfg.calib_samples_per_device * n_dev
+
+    @partial(shard_map, mesh=mesh, in_specs=(gspec, rep),
+             out_specs=(rep, rep), check_vma=False)
+    def calib_step(g, k):
+        c, t = sample_batch(g, k, n_cal, batch_size=bsz, axis=all_axes)
+        cp = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
+        return cp, t
+
+    t0 = time.perf_counter()
+    key, k_cal = jax.random.split(key)
+    counts0, tau0 = jax.jit(calib_step)(pg, k_cal)
+    btilde0 = (counts0[: pg.n_nodes]
+               / jnp.maximum(tau0.astype(jnp.float32), 1.0))
+    params = jax.jit(partial(_make_params, cfg=cfg))(pg, vd=vd,
+                                                     btilde0=btilde0)
+    t_cal = time.perf_counter() - t0
+
+    # the cooperative mesh is ONE fast sampler: paper's shared-memory
+    # epoch schedule, not the per-device one
+    n0 = epoch_length(1, base=cfg.n0_base, exponent=cfg.n0_exponent)
+    epoch_jit = jax.jit(make_epoch_step_sharded(mesh, pg.n_nodes, v_pad, n0,
+                                                batch_size=bsz))
+
+    agg = zero_frame(v_pad)
+    frame = zero_frame(v_pad)
+    sur_counts = jnp.zeros((v1,), jnp.float32)
+    sur_tau = jnp.int32(0)
+    stats = []
+    t0 = time.perf_counter()
+    done = False
+    epoch = 0
+    k = key
+    if ckpt is not None:
+        agg, frame, sur_counts, sur_tau, k, epoch, done = ckpt.restore_state(
+            agg, frame, sur_counts, sur_tau, k)
+    while not done and epoch < cfg.max_epochs:
+        te = time.perf_counter()
+        k, ke = jax.random.split(k)
+        ac, at, fc, ft, sur_counts, sur_tau, done_dev, mf, mg = epoch_jit(
+            pg, params, agg.counts, agg.tau, frame.counts, frame.tau,
+            sur_counts, sur_tau, ke)
+        agg = StateFrame(ac, at)
+        frame = StateFrame(fc, ft)
+        done = bool(done_dev)
+        epoch += 1
+        stats.append(EpochStats(epoch, int(agg.tau), float(mf), float(mg),
+                                time.perf_counter() - te))
+        if ckpt is not None:
+            ckpt.save_state(epoch, agg, frame, sur_counts, sur_tau, k,
+                            done=done)
+    if ckpt is not None:
+        ckpt.wait()
+    # final flush (frames are replicated: plain adds)
+    agg = agg + frame
+    agg = StateFrame(
+        agg.counts.at[:v1].add(sur_counts), agg.tau + sur_tau)
+    t_samp = time.perf_counter() - t0
+
+    tau = int(agg.tau)
+    btilde = np.asarray(agg.counts[: pg.n_nodes]) / max(tau, 1)
+    return BetweennessResult(
+        btilde, tau, epoch, bool(done), float(params.omega), vd, stats,
+        {"diameter": t_diam, "calibration": t_cal, "sampling": t_samp})
+
+
+# ---------------------------------------------------------------------------
 # Public entry points
 # ---------------------------------------------------------------------------
 
 def run_kadabra(graph: Graph, *, eps: Optional[float] = None,
                 delta: Optional[float] = None,
                 key=None, mesh: Optional[Mesh] = None,
-                config: Optional[AdaptiveConfig] = None) -> BetweennessResult:
+                config: Optional[AdaptiveConfig] = None,
+                checkpoint_dir: Optional[str] = None,
+                checkpoint_every: int = 1) -> BetweennessResult:
     """Approximate betweenness with the paper's parallel KADABRA.
 
     Explicitly passed ``eps``/``delta`` always take precedence over the
@@ -426,6 +704,19 @@ def run_kadabra(graph: Graph, *, eps: Optional[float] = None,
     when no config was given, silently ignoring explicit kwargs
     otherwise); left as ``None`` they fall back to the config's values —
     ``AdaptiveConfig``'s defaults (0.01 / 0.1) when no config either.
+
+    ``graph`` may be a replicated :class:`Graph` (each device samples
+    independently; ``mesh=None`` is the single-device lane) or a
+    :class:`repro.core.partition.PartitionedGraph` (the vertex-sharded
+    lane: the mesh samples cooperatively over the partitioned edge
+    structure; a mesh whose device count equals ``pg.n_shards`` is
+    required).
+
+    ``checkpoint_dir`` enables mid-run persistence: every
+    ``checkpoint_every`` epochs the sampling state is published through
+    ``repro.checkpoint.store``; a rerun pointed at the same directory
+    resumes from the latest checkpoint with a bit-identical trajectory
+    (see :class:`_EpochCheckpointer`).
     """
     cfg = config if config is not None else AdaptiveConfig()
     overrides = {}
@@ -437,9 +728,17 @@ def run_kadabra(graph: Graph, *, eps: Optional[float] = None,
         cfg = dataclasses.replace(cfg, **overrides)
     if key is None:
         key = jax.random.PRNGKey(0)
+    ckpt = (_EpochCheckpointer(checkpoint_dir, checkpoint_every)
+            if checkpoint_dir else None)
+    if isinstance(graph, PartitionedGraph):
+        if mesh is None:
+            raise ValueError(
+                "a PartitionedGraph needs the mesh its shards map onto "
+                "(mesh=...); use a plain Graph for the single-device lane")
+        return _run_spmd_sharded(graph, cfg, key, mesh, ckpt)
     if mesh is None or int(np.prod(mesh.devices.shape)) == 1:
-        return _run_single(graph, cfg, key)
-    return _run_spmd(graph, cfg, key, mesh)
+        return _run_single(graph, cfg, key, ckpt)
+    return _run_spmd(graph, cfg, key, mesh, ckpt)
 
 
 def run_fixed_sampling(graph: Graph, n_samples: int, *, key=None,

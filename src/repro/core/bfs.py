@@ -35,6 +35,12 @@ termination are handled by masking inside one shared ``while_loop`` that
 runs until every search in the batch has met/finished.  The scalar
 (single-search) API is kept as a thin B=1 wrapper.
 
+Past graph replication, the ``*_sharded`` twins at the bottom of this
+module run the same drivers with the while_loop state SHARDED
+vertex-major over a mesh axis (each device holds the rows of its
+``repro.core.partition`` vertex shard) and only the masked frontier
+values all-gathered per level — see DESIGN.md §Partitioning.
+
 Numerical note: shortest-path counts grow combinatorially (binomial on
 grid-like graphs), so float32 would overflow on high-diameter inputs.  We
 rescale each sample's ``sigma`` column by 1/max whenever its max crosses
@@ -52,11 +58,13 @@ import jax
 import jax.numpy as jnp
 
 from .graph import Graph
+from .partition import PartitionedGraph, axis_tuple
 from repro.kernels.frontier.ops import frontier_expand
 
 __all__ = [
-    "BFSResult", "bfs_sssp", "bfs_sssp_batched",
+    "BFSResult", "bfs_sssp", "bfs_sssp_batched", "bfs_sssp_batched_sharded",
     "BidirResult", "bidirectional_bfs", "bidirectional_bfs_batched",
+    "bidirectional_bfs_batched_sharded",
 ]
 
 _RESCALE_THRESHOLD = 1e30
@@ -301,3 +309,214 @@ def bidirectional_bfs(graph: Graph, s, t, *,
         max_levels=max_levels)
     return BidirResult(res.dist_s[:, 0], res.dist_t[:, 0], res.sigma_s[:, 0],
                        res.sigma_t[:, 0], res.d[0], res.split[0])
+
+
+# ---------------------------------------------------------------------------
+# Sharded lane (vertex-partitioned graphs, inside shard_map)
+# ---------------------------------------------------------------------------
+#
+# The sharded drivers mirror the replicated ones, with the while_loop
+# state kept SHARDED vertex-major: each device carries only the
+# (shard_rows, B) slice of dist/sigma for its owned rows, and one level
+# exchanges only the masked frontier slice — a single (shard_rows, B)
+# all_gather of sigma * [dist == level] (the paper's "communicate only
+# the sampling state" discipline applied to the BFS itself).  Three
+# collectives per level: the frontier all_gather, the pmax of the
+# rescale guard, and the psum of the new-vertex count; everything else
+# is local.  Loop conditions read only carried (replicated) scalars, so
+# no collective ever runs inside a while_loop cond.  Parity contract:
+# max/min/sum reductions over the vertex axis split exactly into
+# (local reduce, cross-shard reduce), and the per-destination
+# contribution order inside a shard equals the replicated CSC bucket
+# order, so on integer-valued sigma the sharded lane is bit-for-bit
+# identical to the replicated drivers (asserted in tests/test_partition).
+
+
+def _init_state_sharded(pg: PartitionedGraph, sources, axis):
+    """Batched sharded BFS init: this device's (shard_rows, B) slice.
+
+    Rows map to global rows ``offset + r`` (offset from the device's
+    flattened mesh index — shard i lives on device i); rows at or past
+    ``n_nodes`` (the sink and tile padding) start at dist -3 / sigma 0
+    and stay there.  A source lands only on its owner's slice.
+    """
+    b = sources.shape[0]
+    rows = pg.shard_rows
+    cols = jnp.arange(b)
+    offset = jax.lax.axis_index(axis) * rows
+    grow = offset + jnp.arange(rows)
+    dist = jnp.broadcast_to(
+        jnp.where(grow < pg.n_nodes, jnp.int32(-1), _SINK_DIST)[:, None],
+        (rows, b))
+    loc = jnp.clip(sources - offset, 0, rows - 1)
+    own = (sources >= offset) & (sources < offset + rows)
+    dist = dist.at[loc, cols].set(jnp.where(own, 0, dist[loc, cols]))
+    sigma = jnp.zeros((rows, b), jnp.float32)
+    sigma = sigma.at[loc, cols].set(jnp.where(own, 1.0, 0.0))
+    return dist, sigma
+
+
+def _read_rows_sharded(pg: PartitionedGraph, state, idx, axis):
+    """Gather ``state[idx[b], b]`` (global rows) from the sharded state:
+    the owner contributes its value, everyone else 0, one psum."""
+    b = idx.shape[0]
+    rows = pg.shard_rows
+    offset = jax.lax.axis_index(axis) * rows
+    loc = jnp.clip(idx - offset, 0, rows - 1)
+    own = (idx >= offset) & (idx < offset + rows)
+    vals = jnp.where(own, state[loc, jnp.arange(b)], 0)
+    return jax.lax.psum(vals, axis)
+
+
+def _expand_level_sharded(pg: PartitionedGraph, dist, sigma, level, active,
+                          axis):
+    """One sharded batched BFS relaxation.
+
+    The only place the per-level exchange happens: the masked frontier
+    values ``sigma * [dist == level]`` are all-gathered over the shard
+    axis (one (v_pad, B) f32 array — dist itself never crosses the
+    wire; the dispatcher's sharded-lane (dist, sigma) operands are
+    synthesized from the gathered values, which XLA fuses away), then
+    each device expands only its owned destination rows through the
+    ``shard=`` route of ``repro.kernels.frontier.frontier_expand``.
+    The rescale guard and the new-vertex count are the only other
+    cross-shard reductions.  Returns updated local (dist, sigma,
+    n_new (B,) global).
+    """
+    fvals_local = jnp.where(dist == level[None, :], sigma, 0.0)
+    fvals = jax.lax.all_gather(fvals_local, axis, axis=0, tiled=True)
+    # reached frontier vertices always carry sigma > 0, so fvals > 0 is
+    # exactly the frontier mask — synthesize the dispatcher's contract
+    fdist = jnp.where(fvals > 0.0, level[None, :], jnp.int32(-1))
+    lcsc = pg.shards.local()
+    contrib = frontier_expand(lcsc.src, lcsc.dst, fdist, fvals, level,
+                              shard=lcsc)
+    new = (contrib > 0) & (dist == -1) & active[None, :]
+    dist = jnp.where(new, level[None, :] + 1, dist)
+    sigma = jnp.where(new, contrib, sigma)
+    # rescale per sample against the GLOBAL max (uniform column scale
+    # across shards => exact ratios, bit-identical to the replicated
+    # lane's guard)
+    m = jax.lax.pmax(jnp.max(jnp.where(new, sigma, 0.0), axis=0), axis)
+    scale = jnp.where(m > _RESCALE_THRESHOLD, 1.0 / m, 1.0)
+    sigma = sigma * scale[None, :]
+    n_new = jax.lax.psum(jnp.sum(new.astype(jnp.int32), axis=0), axis)
+    return dist, sigma, n_new
+
+
+def bfs_sssp_batched_sharded(pg: PartitionedGraph, sources, *, axis,
+                             stop_nodes=None) -> BFSResult:
+    """Sharded twin of :func:`bfs_sssp_batched` — call inside shard_map.
+
+    ``axis`` names the mesh axis (or axes) carrying the shard
+    dimension.  The returned ``dist``/``sigma`` are this device's LOCAL
+    (shard_rows, B) slices; ``levels`` is replicated.  The stop-node
+    check reads one sharded row per sample in the loop BODY and carries
+    the result, so the while_loop cond stays collective-free.
+    """
+    axis = axis_tuple(axis)
+    sources = jnp.asarray(sources, jnp.int32)
+    b = sources.shape[0]
+    dist0, sigma0 = _init_state_sharded(pg, sources, axis)
+    if stop_nodes is not None:
+        stop_open0 = _read_rows_sharded(pg, dist0, stop_nodes, axis) < 0
+    else:
+        stop_open0 = jnp.ones((b,), jnp.bool_)
+
+    def go_mask(level, n_new, stop_open):
+        return (n_new > 0) & (level < pg.n_nodes) & stop_open
+
+    def cond(state):
+        _dist, _sigma, level, n_new, stop_open = state
+        return jnp.any(go_mask(level, n_new, stop_open))
+
+    def body(state):
+        dist, sigma, level, n_new, stop_open = state
+        active = go_mask(level, n_new, stop_open)
+        dist, sigma, n_new2 = _expand_level_sharded(pg, dist, sigma, level,
+                                                    active, axis)
+        level = jnp.where(active, level + 1, level)
+        n_new = jnp.where(active, n_new2, n_new)
+        if stop_nodes is not None:
+            stop_open = _read_rows_sharded(pg, dist, stop_nodes, axis) < 0
+        return dist, sigma, level, n_new, stop_open
+
+    dist, sigma, _levels, _, _ = jax.lax.while_loop(
+        cond, body, (dist0, sigma0, jnp.zeros((b,), jnp.int32),
+                     jnp.ones((b,), jnp.int32), stop_open0))
+    settled = jax.lax.pmax(
+        jnp.max(jnp.where(dist >= 0, dist, 0), axis=0), axis)
+    return BFSResult(dist, sigma, settled)
+
+
+def bidirectional_bfs_batched_sharded(pg: PartitionedGraph, s, t, *, axis,
+                                      max_levels: int | None = None
+                                      ) -> BidirResult:
+    """Sharded twin of :func:`bidirectional_bfs_batched` (inside
+    shard_map).  Both sides' states stay sharded; per iteration the
+    balanced rule compares GLOBAL frontier sizes (one psum), the chosen
+    side expands through :func:`_expand_level_sharded`, and the
+    meeting test (any vertex settled from both sides) is a psum carried
+    into the next cond.  ``dist_*``/``sigma_*`` come back as local
+    (shard_rows, B) slices; ``d``/``split`` replicated.
+    """
+    axis = axis_tuple(axis)
+    max_levels = pg.n_nodes if max_levels is None else max_levels
+    s = jnp.asarray(s, jnp.int32)
+    t = jnp.asarray(t, jnp.int32)
+    b = s.shape[0]
+    dist_s0, sigma_s0 = _init_state_sharded(pg, s, axis)
+    dist_t0, sigma_t0 = _init_state_sharded(pg, t, axis)
+
+    def met_of(dist_s, dist_t):
+        local = jnp.sum(((dist_s >= 0) & (dist_t >= 0)).astype(jnp.int32),
+                        axis=0)
+        return jax.lax.psum(local, axis) > 0
+
+    def active_mask(rad_s, rad_t, alive, met):
+        return (~met) & alive & (rad_s + rad_t < max_levels)
+
+    # state: dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive, met
+    def cond(st):
+        _, _, rad_s, _, _, rad_t, alive, met = st
+        return jnp.any(active_mask(rad_s, rad_t, alive, met))
+
+    def body(st):
+        dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive, met = st
+        active = active_mask(rad_s, rad_t, alive, met)
+        fs = jax.lax.psum(jnp.sum(
+            (dist_s == rad_s[None, :]).astype(jnp.int32), axis=0), axis)
+        ft = jax.lax.psum(jnp.sum(
+            (dist_t == rad_t[None, :]).astype(jnp.int32), axis=0), axis)
+        pick_s = fs <= ft
+        exp_dist = jnp.where(pick_s[None, :], dist_s, dist_t)
+        exp_sigma = jnp.where(pick_s[None, :], sigma_s, sigma_t)
+        exp_level = jnp.where(pick_s, rad_s, rad_t)
+        nd, ns, n_new = _expand_level_sharded(pg, exp_dist, exp_sigma,
+                                              exp_level, active, axis)
+        upd_s = pick_s & active
+        upd_t = (~pick_s) & active
+        dist_s = jnp.where(upd_s[None, :], nd, dist_s)
+        sigma_s = jnp.where(upd_s[None, :], ns, sigma_s)
+        rad_s = jnp.where(upd_s, rad_s + 1, rad_s)
+        dist_t = jnp.where(upd_t[None, :], nd, dist_t)
+        sigma_t = jnp.where(upd_t[None, :], ns, sigma_t)
+        rad_t = jnp.where(upd_t, rad_t + 1, rad_t)
+        alive = jnp.where(active, n_new > 0, alive)
+        met = met_of(dist_s, dist_t)
+        return dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive, met
+
+    zeros = jnp.zeros((b,), jnp.int32)
+    init = (dist_s0, sigma_s0, zeros, dist_t0, sigma_t0, zeros,
+            jnp.ones((b,), jnp.bool_), met_of(dist_s0, dist_t0))
+    dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, _alive, _met = \
+        jax.lax.while_loop(cond, body, init)
+
+    both = (dist_s >= 0) & (dist_t >= 0)
+    dsum = jnp.where(both, dist_s + dist_t, jnp.iinfo(jnp.int32).max)
+    d = jax.lax.pmin(jnp.min(dsum, axis=0), axis)
+    connected = d < jnp.iinfo(jnp.int32).max
+    d = jnp.where(connected, d, -1)
+    split = jnp.clip(d - rad_t, 0, rad_s)
+    split = jnp.where(connected, split, 0)
+    return BidirResult(dist_s, dist_t, sigma_s, sigma_t, d, split)

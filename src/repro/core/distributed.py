@@ -91,7 +91,7 @@ def reduce_to_root_and_broadcast(x: jax.Array, axes: Sequence[str]):
     On TPU this is strictly worse than an all_reduce (the result already
     lands everywhere), so the production path uses
     :func:`hierarchical_allreduce`; this exists for the benchmark that
-    quantifies the difference (EXPERIMENTS.md §Perf, baseline row).
+    quantifies the difference (DESIGN.md §Perf, baseline row).
     """
     summed = jax.lax.psum(x, tuple(axes))
     # emulate "only root holds the result": zero everywhere except the

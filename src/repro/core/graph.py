@@ -2,11 +2,14 @@
 
 The paper (van der Grinten & Meyerhenke, 2019) assumes the graph is
 *replicated* on every compute node: each thread takes samples (one
-bidirectional BFS per sample) locally without communication.  We keep the
-same assumption: the graph lives as a pair of dense index arrays (CSR) that
-is replicated across every device of the mesh.  Only the *sampling state*
-(the per-device count vectors, i.e. the "state frames" of the paper) is
-ever communicated.
+bidirectional BFS per sample) locally without communication.  This module
+keeps that assumption: the graph lives as a pair of dense index arrays
+(CSR) that is replicated across every device of the mesh, and only the
+*sampling state* (the per-device count vectors, i.e. the "state frames"
+of the paper) is ever communicated.  Past the single-device memory bound,
+``repro.core.partition`` splits the node-blocked CSC layout below into
+per-device vertex shards and exchanges only frontier slices per BFS
+level (DESIGN.md §Partitioning).
 
 Three edge layouts are kept side by side:
 
@@ -47,6 +50,7 @@ import numpy as np
 __all__ = [
     "Graph",
     "CSCLayout",
+    "bucket_layout",
     "build_graph",
     "build_csc_layout",
     "with_csc_layout",
@@ -167,6 +171,46 @@ def build_graph(src: np.ndarray, dst: np.ndarray, n_nodes: int, *,
 # Node-blocked CSC layout (the two-level frontier kernel's edge order)
 # ---------------------------------------------------------------------------
 
+def bucket_layout(src: np.ndarray, dst: np.ndarray, nb: np.ndarray,
+                  n_buckets: int, block_e: int, *, sink_src: int,
+                  sink_dst: int):
+    """Bucket an edge list by the per-edge bucket id ``nb``, block-padded.
+
+    The shared numpy core of :func:`build_csc_layout` (one bucket per
+    destination-node block of the whole graph) and of the per-shard
+    builder in :mod:`repro.core.partition` (one bucket per *local* node
+    block of one vertex shard).  Edges keep their stable CSR order
+    within a bucket; every bucket's range is padded with
+    ``(sink_src, sink_dst)`` edges to a multiple of ``block_e`` (at
+    least one block, so every contrib tile is initialized even for
+    empty buckets).  Returns ``(out_src, out_dst, block_nb,
+    block_first)`` — the flattened (bucket, edge block) arrays of the
+    two-level grid.
+    """
+    counts = np.bincount(nb, minlength=n_buckets).astype(np.int64)
+    # per-bucket slot count: padded to block_e, at least one block each
+    slots = np.maximum(block_e, -(-counts // block_e) * block_e)
+    slot_starts = np.zeros(n_buckets + 1, np.int64)
+    np.cumsum(slots, out=slot_starts[1:])
+    total = int(slot_starts[-1])
+    out_src = np.full(total, sink_src, np.int32)
+    out_dst = np.full(total, sink_dst, np.int32)
+    order = np.argsort(nb, kind="stable")
+    edge_starts = np.zeros(n_buckets + 1, np.int64)
+    np.cumsum(counts, out=edge_starts[1:])
+    nb_sorted = nb[order]
+    pos = (slot_starts[nb_sorted]
+           + np.arange(order.shape[0], dtype=np.int64)
+           - edge_starts[nb_sorted])
+    out_src[pos] = src[order]
+    out_dst[pos] = dst[order]
+    eblocks = slots // block_e
+    block_nb = np.repeat(np.arange(n_buckets, dtype=np.int32),
+                         eblocks.astype(np.int64))
+    block_first = np.zeros(block_nb.shape[0], np.int32)
+    block_first[slot_starts[:-1] // block_e] = 1
+    return out_src, out_dst, block_nb, block_first
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class CSCLayout:
@@ -247,28 +291,9 @@ def build_csc_layout(graph: Graph, *, block_v: int | None = None,
     src = np.asarray(graph.src[: graph.n_edges], dtype=np.int64)
     dst = np.asarray(graph.dst[: graph.n_edges], dtype=np.int64)
     nb = dst // block_v
-    counts = np.bincount(nb, minlength=n_nb).astype(np.int64)
-    # per-bucket slot count: padded to block_e, at least one block each
-    slots = np.maximum(block_e, -(-counts // block_e) * block_e)
-    slot_starts = np.zeros(n_nb + 1, np.int64)
-    np.cumsum(slots, out=slot_starts[1:])
-    total = int(slot_starts[-1])
-    out_src = np.full(total, graph.n_nodes, np.int32)
-    out_dst = np.full(total, graph.n_nodes, np.int32)
-    order = np.argsort(nb, kind="stable")
-    edge_starts = np.zeros(n_nb + 1, np.int64)
-    np.cumsum(counts, out=edge_starts[1:])
-    nb_sorted = nb[order]
-    pos = (slot_starts[nb_sorted]
-           + np.arange(order.shape[0], dtype=np.int64)
-           - edge_starts[nb_sorted])
-    out_src[pos] = src[order]
-    out_dst[pos] = dst[order]
-    eblocks = slots // block_e
-    block_nb = np.repeat(np.arange(n_nb, dtype=np.int32),
-                         eblocks.astype(np.int64))
-    block_first = np.zeros(block_nb.shape[0], np.int32)
-    block_first[slot_starts[:-1] // block_e] = 1
+    out_src, out_dst, block_nb, block_first = bucket_layout(
+        src, dst, nb, n_nb, block_e,
+        sink_src=graph.n_nodes, sink_dst=graph.n_nodes)
     return CSCLayout(
         src=jnp.asarray(out_src),
         dst=jnp.asarray(out_dst),

@@ -1,0 +1,322 @@
+"""Vertex-partitioned graph shards — past replication (DESIGN.md §Partitioning).
+
+Everything up to this module assumes the paper's *replicated* graph: each
+device of the mesh holds the full edge structure and samples
+independently, so the largest instance is bounded by ONE device's memory
+regardless of mesh size (a 16 GiB v5e caps a replicated graph at ~1.5 B
+directed edges).  This module is the lane that changes the scaling law:
+the destination-node blocks of the :class:`repro.core.graph.CSCLayout`
+are split into per-device shards of contiguous vertex ranges, each device
+keeps only the edge buckets *into* its owned vertices, and one BFS level
+exchanges only the per-level frontier slice — per-device frontier-lane
+memory drops from O(E) to O(E / n_shards) + O(frontier).
+
+Sharding contract
+-----------------
+
+* Vertices are cut into ``n_shards`` contiguous ranges of
+  ``shard_rows = blocks_per_shard * block_v`` rows (whole node blocks, so
+  every kernel tile stays inside one shard).  The global padded row space
+  is ``v_pad = n_shards * shard_rows``; global row == vertex id, rows past
+  ``n_nodes`` (sink + tile padding) are inert.  ``vertex_owner`` /
+  ``global_row`` are the owner maps.
+* Every directed edge lives in exactly one shard: the shard that owns its
+  *destination* (the expansion scatters into destination rows, so a shard
+  can produce its contrib tile from purely local edges + gathered source
+  values).  ``ShardedCSCLayout`` stores per-shard bucket arrays with a
+  leading shard axis and uniform (padded) per-shard shapes, so the whole
+  structure shard_maps over the mesh with ``PartitionSpec(axes)`` on that
+  leading axis: device i holds shard i.
+* ``src`` ids are GLOBAL (they index the all-gathered frontier slice);
+  ``dst`` ids are LOCAL shard rows (they index the shard's own contrib
+  tile).  Padding slots are ``src = n_nodes`` (the sink's frontier value
+  is always 0) and ``dst = shard_rows`` (one row past the local tile —
+  dropped by the segment sum, outside every kernel tile).
+
+:class:`PartitionedGraph` carries the shards plus the *replicated* CSR
+arrays (``indptr``/``indices``/``degree``) that the backward
+path-sampling walk needs — the walk touches O(path * degree) entries of
+arbitrary vertices, so it runs on the all-gathered per-sample state after
+the sharded BFS finishes (shard-local walks over halo-cached neighbor
+rows are the recorded follow-up).  The replicated COO arrays are
+*dropped*: frontier expansion on a partitioned graph always runs the
+sharded CSC lane.
+
+The sharded BFS drivers live in :mod:`repro.core.bfs`
+(``bfs_sssp_batched_sharded`` / ``bidirectional_bfs_batched_sharded``),
+the path sampler in :mod:`repro.core.sampler`
+(``sample_path_batched_sharded``), and the cooperative adaptive-sampling
+lane in :mod:`repro.core.adaptive` (``run_kadabra`` on a
+``PartitionedGraph``).  All of them run INSIDE ``shard_map`` over the
+mesh axes that carry the shard dimension.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import CSCLayout, Graph, bucket_layout
+
+__all__ = [
+    "ShardedCSCLayout",
+    "PartitionedGraph",
+    "axis_tuple",
+    "partition_graph",
+    "vertex_owner",
+    "global_row",
+    "shard_vertex_range",
+    "abstract_partitioned_graph",
+]
+
+
+def axis_tuple(axis):
+    """Normalize a shard-axis argument (one mesh axis name or a
+    sequence of them) to the tuple form every collective takes — the
+    single normalization point of all sharded lanes."""
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ShardedCSCLayout:
+    """Per-shard destination-bucketed edge arrays, leading shard axis.
+
+    Shard ``s`` owns node blocks ``[s * blocks_per_shard,
+    (s+1) * blocks_per_shard)`` of the global node-block tiling, i.e.
+    global rows ``[s * shard_rows, (s+1) * shard_rows)``.  Each shard's
+    buckets follow the :func:`repro.core.graph.bucket_layout` contract
+    over its *local* node blocks; shards are padded with inert edge
+    blocks to the uniform ``n_edge_blocks`` so the arrays stack into one
+    rectangular (n_shards, ...) pytree leaf that shard_maps cleanly.
+    """
+
+    src: jax.Array          # (S, n_edge_blocks * block_e) int32 GLOBAL ids
+    dst: jax.Array          # (S, n_edge_blocks * block_e) int32 LOCAL rows
+    block_nb: jax.Array     # (S, n_edge_blocks) int32 — local node block
+    block_first: jax.Array  # (S, n_edge_blocks) int32
+    block_v: int            # static: vertices per node block
+    block_e: int            # static: edges per edge block
+    blocks_per_shard: int   # static: node blocks per shard (uniform)
+    n_edge_blocks: int      # static: edge blocks per shard (uniform, padded)
+    n_shards: int           # static
+    n_nodes: int            # static: logical GLOBAL vertex count
+
+    def tree_flatten(self):
+        leaves = (self.src, self.dst, self.block_nb, self.block_first)
+        aux = (self.block_v, self.block_e, self.blocks_per_shard,
+               self.n_edge_blocks, self.n_shards, self.n_nodes)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @property
+    def shard_rows(self) -> int:
+        """Rows of one shard's slice of the vertex-major BFS state."""
+        return self.blocks_per_shard * self.block_v
+
+    @property
+    def v_pad(self) -> int:
+        """Global padded row count (= all-gathered frontier rows)."""
+        return self.n_shards * self.shard_rows
+
+    @property
+    def e_slots_per_shard(self) -> int:
+        return self.n_edge_blocks * self.block_e
+
+    def shard(self, s: int) -> CSCLayout:
+        """Host-side view of shard ``s`` as a :class:`CSCLayout`.
+
+        The view's vertex space is the shard's LOCAL row range
+        (``v_pad == shard_rows``); ``src`` stays global, ``dst`` local —
+        exactly the operand contract of the dispatcher's sharded route.
+        ``n_nodes`` is kept global (the sink id padding slots point at).
+        """
+        return CSCLayout(
+            src=self.src[s], dst=self.dst[s],
+            block_nb=self.block_nb[s], block_first=self.block_first[s],
+            block_v=self.block_v, block_e=self.block_e,
+            n_node_blocks=self.blocks_per_shard,
+            n_edge_blocks=self.n_edge_blocks, n_nodes=self.n_nodes)
+
+    def local(self) -> CSCLayout:
+        """THIS device's shard, inside shard_map (leading axis sliced to
+        1: the row a ``PartitionSpec(axes)`` in_spec leaves on device i
+        is shard i, matching ``jax.lax.axis_index``)."""
+        return self.shard(0)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartitionedGraph:
+    """A graph whose frontier lane is sharded over the mesh.
+
+    ``indptr``/``indices``/``degree`` are the replicated CSR arrays of
+    the backward path-sampling walk (see the module docstring for why
+    they stay replicated); ``shards`` holds the per-device CSC buckets.
+    Duck-types the ``Graph`` attributes the sampler reads (``n_nodes``,
+    ``indptr``, ``indices``, ``degree``), so ``_finish_paths`` and the
+    predecessor walk run unchanged on the gathered state.
+    """
+
+    indptr: jax.Array      # (V+1,) int32 — replicated CSR row pointers
+    indices: jax.Array     # (E_pad,) int32 — replicated CSR columns
+    degree: jax.Array      # (V,) int32 — replicated
+    shards: ShardedCSCLayout
+    n_nodes: int           # static
+    n_edges: int           # static: directed edge slots actually used
+    max_degree: int        # static
+
+    def tree_flatten(self):
+        leaves = (self.indptr, self.indices, self.degree, self.shards)
+        aux = (self.n_nodes, self.n_edges, self.max_degree)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        indptr, indices, degree, shards = leaves
+        return cls(indptr, indices, degree, shards, *aux)
+
+    @property
+    def n_shards(self) -> int:
+        return self.shards.n_shards
+
+    @property
+    def shard_rows(self) -> int:
+        return self.shards.shard_rows
+
+    @property
+    def v_pad(self) -> int:
+        return self.shards.v_pad
+
+    @property
+    def n_edges_undirected(self) -> int:
+        return self.n_edges // 2
+
+    def partition_spec(self, mesh_axes):
+        """PartitionSpec pytree matching this graph's tree structure:
+        shard arrays split over ``mesh_axes`` on the leading (shard)
+        axis, CSR arrays replicated — the in_spec of every shard_map
+        that runs the sharded lanes."""
+        rep = jax.sharding.PartitionSpec()
+        sh = jax.sharding.PartitionSpec(tuple(mesh_axes))
+        gspec = jax.tree.map(lambda _: rep, self)
+        return dataclasses.replace(
+            gspec, shards=jax.tree.map(lambda _: sh, self.shards))
+
+
+def vertex_owner(pg, v):
+    """Shard id owning vertex/global-row ``v`` (numpy or jnp)."""
+    return v // pg.shard_rows
+
+
+def global_row(pg, shard, local_row):
+    """Owner-map inverse: (shard, local row) -> global row (= vertex id
+    for rows below ``n_nodes``)."""
+    return shard * pg.shard_rows + local_row
+
+
+def shard_vertex_range(pg, s: int):
+    """Global row range [start, stop) owned by shard ``s``."""
+    return s * pg.shard_rows, (s + 1) * pg.shard_rows
+
+
+def partition_graph(graph: Graph, n_shards: int, *,
+                    block_v: int | None = None, block_e: int | None = None,
+                    batch: int = 16) -> PartitionedGraph:
+    """Split ``graph`` into ``n_shards`` destination-owned vertex shards.
+
+    Pure numpy, one stable sort per shard; call once per (graph,
+    n_shards, blocking) and reuse.  Blocking defaults to the same VMEM
+    heuristic as :func:`repro.core.graph.build_csc_layout` — the
+    per-shard tiles are what a device's kernel touches, so the fit
+    predicate is unchanged.  Every directed edge lands in exactly one
+    shard (its destination's owner); shard boundaries are whole node
+    blocks, so per-shard buckets are the *same* buckets the global
+    layout would build, just grouped by owner — the sharded expansion
+    sums each destination's contributions in the identical order.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if block_v is None or block_e is None:
+        from repro.kernels.frontier.ops import choose_csc_blocks
+        auto_v, auto_e = choose_csc_blocks(graph.n_nodes, batch)
+        block_v = auto_v if block_v is None else block_v
+        block_e = auto_e if block_e is None else block_e
+    v1 = graph.n_nodes + 1
+    n_nb = -(-v1 // block_v)
+    bps = -(-n_nb // n_shards)
+    shard_rows = bps * block_v
+    src = np.asarray(graph.src[: graph.n_edges], dtype=np.int64)
+    dst = np.asarray(graph.dst[: graph.n_edges], dtype=np.int64)
+    owner = dst // shard_rows
+    # one stable sort groups edges by owner (O(E log E) total — a
+    # per-shard boolean scan would be O(n_shards * E) host work, hours
+    # at billion-edge scale); shard s is then the contiguous slice
+    # [bounds[s], bounds[s+1]), still in CSR order within
+    order = np.argsort(owner, kind="stable")
+    src_o, dst_o = src[order], dst[order]
+    bounds = np.searchsorted(owner[order], np.arange(n_shards + 1))
+    per_shard = []
+    for s in range(n_shards):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        s_dst = dst_o[lo:hi] - s * shard_rows      # local rows
+        nb_local = s_dst // block_v                # local node block
+        per_shard.append(bucket_layout(
+            src_o[lo:hi], s_dst, nb_local, bps, block_e,
+            sink_src=graph.n_nodes, sink_dst=shard_rows))
+    eb_max = max(p[2].shape[0] for p in per_shard)
+    out_src = np.full((n_shards, eb_max * block_e), graph.n_nodes, np.int32)
+    out_dst = np.full((n_shards, eb_max * block_e), shard_rows, np.int32)
+    # inert padding blocks accumulate zeros into the last local tile
+    out_nb = np.full((n_shards, eb_max), bps - 1, np.int32)
+    out_first = np.zeros((n_shards, eb_max), np.int32)
+    for s, (a_src, a_dst, a_nb, a_first) in enumerate(per_shard):
+        out_src[s, : a_src.shape[0]] = a_src
+        out_dst[s, : a_dst.shape[0]] = a_dst
+        out_nb[s, : a_nb.shape[0]] = a_nb
+        out_first[s, : a_first.shape[0]] = a_first
+    shards = ShardedCSCLayout(
+        src=jnp.asarray(out_src), dst=jnp.asarray(out_dst),
+        block_nb=jnp.asarray(out_nb), block_first=jnp.asarray(out_first),
+        block_v=int(block_v), block_e=int(block_e),
+        blocks_per_shard=int(bps), n_edge_blocks=int(eb_max),
+        n_shards=int(n_shards), n_nodes=int(graph.n_nodes))
+    return PartitionedGraph(
+        indptr=graph.indptr, indices=graph.indices, degree=graph.degree,
+        shards=shards, n_nodes=graph.n_nodes, n_edges=graph.n_edges,
+        max_degree=graph.max_degree)
+
+
+def abstract_partitioned_graph(n_nodes: int, n_edges_directed: int,
+                               n_shards: int, *, block_v: int,
+                               block_e: int, max_degree: int = 100_000,
+                               pad_to: int = 128) -> PartitionedGraph:
+    """ShapeDtypeStruct twin of a balanced partition, for lowering the
+    sharded epoch on a production mesh without materializing a graph
+    (repro.launch.dryrun).  Per-shard edge slots assume balance: the
+    real builder's padding adds at most one ``block_e`` block per local
+    bucket, which this sizing includes."""
+    sds = jax.ShapeDtypeStruct
+    v1 = n_nodes + 1
+    n_nb = -(-v1 // block_v)
+    bps = -(-n_nb // n_shards)
+    eb = bps + -(-(n_edges_directed // n_shards) // block_e)
+    e_pad = (n_edges_directed // pad_to + 2) * pad_to
+    shards = ShardedCSCLayout(
+        src=sds((n_shards, eb * block_e), jnp.int32),
+        dst=sds((n_shards, eb * block_e), jnp.int32),
+        block_nb=sds((n_shards, eb), jnp.int32),
+        block_first=sds((n_shards, eb), jnp.int32),
+        block_v=int(block_v), block_e=int(block_e),
+        blocks_per_shard=int(bps), n_edge_blocks=int(eb),
+        n_shards=int(n_shards), n_nodes=int(n_nodes))
+    return PartitionedGraph(
+        indptr=sds((v1,), jnp.int32), indices=sds((e_pad,), jnp.int32),
+        degree=sds((n_nodes,), jnp.int32), shards=shards,
+        n_nodes=int(n_nodes), n_edges=int(n_edges_directed),
+        max_degree=int(max_degree))

@@ -41,11 +41,14 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bfs import BidirResult, bidirectional_bfs_batched
+from .bfs import (BidirResult, bidirectional_bfs_batched,
+                  bidirectional_bfs_batched_sharded)
 from .graph import Graph
+from .partition import PartitionedGraph, axis_tuple
 
 __all__ = ["PathSample", "sample_pair", "sample_pairs", "sample_path",
-           "sample_path_batched", "sample_batch"]
+           "sample_path_batched", "sample_path_batched_sharded",
+           "sample_batch"]
 
 _NEG_INF = -1e30
 _CHUNK = 128  # matches Graph pad_to; guarantees in-bounds dynamic slices
@@ -128,19 +131,14 @@ def _walk_to_source(graph: Graph, key, start_node, start_level, dist, sigma,
     return contrib
 
 
-def sample_path_batched(graph: Graph, key, batch: int) -> PathSample:
-    """Take ``batch`` KADABRA samples concurrently.
-
-    One batched bidirectional BFS serves all B pairs (shared edge
-    stream, vertex-major (V+1, B) state); the meeting-vertex draw is a
-    per-column Gumbel-max over the path-count products; the two backward
-    walks are vmapped over the state's sample axis.  Returns a
-    PathSample whose fields have a leading (B,) axis — fold ``contrib``
-    with one sum over axis 0 to get the per-round count increment.
-    """
-    k_pair, k_meet, k_s, k_t = jax.random.split(key, 4)
-    s, t = sample_pairs(k_pair, graph.n_nodes, batch)
-    res: BidirResult = bidirectional_bfs_batched(graph, s, t)
+def _finish_paths(graph, k_meet, k_s, k_t, res: BidirResult,
+                  batch: int) -> PathSample:
+    """Meeting-vertex draw + the two backward walks, from a completed
+    bidirectional BFS state (shared by the replicated and the sharded
+    sampling lanes — the sharded lane hands in the all-gathered state,
+    so the draws below are stream-identical across lanes).  ``graph``
+    only needs ``n_nodes`` and the CSR arrays (``indptr``/``indices``/
+    ``degree``): both ``Graph`` and ``PartitionedGraph`` qualify."""
     valid = res.d >= 0                                          # (B,)
 
     # --- choose the meeting vertices w ~ sigma_s(w) * sigma_t(w) --------
@@ -182,6 +180,53 @@ def sample_path_batched(graph: Graph, key, batch: int) -> PathSample:
     return PathSample(contrib, valid, jnp.where(valid, res.d, -1))
 
 
+def sample_path_batched(graph: Graph, key, batch: int) -> PathSample:
+    """Take ``batch`` KADABRA samples concurrently.
+
+    One batched bidirectional BFS serves all B pairs (shared edge
+    stream, vertex-major (V+1, B) state); the meeting-vertex draw is a
+    per-column Gumbel-max over the path-count products; the two backward
+    walks are vmapped over the state's sample axis.  Returns a
+    PathSample whose fields have a leading (B,) axis — fold ``contrib``
+    with one sum over axis 0 to get the per-round count increment.
+    """
+    k_pair, k_meet, k_s, k_t = jax.random.split(key, 4)
+    s, t = sample_pairs(k_pair, graph.n_nodes, batch)
+    res: BidirResult = bidirectional_bfs_batched(graph, s, t)
+    return _finish_paths(graph, k_meet, k_s, k_t, res, batch)
+
+
+def sample_path_batched_sharded(pg: PartitionedGraph, key, batch: int, *,
+                                axis) -> PathSample:
+    """Sharded twin of :func:`sample_path_batched` — call inside
+    shard_map with a key REPLICATED across the shard axis (the whole
+    mesh cooperatively advances one batch of samples; per-device keys
+    would desynchronize the collective BFS).
+
+    The bidirectional BFS runs with sharded state end-to-end; only
+    after it completes is the per-sample state all-gathered ONCE for
+    the meeting-vertex draw and the backward walks (O(V * B) per round
+    vs O(V * B) per *level* if the BFS itself were replicated).  The
+    key splits, the pair draw, the Gumbel draws and the walks are
+    stream-identical to the replicated lane, so on the same key the two
+    lanes produce bit-identical samples (given bit-identical BFS
+    states).  Shard-local walks over halo-cached neighbor rows are the
+    recorded follow-up that would drop the post-BFS gather too.
+    """
+    axis = axis_tuple(axis)
+    k_pair, k_meet, k_s, k_t = jax.random.split(key, 4)
+    s, t = sample_pairs(k_pair, pg.n_nodes, batch)
+    res = bidirectional_bfs_batched_sharded(pg, s, t, axis=axis)
+
+    def gather(x):
+        return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+
+    full = BidirResult(gather(res.dist_s), gather(res.dist_t),
+                       gather(res.sigma_s), gather(res.sigma_t),
+                       res.d, res.split)
+    return _finish_paths(pg, k_meet, k_s, k_t, full, batch)
+
+
 def sample_path(graph: Graph, key) -> PathSample:
     """Take one KADABRA sample — B=1 wrapper over the batched lane."""
     ps = sample_path_batched(graph, key, 1)
@@ -189,7 +234,7 @@ def sample_path(graph: Graph, key) -> PathSample:
 
 
 def sample_batch(graph: Graph, key, n_samples: int, *, batch_size: int = 1,
-                 carry=None, return_carry: bool = False):
+                 carry=None, return_carry: bool = False, axis=None):
     """Take exactly ``n_samples`` *new* samples, accumulating counts.
 
     ``batch_size`` = B concurrent samples per round; ceil(n_samples / B)
@@ -213,6 +258,13 @@ def sample_batch(graph: Graph, key, n_samples: int, *, batch_size: int = 1,
     one-sample-per-thread formulation exactly (one (V+1,) frontier per
     scan step, never any surplus).
 
+    ``axis`` (shard axis name(s)) switches each round to the SHARDED
+    path sampler: ``graph`` must be a ``PartitionedGraph``, the call
+    must run inside shard_map, and ``key`` must be replicated across
+    the shard axis — the mesh takes the ``n_samples`` samples
+    *cooperatively* (one collective BFS batch at a time) instead of
+    independently per device, so the returned frame is replicated.
+
     Returns ``(counts (V+1,) float32, tau () int32)`` — plus the
     surplus frame when ``return_carry=True``.
     """
@@ -230,7 +282,10 @@ def sample_batch(graph: Graph, key, n_samples: int, *, batch_size: int = 1,
         else:
             counts, tau = state
         k, offset = xs
-        ps = sample_path_batched(graph, k, batch_size)
+        if axis is not None:
+            ps = sample_path_batched_sharded(graph, k, batch_size, axis=axis)
+        else:
+            ps = sample_path_batched(graph, k, batch_size)
         keep = (offset + jnp.arange(batch_size)) < n_samples
         counts = counts + jnp.sum(
             jnp.where(keep[:, None], ps.contrib, 0.0), axis=0)

@@ -3,6 +3,6 @@
 #   segsum    — fused gather + segment-sum (GNN aggregation / EmbeddingBag)
 #   stopcheck — fused KADABRA f/g stopping-condition evaluation
 #   flashattn — fused causal attention (the LM memory-bound hot spot
-#               identified by EXPERIMENTS.md §Perf cell 1)
+#               identified by DESIGN.md §Perf cell 1)
 # Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py
 # (jit'd dispatching wrapper) and ref.py (pure-jnp oracle).

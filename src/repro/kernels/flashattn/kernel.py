@@ -1,6 +1,6 @@
 """Pallas TPU kernel: causal flash attention (fused online-softmax).
 
-The §Perf analysis (EXPERIMENTS.md, cell 1) leaves LM training
+The §Perf analysis (DESIGN.md §Perf, cell 1) leaves LM training
 memory-bound on the f32 attention score chains: XLA materializes the
 (q_block, kv) score tiles in HBM between elementwise ops.  This kernel is
 the TPU answer: scores never leave VMEM — per (batch*head, q-block) the

@@ -2,13 +2,15 @@ from .kernel import (frontier_block_bitmap, frontier_expand_batched_pallas,
                      frontier_expand_node_blocked_pallas,
                      frontier_expand_pallas)
 from .ops import (choose_csc_blocks, frontier_expand, node_blocked_supported,
-                  pallas_supported, select_route)
+                  pallas_supported, select_route, sharded_supported)
 from .ref import (frontier_expand_batched_ref,
-                  frontier_expand_node_blocked_ref, frontier_expand_ref)
+                  frontier_expand_node_blocked_ref, frontier_expand_ref,
+                  frontier_expand_sharded_ref)
 
 __all__ = ["choose_csc_blocks", "frontier_block_bitmap", "frontier_expand",
            "frontier_expand_batched_pallas", "frontier_expand_batched_ref",
            "frontier_expand_node_blocked_pallas",
            "frontier_expand_node_blocked_ref", "frontier_expand_pallas",
-           "frontier_expand_ref", "node_blocked_supported",
-           "pallas_supported", "select_route"]
+           "frontier_expand_ref", "frontier_expand_sharded_ref",
+           "node_blocked_supported", "pallas_supported", "select_route",
+           "sharded_supported"]

@@ -274,7 +274,8 @@ def _nb_kernel(nb_ref, first_ref, act_ref, level_ref, src_any, dst_any,
 def frontier_expand_node_blocked_pallas(csc, dist, sigma, levels, *,
                                         interpret: bool = True,
                                         block_active=None,
-                                        skip_inactive: bool = True):
+                                        skip_inactive: bool = True,
+                                        wide_state: bool = False):
     """Two-level frontier expansion over a node-blocked CSC layout.
 
     ``csc`` is a :class:`repro.core.graph.CSCLayout`; ``dist``/``sigma``
@@ -300,7 +301,17 @@ def frontier_expand_node_blocked_pallas(csc, dist, sigma, levels, *,
     v_rows, batch = dist.shape
     levels = jnp.asarray(levels, jnp.int32).reshape(batch)
     v_pad = csc.v_pad
-    if v_pad > v_rows:
+    if wide_state:
+        # Sharded lane: ``csc`` is one shard's LOCAL layout view
+        # (ShardedCSCLayout.local(): global src ids, local dst rows)
+        # while dist/sigma cover the all-gathered GLOBAL row space —
+        # strictly more rows than the local tiles.  The gather indexes
+        # the wide state (ANY memory, any row count), the output is the
+        # local (csc.v_pad, B) tile stack; no pad/slice of the state.
+        if v_rows < v_pad:
+            raise ValueError(
+                f"wide_state expects >= {v_pad} gathered rows, got {v_rows}")
+    elif v_pad > v_rows:
         # Compat lane for (V+1, B) callers: rows in [V+1, v_pad) back the
         # last tile; no edge targets them.  This pad (and the [:v_rows]
         # slice below) copies the full state per call — the CSC-aware
@@ -347,4 +358,6 @@ def frontier_expand_node_blocked_pallas(csc, dist, sigma, levels, *,
         interpret=interpret,
     )(csc.block_nb, csc.block_first, block_active, levels,
       csc.src, csc.dst, dist, sigma)
+    if wide_state:
+        return out                     # local (csc.v_pad, B) tile stack
     return out if v_rows == v_pad else out[:v_rows]

@@ -45,6 +45,17 @@ the kernel tests).
 :func:`choose_csc_blocks` is the blocking policy: (block_v, block_e)
 from the VMEM cell budget with 128-alignment on both axes, the default
 of ``repro.core.graph.build_csc_layout``.
+
+A fourth lane serves the vertex-partitioned graph shards of
+``repro.core.partition`` (DESIGN.md §Partitioning): passing ``shard=``
+(one shard's local layout view) routes to the SHARDED expansion — the
+caller runs inside shard_map, ``dist``/``sigma`` are the all-gathered
+per-level frontier state over the *global* padded rows, and the output
+is the shard's local (shard_rows, B) contribution tile stack.  Its fit
+predicate is :func:`sharded_supported` (the shard's local blocking
+only: the gathered state lives in ANY memory); on compiled TPU
+backends the lane reuses the node-blocked kernel in ``wide_state``
+mode, elsewhere the ``frontier_expand_sharded_ref`` segment sum.
 """
 from __future__ import annotations
 
@@ -58,7 +69,8 @@ from .kernel import (DEFAULT_BLOCK_E, frontier_block_bitmap,
                      frontier_expand_node_blocked_pallas,
                      frontier_expand_pallas)
 from .ref import (frontier_expand_batched_ref,
-                  frontier_expand_node_blocked_ref, frontier_expand_ref)
+                  frontier_expand_node_blocked_ref, frontier_expand_ref,
+                  frontier_expand_sharded_ref)
 
 # dist(4B) + sigma(4B) + contrib(4B) per (vertex, sample) cell, 16 MiB
 # VMEM, ~25% headroom
@@ -99,6 +111,21 @@ def _nb_cells(block_v: int, block_e: int, b: int) -> int:
             + 2 * 2 * block_e)          # double-buffered src/dst stage
 
 
+def sharded_supported(shard, batch: int = 1) -> bool:
+    """Fit predicate of the sharded lane's Pallas kernel.
+
+    ``shard`` is one shard's local layout view (or the whole
+    :class:`repro.core.partition.ShardedCSCLayout` — only the static
+    blocking is read).  Per grid step the sharded kernel touches the
+    same tiles as the node-blocked kernel over the shard's LOCAL
+    (block_v, block_e) blocking; the all-gathered frontier state lives
+    in ANY memory and never counts against the VMEM cell budget, so a
+    shard fits iff its blocking does — independent of the global V.
+    """
+    b = max(batch, 1)
+    return _nb_cells(shard.block_v, shard.block_e, b) <= _VMEM_CELL_BUDGET
+
+
 def choose_csc_blocks(n_nodes: int, batch: int = 16, *,
                       budget: int = _VMEM_CELL_BUDGET) -> tuple:
     """Pick ``(block_v, block_e)`` for a :class:`CSCLayout` from the
@@ -135,11 +162,42 @@ def choose_csc_blocks(n_nodes: int, batch: int = 16, *,
 
 
 def select_route(n_nodes: int, e_pad: int, batch: int, *, csc=None,
-                 use_pallas=None, interpret: bool = True,
+                 shard=None, use_pallas=None, interpret: bool = True,
                  block_e: int = DEFAULT_BLOCK_E) -> str:
     """The dispatch decision of :func:`frontier_expand`, as a pure
     function of static shapes/flags: one of "flat", "node_blocked",
-    "ref".  Raises ``ValueError`` when a forced lane cannot fit."""
+    "ref", "sharded_nb", "sharded_ref".  Raises ``ValueError`` when a
+    forced lane cannot fit.
+
+    ``shard`` (a shard's local layout view) selects the SHARDED lane:
+    the caller runs inside shard_map, dist/sigma are the all-gathered
+    global frontier state and the output is the shard's local tile
+    stack.  The flat kernel can never serve it (its output rows equal
+    its input rows), so ``use_pallas=True`` is rejected;
+    ``use_pallas='node_blocked'`` forces the sharded Pallas kernel
+    (parity tests), ``False`` the sharded XLA reference, and the
+    automatic dispatch picks the kernel exactly like the replicated
+    routes: on compiled TPU backends when :func:`sharded_supported`
+    accepts the shard's blocking, the XLA ref otherwise/interpreted.
+    """
+    if shard is not None:
+        sh_ok = sharded_supported(shard, batch)
+        if use_pallas is None:
+            return ("sharded_nb" if (not interpret and sh_ok)
+                    else "sharded_ref")
+        if use_pallas is False:
+            return "sharded_ref"
+        if use_pallas == "node_blocked":
+            if not sh_ok:
+                raise ValueError(
+                    f"sharded tiles (block_v={shard.block_v}, "
+                    f"block_e={shard.block_e}, B={batch}) exceed the VMEM "
+                    f"cell budget {_VMEM_CELL_BUDGET}; shrink the blocking")
+            return "sharded_nb"
+        raise ValueError(
+            "the flat kernel cannot serve the sharded lane (local output "
+            "rows != gathered input rows); use use_pallas=None, False, or "
+            "'node_blocked'")
     flat_ok = pallas_supported(n_nodes, e_pad, block_e, batch)
     nb_ok = csc is not None and node_blocked_supported(csc, batch)
     if use_pallas is None:                       # automatic dispatch
@@ -174,7 +232,7 @@ def select_route(n_nodes: int, e_pad: int, batch: int, *, csc=None,
 
 @partial(jax.jit, static_argnames=("use_pallas", "interpret", "block_e",
                                    "skip_inactive"))
-def frontier_expand(src, dst, dist, sigma, level, *, csc=None,
+def frontier_expand(src, dst, dist, sigma, level, *, csc=None, shard=None,
                     use_pallas=None, interpret=None,
                     block_e=DEFAULT_BLOCK_E, skip_inactive=True):
     if interpret is None:
@@ -189,11 +247,24 @@ def frontier_expand(src, dst, dist, sigma, level, *, csc=None,
     # dist may arrive pre-padded to csc.v_pad rows (the CSC-aware BFS
     # driver's allocation): every lane is row-count-preserving, so the
     # caller's shape flows through with zero pads/slices; v1 - 1 is then
-    # a conservative stand-in for n_nodes in the flat-fit check.
-    route = select_route(v1 - 1, src.shape[0], batch, csc=csc,
+    # a conservative stand-in for n_nodes in the flat-fit check.  On the
+    # SHARDED lanes (``shard=...``) dist instead covers the all-gathered
+    # global rows and the output is the shard's local tile stack.
+    route = select_route(v1 - 1, src.shape[0], batch, csc=csc, shard=shard,
                          use_pallas=use_pallas, interpret=interpret,
                          block_e=block_e)
 
+    if route in ("sharded_nb", "sharded_ref"):
+        d2 = dist if batched else dist[:, None]
+        s2 = sigma if batched else sigma[:, None]
+        lv = jnp.asarray(level, jnp.int32).reshape(batch)
+        if route == "sharded_nb":
+            out = frontier_expand_node_blocked_pallas(
+                shard, d2, s2, lv, interpret=interpret,
+                skip_inactive=skip_inactive, wide_state=True)
+        else:
+            out = frontier_expand_sharded_ref(shard, d2, s2, lv)
+        return out if batched else out[:, 0]
     if route == "node_blocked":
         d2 = dist if batched else dist[:, None]
         s2 = sigma if batched else sigma[:, None]

@@ -43,6 +43,25 @@ def frontier_expand_ref(src, dst, dist, sigma, level):
     return jax.ops.segment_sum(vals, dst, num_segments=dist.shape[0])
 
 
+def frontier_expand_sharded_ref(shard, dist, sigma, levels):
+    """Sharded-lane oracle: one shard's destination rows, expanded from
+    the all-gathered frontier state.
+
+    ``shard`` is the CSCLayout view of ONE vertex shard
+    (``ShardedCSCLayout.local()``: ``src`` global ids, ``dst`` LOCAL
+    shard rows, ``v_pad == shard_rows``); ``dist``/``sigma`` cover the
+    *global* padded row space (the per-level exchange — typically the
+    synthesized (frontier-level, frontier-values) pair built from the
+    gathered masked frontier slice, see ``repro.core.bfs``).  Returns
+    the (shard_rows, B) local contribution tile stack; padding slots
+    (``dst == shard_rows``) fall outside the segment range and are
+    dropped, padding sources (the global sink) gather 0.
+    """
+    vals = jnp.where(dist[shard.src, :] == levels[None, :],
+                     sigma[shard.src, :], 0.0)
+    return jax.ops.segment_sum(vals, shard.dst, num_segments=shard.v_pad)
+
+
 def frontier_expand_node_blocked_ref(csc, dist, sigma, levels):
     """Node-blocked reference lane: expand over the CSC edge order.
 

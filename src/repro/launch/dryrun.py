@@ -186,7 +186,7 @@ def _combine(terms, coeffs):
     return out
 
 
-# --- perf-variant catalogue (hillclimb; EXPERIMENTS.md §Perf) ------------
+# --- perf-variant catalogue (hillclimb; DESIGN.md §Perf) ------------
 # each entry: config transform applied before building the cell
 def _variant_cfg(cfg, variant: str):
     if variant == "base" or variant is None:
@@ -394,13 +394,24 @@ def _write(record, out_dir):
 
 def run_betweenness(mesh_name: str, aggregation: str,
                     rmat_scale: int = 22, out_dir: str = OUT_DIR,
-                    n0: int = 1, batch_size: int | None = None) -> dict:
+                    n0: int = 1, batch_size: int | None = None,
+                    partitioned: bool = False) -> dict:
     """Lower + compile one SPMD adaptive-sampling epoch (the paper's own
     workload) on the production mesh, with abstract graph arrays sized
     like an R-MAT 2^scale x 30 instance.  The BFS while-loops are counted
     once by cost_analysis (trip counts are data-dependent — documented),
     but the epoch's AGGREGATION — the object the paper studies — sits
-    outside all loops, so its collective bytes are exact."""
+    outside all loops, so its collective bytes are exact.
+
+    ``partitioned=True`` lowers the vertex-sharded cooperative epoch
+    instead (repro.core.partition; DESIGN.md §Partitioning): the graph's
+    frontier structure is split over the mesh and each BFS level
+    all-gathers only the masked frontier slice.  Because the frontier
+    all-gather sits INSIDE the level while-loop (counted once), the
+    recorded all-gather bytes of the loop body ARE the per-level
+    exchange volume — reported in the record's ``exchange`` block,
+    together with the per-device shard bytes vs the replicated-layout
+    equivalent (the O(E) -> O(E / n_dev) claim, measured)."""
     import jax.numpy as jnp
     from repro.core.adaptive import make_epoch_step_spmd, _pad_len
     from repro.core.kadabra import KadabraParams
@@ -415,19 +426,10 @@ def run_betweenness(mesh_name: str, aggregation: str,
     v_pad = _pad_len(v, n_dev)
 
     sds = jax.ShapeDtypeStruct
-    graph = Graph(
-        indptr=sds((v + 1,), jnp.int32), indices=sds((e_pad,), jnp.int32),
-        src=sds((e_pad,), jnp.int32), dst=sds((e_pad,), jnp.int32),
-        degree=sds((v,), jnp.int32), n_nodes=v, n_edges=e_dir,
-        max_degree=100_000)
     params = KadabraParams(
         eps=0.001, delta=0.1, omega=sds((), jnp.float32),
         log_inv_delta_l=sds((v,), jnp.float32),
         log_inv_delta_u=sds((v,), jnp.float32))
-    args = (graph, params, sds((v_pad,), jnp.float32), sds((), jnp.int32),
-            sds((n_dev, v_pad), jnp.float32), sds((), jnp.int32),
-            sds((n_dev, v + 1), jnp.float32), sds((), jnp.int32),
-            sds((n_dev, 2), jnp.uint32))
 
     # lower the batched sampling lane at an explicit width.  The graph
     # here is abstract (ShapeDtypeStructs — no diameter estimate to
@@ -442,8 +444,46 @@ def run_betweenness(mesh_name: str, aggregation: str,
         from repro.core.adaptive import DEFAULT_SAMPLE_BATCH_SIZE
         batch_size = DEFAULT_SAMPLE_BATCH_SIZE
     batch_size = max(1, min(batch_size, n0))
-    step = make_epoch_step_spmd(mesh, aggregation, v, v_pad, n0,
-                                batch_size=batch_size)
+
+    exchange = None
+    if partitioned:
+        from repro.core.adaptive import make_epoch_step_sharded
+        from repro.core.partition import abstract_partitioned_graph
+        from repro.kernels.frontier.ops import choose_csc_blocks
+        block_v, block_e = choose_csc_blocks(v, batch_size)
+        pg = abstract_partitioned_graph(v, e_dir, n_dev, block_v=block_v,
+                                        block_e=block_e)
+        shard_bytes = 4 * (2 * pg.shards.e_slots_per_shard
+                           + 2 * pg.shards.n_edge_blocks)
+        exchange = {
+            "per_device_shard_bytes": int(shard_bytes),
+            "replicated_csc_bytes_estimate": int(4 * (2 * e_dir
+                                                      + 2 * e_dir // block_e)),
+            "frontier_slice_bytes_per_level_dense":
+                int(pg.v_pad * batch_size * 4),
+            "note": "loop-body all-gather bytes below = one BFS level's "
+                    "frontier exchange (while bodies counted once)",
+        }
+        step = make_epoch_step_sharded(mesh, v, v_pad, n0,
+                                       batch_size=batch_size)
+        args = (pg, params, sds((v_pad,), jnp.float32), sds((), jnp.int32),
+                sds((v_pad,), jnp.float32), sds((), jnp.int32),
+                sds((v + 1,), jnp.float32), sds((), jnp.int32),
+                sds((2,), jnp.uint32))
+    else:
+        graph = Graph(
+            indptr=sds((v + 1,), jnp.int32),
+            indices=sds((e_pad,), jnp.int32),
+            src=sds((e_pad,), jnp.int32), dst=sds((e_pad,), jnp.int32),
+            degree=sds((v,), jnp.int32), n_nodes=v, n_edges=e_dir,
+            max_degree=100_000)
+        step = make_epoch_step_spmd(mesh, aggregation, v, v_pad, n0,
+                                    batch_size=batch_size)
+        args = (graph, params, sds((v_pad,), jnp.float32),
+                sds((), jnp.int32),
+                sds((n_dev, v_pad), jnp.float32), sds((), jnp.int32),
+                sds((n_dev, v + 1), jnp.float32), sds((), jnp.int32),
+                sds((n_dev, 2), jnp.uint32))
     with active_mesh(mesh):
         t0 = time.time()
         lowered = jax.jit(step).lower(*args)
@@ -451,10 +491,12 @@ def run_betweenness(mesh_name: str, aggregation: str,
         t_compile = time.time() - t0
     ca = _cost_analysis(compiled)
     ma = compiled.memory_analysis()
+    cell = ("epoch_part_rmat" if partitioned else "epoch_rmat")
     record = {
-        "arch": "betweenness", "cell": f"epoch_rmat{rmat_scale}",
+        "arch": "betweenness", "cell": f"{cell}{rmat_scale}",
         "mesh": mesh_name, "chips": n_dev, "family": "graph-sampling",
-        "basis": "exact", "variant": aggregation,
+        "basis": "exact",
+        "variant": "partitioned" if partitioned else aggregation,
         "sample_batch_size": batch_size,
         "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
         "full": {
@@ -474,6 +516,8 @@ def run_betweenness(mesh_name: str, aggregation: str,
         "note": "BFS while-loop bodies counted once (data-dependent trip "
                 "counts); aggregation collectives exact",
     }
+    if exchange is not None:
+        record["exchange"] = exchange
     record["extrapolated"] = _lin(record["full"])
     _write(record, out_dir)
     return record
@@ -499,6 +543,9 @@ def main():
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--betweenness", action="store_true",
                     help="lower the paper's own epoch step instead")
+    ap.add_argument("--partitioned", action="store_true",
+                    help="with --betweenness: lower the vertex-sharded "
+                         "cooperative epoch (per-level frontier exchange)")
     ap.add_argument("--aggregation", default="hierarchical",
                     choices=["hierarchical", "flat", "root"])
     ap.add_argument("--variant", default=None,
@@ -510,9 +557,11 @@ def main():
     if args.betweenness:
         for mesh_name in meshes:
             rec = run_betweenness(mesh_name, args.aggregation,
-                                  out_dir=args.out)
+                                  out_dir=args.out,
+                                  partitioned=args.partitioned)
+            lane = "partitioned" if args.partitioned else args.aggregation
             print(f"[dryrun] betweenness x {mesh_name} x "
-                  f"{args.aggregation}: ok", flush=True)
+                  f"{lane}: ok", flush=True)
         return
     if args.all:
         cells = list(iter_assigned_cells())

@@ -74,7 +74,7 @@ def scatter_dst(msgs, dst, n_nodes: int):
     """Edge->node aggregation via segment_sum.  Note: under GSPMD this
     lowers to a full all-reduce of the (N, D) contribution tensor on
     every device — sharding hints on the output do NOT turn it into a
-    reduce-scatter on this XLA version (probed; see EXPERIMENTS.md
+    reduce-scatter on this XLA version (probed; see DESIGN.md
     §Perf).  The shard_map path below owns its collectives instead."""
     return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
 

@@ -19,7 +19,7 @@ Dispatch design (TPU/GSPMD-native):
     (granite), and a small fraction for wide experts (moonshot);
   * the earlier sort/scatter dispatch (cheaper in FLOPs but opaque to
     the partitioner: data-dependent scatters forced GSPMD into global
-    gathers) is kept in git history; EXPERIMENTS.md §Perf records the
+    gathers) is kept in git history; DESIGN.md §Perf records the
     before/after.
 
 An expert-parallel variant (experts sharded over devices + all_to_all)

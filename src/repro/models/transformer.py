@@ -67,11 +67,11 @@ class TransformerConfig:
     # "tp"   — Megatron tensor parallelism (activations all-reduced/layer)
     # "fsdp" — weights sharded over "model", gathered at use, gradients
     #          reduce-scattered (ZeRO-3); wins when weight bytes <<
-    #          activation bytes per device (EXPERIMENTS.md §Perf)
+    #          activation bytes per device (DESIGN.md §Perf)
     param_sharding: str = "tp"
     train_microbatch: int = 4             # gradient-accumulation slices
     # block-causal attention schedule (skips dead chunks; see
-    # attention.trapezoid_attention and EXPERIMENTS.md §Perf)
+    # attention.trapezoid_attention and DESIGN.md §Perf)
     attn_trapezoid: bool = False
     # remat policy: "full" (save only group inputs, recompute everything)
     # or "save_proj" (save the projection/matmul outputs, recompute the
