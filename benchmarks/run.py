@@ -495,7 +495,9 @@ import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map, make_mesh_compat
-from repro.core import build_csc_layout, erdos_renyi_graph, partition_graph
+from repro.core import (build_csc_layout, erdos_renyi_graph, exchange_plan,
+                        grid_graph, max_active_source_chunks,
+                        partition_graph)
 from repro.core.bfs import bfs_sssp_batched
 from repro.core.sampler import sample_batch
 
@@ -515,9 +517,17 @@ def timeit(fn, *a):
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / reps
 
-for scale in args.get("scales", [15, 17]):
+instances = ([("erdos_renyi", s) for s in args.get("scales", [15, 17])]
+             + [("grid", s) for s in args.get("grid_scales", [])])
+for family, scale in instances:
     v = 1 << scale
-    g = erdos_renyi_graph(v, 4.0, seed=scale)
+    if family == "grid":
+        # high-diameter road-network-like instance (narrow grid,
+        # diameter ~V/8): frontiers span O(1) source blocks per level —
+        # the regime the sparse exchange protocol targets
+        g = grid_graph(v // 8, 8)
+    else:
+        g = erdos_renyi_graph(v, 4.0, seed=scale)
     csc = build_csc_layout(g, batch=B)
     pg = partition_graph(g, n_dev, batch=B)
     # --- per-device graph bytes: the frontier-lane edge structure ------
@@ -536,16 +546,27 @@ for scale in args.get("scales", [15, 17]):
     res = jax.jit(bfs_sssp_batched)(g, sources)
     dist = np.asarray(res.dist)
     depth = int(np.asarray(res.levels).max())
-    # masked_frontier_bytes is the LOGICAL frontier volume per level —
-    # what the bitmap-scheduled exchange (ROADMAP follow-up) would move;
-    # the shipped lane all-gathers the dense (v_pad, B) slice every
-    # level (dense_gather_bytes)
+    # per level: which protocol the bitmap-scheduled exchange takes
+    # (sparse when the worst shard's active source blocks fit the static
+    # budget, dense fallback otherwise) and the bytes it moves, from the
+    # shared ExchangePlan accounting; masked_frontier_bytes stays the
+    # LOGICAL frontier volume (the unpadded lower bound)
+    plan = exchange_plan(pg, B)
     levels = []
+    exchange_total = dense_total = 0
     for lv in range(depth + 1):
-        rows = int(((dist == lv).any(axis=1)).sum())
+        mask = (dist == lv).any(axis=1)
+        rows = int(mask.sum())
+        mab = max_active_source_chunks(pg, mask)
+        lv_bytes = plan.level_bytes(mab)
+        exchange_total += lv_bytes
+        dense_total += plan.dense_bytes
         levels.append({"level": lv, "frontier_rows": rows,
                        "masked_frontier_bytes": rows * B * 4,
-                       "dense_gather_bytes": pg.v_pad * B * 4})
+                       "active_chunks_max_per_shard": mab,
+                       "sparse_taken": plan.sparse_taken(mab),
+                       "exchange_bytes": lv_bytes,
+                       "dense_gather_bytes": plan.dense_bytes})
     # --- samples/s: replicated independent vs sharded cooperative ------
     gspec = pg.partition_spec(axes)
     rep_gspec = jax.tree.map(lambda _: P(), g)
@@ -567,7 +588,8 @@ for scale in args.get("scales", [15, 17]):
     t_shard = timeit(shard_samp, pg, key)
     t_rep = timeit(rep_samp, g, jax.random.split(key, n_dev))
     row = {
-        "scale": scale, "n_nodes": v, "n_edges_directed": int(g.n_edges),
+        "family": family, "scale": scale, "n_nodes": int(g.n_nodes),
+        "n_edges_directed": int(g.n_edges),
         "n_dev": n_dev, "batch": B, "n_samples": n,
         "blocking": {"block_v": pg.shards.block_v,
                      "block_e": pg.shards.block_e,
@@ -575,7 +597,12 @@ for scale in args.get("scales", [15, 17]):
         "replicated_csc_bytes": rep_bytes,
         "per_device_shard_bytes": per_dev,
         "bytes_ratio": per_dev / rep_bytes,
-        "dense_gather_bytes_per_level": pg.v_pad * B * 4,
+        "exchange_budget_blocks": plan.budget,
+        "dense_gather_bytes_per_level": plan.dense_bytes,
+        "sparse_protocol_bytes_per_level": plan.sparse_bytes,
+        "exchange_bytes_total": exchange_total,
+        "dense_bytes_total": dense_total,
+        "exchange_vs_dense_ratio": exchange_total / dense_total,
         "bfs_depth": depth,
         "exchange_per_level": levels,
         "samples_per_s_sharded": n / t_shard,
@@ -589,29 +616,35 @@ print("PARTITION SWEEP OK")
 
 def run_partition_sweep(scales, n_dev: int = 8, batch: int = 8,
                         n_samples: int = 16, reps: int = 1,
-                        write_json: bool = True, full: bool = False):
+                        write_json: bool = True, full: bool = False,
+                        grid_scales=()):
     """Replicated vs vertex-sharded frontier lane (subprocess: the fake
     device count must be set before JAX initializes).
 
-    Measures, per scale: (i) the per-device frontier-lane graph bytes —
-    the acceptance claim of the partitioning subsystem, asserted inside
-    the script at <= (1/n_dev + eps) of the replicated CSCLayout; (ii)
-    the per-level frontier-exchange volume (dense_gather_bytes = the
-    v_pad * B * 4 all-gather the shipped lane performs each level;
-    masked_frontier_bytes = the logical rows * B * 4 a bitmap-scheduled
-    exchange would move — the recorded follow-up); (iii) samples/s of
-    the replicated
-    independent lane (n_dev * n samples) vs the sharded cooperative
-    lane (n samples, the whole mesh on one batch).  On this container
-    fake devices serialize, so the sharded lane's absolute rate
-    understates real hardware, but the memory + exchange columns are
-    exact.  Returns the rows; ``write_json`` appends to
+    Measures, per instance (Erdos-Renyi per ``scales`` entry, plus a
+    high-diameter grid per ``grid_scales`` entry — the regime the
+    sparse exchange targets): (i) the per-device frontier-lane graph
+    bytes — the acceptance claim of the partitioning subsystem,
+    asserted inside the script at <= (1/n_dev + eps) of the replicated
+    CSCLayout; (ii) the per-level volume of the bitmap-scheduled
+    frontier exchange (DESIGN.md §Frontier exchange): which protocol
+    each level takes (sparse when the worst shard's active source
+    blocks fit the partition's static budget, dense fallback
+    otherwise), exchange_bytes vs the dense baseline, and the
+    exchange_vs_dense_ratio aggregate — masked_frontier_bytes stays
+    the logical rows * B * 4 lower bound; (iii) samples/s of the
+    replicated independent lane (n_dev * n samples) vs the sharded
+    cooperative lane (n samples, the whole mesh on one batch).  On
+    this container fake devices serialize, so the sharded lane's
+    absolute rate understates real hardware, but the memory + exchange
+    columns are exact.  Returns the rows; ``write_json`` appends to
     BENCH_sampling.json."""
     import json
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PARTITION_SWEEP_ARGS"] = json.dumps({
-        "scales": list(scales), "n_dev": n_dev, "batch": batch,
+        "scales": list(scales), "grid_scales": list(grid_scales),
+        "n_dev": n_dev, "batch": batch,
         "n_samples": n_samples, "reps": reps})
     out = subprocess.run([sys.executable, "-c", _PARTITION_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=3600)
@@ -622,22 +655,31 @@ def run_partition_sweep(scales, n_dev: int = 8, batch: int = 8,
     rows = [json.loads(line[4:]) for line in out.stdout.splitlines()
             if line.startswith("ROW ")]
     for row in rows:
-        print(f"  V=2^{row['scale']:<3} shard/replicated bytes "
+        n_sparse = sum(lv["sparse_taken"] for lv in row["exchange_per_level"])
+        print(f"  {row['family'][:4]:>4} V=2^{row['scale']:<3} "
+              f"shard/replicated bytes "
               f"{row['bytes_ratio']:.3f} (1/n_dev={1/row['n_dev']:.3f})  "
+              f"exchange/dense {row['exchange_vs_dense_ratio']:.3f} "
+              f"({n_sparse}/{len(row['exchange_per_level'])} levels "
+              f"sparse, K={row['exchange_budget_blocks']})  "
               f"sharded {row['samples_per_s_sharded']:,.1f} samples/s vs "
               f"replicated {row['samples_per_s_replicated_total']:,.1f} "
               f"(x{row['n_dev']} devices)")
-        emit(f"partition_sweep.s{row['scale']}.sharded",
+        emit(f"partition_sweep.{row['family']}.s{row['scale']}.sharded",
              row["seconds_sharded"] * 1e6 / row["n_samples"],
              f"bytes_ratio={row['bytes_ratio']:.3f};"
+             f"exchange_ratio={row['exchange_vs_dense_ratio']:.3f};"
              f"samples_per_s={row['samples_per_s_sharded']:.1f}")
     record = {
         "section": "partition_sweep",
-        "instance": {"family": "erdos_renyi", "avg_degree": 4.0},
+        "instance": {"families": ["erdos_renyi", "grid"],
+                     "avg_degree_er": 4.0},
         "metric": "per-device frontier-lane bytes (sharded vs replicated "
-                  "CSCLayout); per-level exchange: dense_gather_bytes = "
-                  "actual all-gather, masked_frontier_bytes = logical "
-                  "frontier (bitmap-exchange follow-up); samples/s "
+                  "CSCLayout); per-level bitmap-scheduled exchange: "
+                  "exchange_bytes = protocol actually taken (sparse when "
+                  "active blocks fit the budget, dense fallback "
+                  "otherwise), masked_frontier_bytes = logical frontier "
+                  "lower bound; samples/s "
                   "replicated-independent vs sharded-cooperative; fake "
                   "devices serialize",
         "full": full,
@@ -646,13 +688,25 @@ def run_partition_sweep(scales, n_dev: int = 8, batch: int = 8,
         "results": rows,
     }
     if write_json:
-        _append_bench_record(record)
+        # deep-BFS instances carry thousands of per-level entries; the
+        # committed history keeps aggregates exact and subsamples the
+        # per-level trace to a bounded stride (the returned rows stay
+        # complete for in-process consumers)
+        slim_rows = []
+        for row in rows:
+            lv = row["exchange_per_level"]
+            stride = max(1, -(-len(lv) // 512))
+            if stride > 1:
+                row = {**row, "exchange_per_level": lv[::stride],
+                       "exchange_per_level_stride": stride}
+            slim_rows.append(row)
+        _append_bench_record({**record, "results": slim_rows})
     return record
 
 
 def bench_partition_sweep(full: bool):
     print("\n== partition sweep: replicated vs vertex-sharded lane ==")
-    run_partition_sweep([15, 17], n_dev=8, batch=8,
+    run_partition_sweep([15, 17], grid_scales=[15], n_dev=8, batch=8,
                         n_samples=32 if full else 16,
                         reps=3 if full else 1, full=full)
 

@@ -4,8 +4,10 @@ from .graph import (CSCLayout, Graph, bucket_layout, build_csc_layout,
                     build_graph, erdos_renyi_graph, from_edge_list,
                     grid_graph, hyperbolic_graph, rmat_graph,
                     with_csc_layout)
-from .partition import (PartitionedGraph, ShardedCSCLayout, global_row,
-                        partition_graph, shard_vertex_range, vertex_owner)
+from .partition import (ExchangePlan, PartitionedGraph, ShardedCSCLayout,
+                        default_exchange_budget, exchange_plan, global_row,
+                        max_active_source_chunks, partition_graph,
+                        shard_vertex_range, vertex_owner)
 from .bfs import (BFSResult, BidirResult, bfs_sssp, bfs_sssp_batched,
                   bfs_sssp_batched_sharded, bidirectional_bfs,
                   bidirectional_bfs_batched,
@@ -27,8 +29,9 @@ __all__ = [
     "Graph", "CSCLayout", "bucket_layout", "build_graph",
     "build_csc_layout", "with_csc_layout", "from_edge_list", "rmat_graph",
     "hyperbolic_graph", "grid_graph", "erdos_renyi_graph",
-    "PartitionedGraph", "ShardedCSCLayout", "partition_graph",
-    "vertex_owner", "global_row", "shard_vertex_range",
+    "PartitionedGraph", "ShardedCSCLayout", "ExchangePlan",
+    "partition_graph", "vertex_owner", "global_row", "shard_vertex_range",
+    "default_exchange_budget", "exchange_plan", "max_active_source_chunks",
     "BFSResult", "BidirResult", "bfs_sssp", "bfs_sssp_batched",
     "bfs_sssp_batched_sharded", "bidirectional_bfs",
     "bidirectional_bfs_batched", "bidirectional_bfs_batched_sharded",

@@ -525,9 +525,12 @@ def make_epoch_step_sharded(mesh, n_nodes: int, v_pad: int, n0: int,
     """One jit-able COOPERATIVE epoch on a :class:`PartitionedGraph`.
 
     The graph is sharded over the whole mesh, so the mesh advances one
-    batch of B samples per BFS round *collectively* (sharded frontier
-    exchange inside ``repro.core.bfs``) instead of sampling
-    independently per device: the frame is replicated by construction
+    batch of B samples per BFS round *collectively* (the
+    bitmap-scheduled frontier exchange inside ``repro.core.bfs``,
+    governed by the partition's static ``exchange_budget`` — the epoch
+    lane picks it up transparently through the shared BFS drivers)
+    instead of sampling independently per device: the frame is
+    replicated by construction
     and folds into the aggregate without any reduction collective — the
     paper's epoch double-buffering survives purely as the dataflow that
     lets the scheduler overlap the stop-rule evaluation with the next

@@ -59,7 +59,9 @@ import jax.numpy as jnp
 
 from .graph import Graph
 from .partition import PartitionedGraph, axis_tuple
-from repro.kernels.frontier.ops import frontier_expand
+from repro.kernels.frontier import (edge_bitmap_from_source_bits,
+                                    frontier_expand,
+                                    frontier_source_block_bitmap)
 
 __all__ = [
     "BFSResult", "bfs_sssp", "bfs_sssp_batched", "bfs_sssp_batched_sharded",
@@ -318,18 +320,26 @@ def bidirectional_bfs(graph: Graph, s, t, *,
 # The sharded drivers mirror the replicated ones, with the while_loop
 # state kept SHARDED vertex-major: each device carries only the
 # (shard_rows, B) slice of dist/sigma for its owned rows, and one level
-# exchanges only the masked frontier slice — a single (shard_rows, B)
-# all_gather of sigma * [dist == level] (the paper's "communicate only
-# the sampling state" discipline applied to the BFS itself).  Three
-# collectives per level: the frontier all_gather, the pmax of the
-# rescale guard, and the psum of the new-vertex count; everything else
-# is local.  Loop conditions read only carried (replicated) scalars, so
-# no collective ever runs inside a while_loop cond.  Parity contract:
-# max/min/sum reductions over the vertex axis split exactly into
-# (local reduce, cross-shard reduce), and the per-destination
-# contribution order inside a shard equals the replicated CSC bucket
-# order, so on integer-valued sigma the sharded lane is bit-for-bit
-# identical to the replicated drivers (asserted in tests/test_partition).
+# exchanges only the masked frontier slice sigma * [dist == level] (the
+# paper's "communicate only the sampling state" discipline applied to
+# the BFS itself) — through the bitmap-scheduled exchange of
+# _gather_frontier_sharded below, which ships only the source chunks
+# that actually hold frontier rows whenever they fit the partition's
+# static chunk budget, and the dense all_gather otherwise.  Collectives
+# per level: the occupancy-bitmap all_gather + its pmax, the frontier
+# exchange (sparse pair of all_gathers or the dense one), the pmax of
+# the rescale guard, and the psum of the new-vertex count; everything
+# else is local.  Loop conditions read only carried (replicated)
+# scalars, so no collective ever runs inside a while_loop cond.  Parity
+# contract: max/min/sum reductions over the vertex axis split exactly
+# into (local reduce, cross-shard reduce), the sparse exchange
+# reconstructs bit-for-bit the array the dense gather would produce
+# (skipped blocks are exactly the all-zero blocks of the masked
+# frontier), and the per-destination contribution order inside a shard
+# equals the replicated CSC bucket order — so on integer-valued sigma
+# the sharded lane is bit-for-bit identical to the replicated drivers
+# regardless of which protocol each level takes (asserted in
+# tests/test_partition).
 
 
 def _init_state_sharded(pg: PartitionedGraph, sources, axis):
@@ -368,29 +378,121 @@ def _read_rows_sharded(pg: PartitionedGraph, state, idx, axis):
     return jax.lax.psum(vals, axis)
 
 
+def _gather_frontier_sharded(pg: PartitionedGraph, dist, sigma, level,
+                             active, axis):
+    """The per-level frontier exchange (DESIGN.md §Frontier exchange).
+
+    Returns ``(fvals, src_bits)``: the (v_pad, B) masked frontier values
+    ``sigma * [dist == level][active]`` over the GLOBAL rows, and the
+    (n_global_chunks,) int32 source-chunk occupancy bits that scheduled
+    them.  Two protocols produce the identical ``fvals``:
+
+    * **dense** — one tiled all_gather of the local (shard_rows, B)
+      masked slice (the only protocol when ``pg.exchange_budget == 0``);
+    * **bitmap-scheduled sparse** — each shard compacts its active
+      source chunks (cumsum of its occupancy bits) into
+      ``pg.exchange_budget`` static (chunk_rows, B) slots, all-gathers
+      the slot values + their global chunk indices, and scatters
+      received chunks into the zeroed dense view.  Inactive chunks of
+      the masked frontier are all-zero by construction, so the
+      reconstruction is bit-for-bit the dense gather's result.
+
+    The schedule works at ``pg.exchange_chunk_rows`` granularity (a
+    divisor of the kernel node block — see the partition module
+    docstring for why node blocks themselves are too coarse).  The
+    occupancy bits are always exchanged (coarsened by a reshape-max,
+    they double as the expansion kernel's edge-block skip schedule),
+    and their pmaxed per-shard count picks the protocol: a replicated
+    scalar, so every shard takes the same ``lax.cond`` branch and the
+    while_loop stays shape-stable — any level whose worst shard
+    overflows the budget falls back to dense for that level only.
+
+    ``active`` (B,) masks FINISHED samples out of the wire entirely:
+    a sample that left its loop keeps a frozen ``level`` entry, so its
+    last frontier would otherwise be exchanged (and counted by the
+    bitmap) on every remaining iteration.  Dropping it is
+    semantics-preserving — inactive columns' contributions are
+    discarded by every caller — and is what makes the measured
+    occupancy match the per-level accounting of
+    :class:`repro.core.partition.ExchangePlan`.
+    """
+    chunk = pg.exchange_chunk_rows
+    cps = pg.exchange_chunks_per_shard
+    b = dist.shape[1]
+    budget = pg.exchange_budget
+    fmask = (dist == level[None, :]) & active[None, :]
+    fvals_local = jnp.where(fmask, sigma, 0.0)
+    bits_local = frontier_source_block_bitmap(dist, level, chunk,
+                                              active)     # (cps,)
+    src_bits = jax.lax.all_gather(bits_local, axis, axis=0, tiled=True)
+    # break-even guard at the ACTUAL batch width (ExchangePlan
+    # .sparse_available, same arithmetic): a budget whose padded sparse
+    # send — values + indices — would not undercut the dense gather
+    # degenerates to dense-only, so the sparse branch is never traced
+    # at a loss
+    if budget <= 0 or budget * (chunk * b + 1) >= cps * chunk * b:
+        fvals = jax.lax.all_gather(fvals_local, axis, axis=0, tiled=True)
+        return fvals, src_bits
+
+    n_gchunks = pg.n_shards * cps
+    fits = jax.lax.pmax(jnp.sum(bits_local), axis) <= budget
+
+    def sparse(_):
+        # compact: active local chunk j -> slot cumsum(bits)[j] - 1
+        # (< budget whenever this branch runs), inactive -> dump slot
+        pos = jnp.cumsum(bits_local) - 1
+        slot = jnp.where(bits_local == 1, pos, budget)
+        chk_of_slot = jnp.full((budget + 1,), cps, jnp.int32).at[slot].set(
+            jnp.arange(cps, dtype=jnp.int32), mode="drop")[:budget]
+        chunks = jnp.concatenate(
+            [fvals_local.reshape(cps, chunk, b),
+             jnp.zeros((1, chunk, b), fvals_local.dtype)])
+        send_vals = chunks[chk_of_slot]               # (budget, chunk, B)
+        offset = jax.lax.axis_index(axis) * cps       # global chunk ids
+        send_idx = jnp.where(chk_of_slot < cps, offset + chk_of_slot,
+                             n_gchunks)               # sentinel: dump row
+        g_vals = jax.lax.all_gather(send_vals, axis, axis=0, tiled=True)
+        g_idx = jax.lax.all_gather(send_idx, axis, axis=0, tiled=True)
+        # scatter-reconstruct; padded slots carry zero chunks and all
+        # land on the sliced-off sentinel row, active global chunks are
+        # unique across shards — deterministic despite the duplicates
+        dense_view = jnp.zeros((n_gchunks + 1, chunk, b),
+                               fvals_local.dtype).at[g_idx].set(
+            g_vals, mode="drop")
+        return dense_view[:n_gchunks].reshape(n_gchunks * chunk, b)
+
+    def dense(_):
+        return jax.lax.all_gather(fvals_local, axis, axis=0, tiled=True)
+
+    return jax.lax.cond(fits, sparse, dense, None), src_bits
+
+
 def _expand_level_sharded(pg: PartitionedGraph, dist, sigma, level, active,
                           axis):
     """One sharded batched BFS relaxation.
 
-    The only place the per-level exchange happens: the masked frontier
-    values ``sigma * [dist == level]`` are all-gathered over the shard
-    axis (one (v_pad, B) f32 array — dist itself never crosses the
-    wire; the dispatcher's sharded-lane (dist, sigma) operands are
+    The only place the per-level exchange happens:
+    :func:`_gather_frontier_sharded` delivers the masked frontier
+    values over the global rows (dist itself never crosses the wire;
+    the dispatcher's sharded-lane (dist, sigma) operands are
     synthesized from the gathered values, which XLA fuses away), then
     each device expands only its owned destination rows through the
-    ``shard=`` route of ``repro.kernels.frontier.frontier_expand``.
-    The rescale guard and the new-vertex count are the only other
-    cross-shard reductions.  Returns updated local (dist, sigma,
-    n_new (B,) global).
+    ``shard=`` route of ``repro.kernels.frontier.frontier_expand`` —
+    with the exchange schedule's source-block bits recycled as the
+    kernel's edge-block skip bitmap.  The rescale guard and the
+    new-vertex count are the only other cross-shard reductions.
+    Returns updated local (dist, sigma, n_new (B,) global).
     """
-    fvals_local = jnp.where(dist == level[None, :], sigma, 0.0)
-    fvals = jax.lax.all_gather(fvals_local, axis, axis=0, tiled=True)
+    fvals, src_bits = _gather_frontier_sharded(pg, dist, sigma, level,
+                                               active, axis)
     # reached frontier vertices always carry sigma > 0, so fvals > 0 is
     # exactly the frontier mask — synthesize the dispatcher's contract
     fdist = jnp.where(fvals > 0.0, level[None, :], jnp.int32(-1))
     lcsc = pg.shards.local()
-    contrib = frontier_expand(lcsc.src, lcsc.dst, fdist, fvals, level,
-                              shard=lcsc)
+    contrib = frontier_expand(
+        lcsc.src, lcsc.dst, fdist, fvals, level, shard=lcsc,
+        block_active=edge_bitmap_from_source_bits(
+            lcsc, src_bits, pg.exchange_chunk_rows))
     new = (contrib > 0) & (dist == -1) & active[None, :]
     dist = jnp.where(new, level[None, :] + 1, dist)
     sigma = jnp.where(new, contrib, sigma)

@@ -106,9 +106,12 @@ def estimate_diameter_sharded(pg: PartitionedGraph, key=None,
     shard_map with the shard axis name(s).  Phase 1 was the paper's
     Fig. 2b scalability bottleneck; on a partitioned graph it runs the
     same cooperative sharded BFS lane as sampling, so no device ever
-    materializes the full edge structure.  The seed draw matches the
-    replicated estimator key-for-key (bit-identical bounds on the same
-    graph)."""
+    materializes the full edge structure — and the sweeps inherit the
+    bitmap-scheduled frontier exchange transparently from the shared
+    driver (double sweeps are exactly the high-diameter, sparse-
+    frontier regime the sparse protocol is built for; see DESIGN.md
+    §Frontier exchange).  The seed draw matches the replicated
+    estimator key-for-key (bit-identical bounds on the same graph)."""
     if axis is None:
         raise ValueError("estimate_diameter_sharded requires the shard "
                          "axis name(s) (axis=...)")

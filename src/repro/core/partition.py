@@ -49,10 +49,47 @@ the path sampler in :mod:`repro.core.sampler`
 lane in :mod:`repro.core.adaptive` (``run_kadabra`` on a
 ``PartitionedGraph``).  All of them run INSIDE ``shard_map`` over the
 mesh axes that carry the shard dimension.
+
+Frontier exchange (DESIGN.md §Frontier exchange)
+------------------------------------------------
+
+The per-level exchange the BFS drivers perform comes in two protocols,
+selected on-device per level:
+
+* **dense** — all-gather the full masked (shard_rows, B) frontier
+  slice: O(V * B / n_dev) sent per device per level regardless of how
+  sparse the frontier is;
+* **bitmap-scheduled sparse** — each device compacts the source
+  *chunks* that actually hold frontier rows (its occupancy bitmap)
+  into a STATIC budget of ``exchange_budget`` chunk slots, all-gathers
+  only those chunks plus their global chunk indices, and every receiver
+  scatters them back into the dense frontier view — bit-for-bit the
+  array the dense gather would have produced, at
+  O(budget * chunk_rows * B) per device per level.
+
+The schedule granularity is ``exchange_chunk_rows = gcd(block_v, 128)``
+rows — a divisor of the kernel's node block, NOT the node block itself.
+Node blocks are sized for VMEM residency (hundreds of rows), which is
+far coarser than real frontiers: on a narrow-grid trace at V=2^15 a
+``block_v``-granular schedule fit its budget on only ~30% of levels,
+while 128-row chunks track each sample's frontier window at 1-2 chunks.
+Chunk boundaries nest inside node blocks (gcd), so per-chunk bits
+coarsen to the kernel's per-node-block skip bitmap by a reshape-max.
+
+``exchange_budget`` (a static field of :class:`PartitionedGraph`,
+counted in chunks per shard) is the schedule's shape-stability
+contract: the while_loop sees one fixed sparse shape, and any level
+whose occupancy exceeds the budget on ANY shard falls back to the
+dense protocol for that level (one pmax decides, so every shard takes
+the same branch).  ``0`` disables the sparse protocol entirely.
+:class:`ExchangePlan` / :func:`max_active_source_chunks` are the
+static + per-trace accounting that the dryrun, ``partition_sweep`` and
+the tests report.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -63,12 +100,16 @@ from .graph import CSCLayout, Graph, bucket_layout
 __all__ = [
     "ShardedCSCLayout",
     "PartitionedGraph",
+    "ExchangePlan",
     "axis_tuple",
     "partition_graph",
     "vertex_owner",
     "global_row",
     "shard_vertex_range",
     "abstract_partitioned_graph",
+    "default_exchange_budget",
+    "exchange_plan",
+    "max_active_source_chunks",
 ]
 
 
@@ -170,10 +211,17 @@ class PartitionedGraph:
     n_nodes: int           # static
     n_edges: int           # static: directed edge slots actually used
     max_degree: int        # static
+    # static: max source CHUNKS (exchange_chunk_rows-row sub-blocks)
+    # the bitmap-scheduled sparse frontier exchange ships per shard per
+    # level (module docstring); 0 = dense protocol only.  Part of the
+    # pytree aux data, so two partitions that differ only in budget
+    # compile as distinct programs.
+    exchange_budget: int = 0
 
     def tree_flatten(self):
         leaves = (self.indptr, self.indices, self.degree, self.shards)
-        aux = (self.n_nodes, self.n_edges, self.max_degree)
+        aux = (self.n_nodes, self.n_edges, self.max_degree,
+               self.exchange_budget)
         return leaves, aux
 
     @classmethod
@@ -197,11 +245,29 @@ class PartitionedGraph:
     def n_edges_undirected(self) -> int:
         return self.n_edges // 2
 
+    @property
+    def exchange_chunk_rows(self) -> int:
+        """Rows per exchange-schedule chunk: the largest row count that
+        both divides the kernel's node block (so chunk bits coarsen to
+        the per-node-block skip bitmap by a reshape) and stays within
+        the 128-row alignment quantum — ``gcd(block_v, 128)``."""
+        return math.gcd(self.shards.block_v, 128)
+
+    @property
+    def exchange_chunks_per_shard(self) -> int:
+        """How many schedule chunks one shard's row range holds (the
+        length of its per-level occupancy bitmap)."""
+        return self.shard_rows // self.exchange_chunk_rows
+
     def partition_spec(self, mesh_axes):
         """PartitionSpec pytree matching this graph's tree structure:
         shard arrays split over ``mesh_axes`` on the leading (shard)
         axis, CSR arrays replicated — the in_spec of every shard_map
-        that runs the sharded lanes."""
+        that runs the sharded lanes.  The treedef carries THIS graph's
+        static aux data (including ``exchange_budget``), so a spec tree
+        built from one partition cannot serve a partition of the same
+        graph with a different budget — build the spec from the graph
+        you pass in."""
         rep = jax.sharding.PartitionSpec()
         sh = jax.sharding.PartitionSpec(tuple(mesh_axes))
         gspec = jax.tree.map(lambda _: rep, self)
@@ -225,9 +291,138 @@ def shard_vertex_range(pg, s: int):
     return s * pg.shard_rows, (s + 1) * pg.shard_rows
 
 
+def _resolve_exchange_budget(shard_rows: int, block_v: int,
+                             exchange_budget) -> int:
+    """Shared budget resolution of :func:`partition_graph` and its
+    abstract twin (they MUST agree, or the dry-run lowers a different
+    schedule than the real partition runs): ``None`` -> the default
+    policy, any explicit value clamped into [0, chunks_per_shard - 1].
+    The clamp is a coarse structural cap only — the batch-width-aware
+    break-even check (a near-maximal budget can still cost more than
+    dense once per-chunk index overhead is counted) lives in
+    :attr:`ExchangePlan.sparse_available` and its twin guard in the BFS
+    driver, because B is only known at run time."""
+    cps = shard_rows // math.gcd(int(block_v), 128)
+    if exchange_budget is None:
+        exchange_budget = default_exchange_budget(cps)
+    return max(0, min(int(exchange_budget), cps - 1))
+
+
+def default_exchange_budget(chunks_per_shard: int) -> int:
+    """Default sparse-exchange budget: ceil(chunks_per_shard / 4),
+    clamped to [0, chunks_per_shard - 1].
+
+    A quarter of the shard's schedule chunks covers the frontiers of
+    high-diameter instances (each sample's frontier window occupies
+    O(1) chunks on grid/road-like graphs) while guaranteeing the sparse
+    protocol, whenever it engages, moves at most ~1/4 of the dense
+    volume; the clamp makes a one-chunk shard dense-only (a "sparse"
+    exchange of its single chunk would cost MORE than the dense gather
+    — index + bitmap overhead with zero chunk savings).
+    """
+    return max(0, min(chunks_per_shard - 1, -(-chunks_per_shard // 4)))
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangePlan:
+    """Static accounting of the per-level frontier exchange.
+
+    Everything here is derivable from a :class:`PartitionedGraph`'s
+    statics plus the sample-batch width — :func:`exchange_plan` builds
+    it — and mirrors exactly what the BFS drivers move per level, so
+    the dryrun / ``partition_sweep`` / tests report bytes from one
+    shared source of truth instead of re-deriving formulas.
+
+    All byte figures are TOTALS across the mesh for one level (each
+    shard contributes its all-gather send volume once).  Both protocols
+    include ``bitmap_bytes``: the drivers always exchange the per-shard
+    occupancy bits (the schedule rides to every shard so receivers can
+    skip inactive edge blocks without re-deriving occupancy).
+    """
+
+    n_shards: int
+    chunks_per_shard: int
+    chunk_rows: int   # rows per schedule chunk (gcd(block_v, 128))
+    budget: int       # sparse chunk slots per shard; 0 = dense-only
+    batch: int        # B, the sample-batch width of the BFS state
+
+    @property
+    def bitmap_bytes(self) -> int:
+        """The always-exchanged occupancy bits (int32 per chunk)."""
+        return 4 * self.n_shards * self.chunks_per_shard
+
+    @property
+    def dense_bytes(self) -> int:
+        """One dense-protocol level: the full masked frontier slices."""
+        return (4 * self.n_shards * self.chunks_per_shard * self.chunk_rows
+                * self.batch) + self.bitmap_bytes
+
+    @property
+    def sparse_bytes(self) -> int:
+        """One sparse-protocol level: ``budget`` padded (chunk_rows, B)
+        value chunks + their int32 global chunk indices, per shard."""
+        return (self.n_shards * self.budget
+                * (4 * self.chunk_rows * self.batch + 4)) + self.bitmap_bytes
+
+    @property
+    def sparse_available(self) -> bool:
+        """Whether the sparse protocol is reachable at all AT THIS
+        BATCH WIDTH: a nonzero budget whose engaged volume actually
+        undercuts the dense gather.  The budget clamp at partition time
+        is B-independent (B is only resolved at run time), so the
+        break-even check lives here and in the driver — a budget so
+        large that ``budget * (chunk_rows * B + 1) >=
+        chunks_per_shard * chunk_rows * B`` degenerates to dense-only.
+        """
+        return (self.budget > 0
+                and self.budget * (self.chunk_rows * self.batch + 1)
+                < self.chunks_per_shard * self.chunk_rows * self.batch)
+
+    def sparse_taken(self, max_active_chunks: int) -> bool:
+        """Whether the drivers take the sparse branch for a level whose
+        worst shard has ``max_active_chunks`` active source chunks."""
+        return self.sparse_available and max_active_chunks <= self.budget
+
+    def level_bytes(self, max_active_chunks: int) -> int:
+        """Bytes the drivers move for one such level — the sparse
+        figure when the level takes the sparse branch, the dense
+        fallback otherwise.  Never exceeds ``dense_bytes``."""
+        if self.sparse_taken(max_active_chunks):
+            return self.sparse_bytes
+        return self.dense_bytes
+
+
+def exchange_plan(pg: PartitionedGraph, batch: int) -> ExchangePlan:
+    """The :class:`ExchangePlan` of ``pg`` at sample-batch width
+    ``batch`` (what one cooperative BFS level exchanges)."""
+    return ExchangePlan(
+        n_shards=pg.n_shards,
+        chunks_per_shard=pg.exchange_chunks_per_shard,
+        chunk_rows=pg.exchange_chunk_rows, budget=pg.exchange_budget,
+        batch=int(batch))
+
+
+def max_active_source_chunks(pg: PartitionedGraph, frontier_rows) -> int:
+    """Worst-shard count of active source chunks for one level — the
+    quantity the on-device schedule pmaxes against the budget.
+
+    ``frontier_rows`` is a host-side bool array over global rows (any
+    length up to ``v_pad``; typically ``(dist == level).any(axis=1)``
+    from a replicated BFS trace).  Pure numpy — this is the accounting
+    twin of the on-device bitmap, used by ``partition_sweep`` and the
+    exchange-volume tests to predict which protocol each level takes.
+    """
+    bits = np.zeros(pg.v_pad, bool)
+    bits[: len(frontier_rows)] = np.asarray(frontier_rows, bool)
+    per_chunk = bits.reshape(-1, pg.exchange_chunk_rows).any(axis=1)
+    per_shard = per_chunk.reshape(pg.n_shards, pg.exchange_chunks_per_shard)
+    return int(per_shard.sum(axis=1).max())
+
+
 def partition_graph(graph: Graph, n_shards: int, *,
                     block_v: int | None = None, block_e: int | None = None,
-                    batch: int = 16) -> PartitionedGraph:
+                    batch: int = 16,
+                    exchange_budget: int | None = None) -> PartitionedGraph:
     """Split ``graph`` into ``n_shards`` destination-owned vertex shards.
 
     Pure numpy, one stable sort per shard; call once per (graph,
@@ -239,6 +434,15 @@ def partition_graph(graph: Graph, n_shards: int, *,
     blocks, so per-shard buckets are the *same* buckets the global
     layout would build, just grouped by owner — the sharded expansion
     sums each destination's contributions in the identical order.
+
+    ``exchange_budget`` sets the sparse frontier-exchange chunk budget
+    (module docstring): ``None`` picks
+    :func:`default_exchange_budget`, ``0`` forces the dense protocol,
+    and any explicit value is clamped to
+    ``exchange_chunks_per_shard - 1``.  The clamp is structural only;
+    whether a given budget actually undercuts the dense gather depends
+    on the run-time batch width, and that break-even guard lives in
+    the BFS driver / :attr:`ExchangePlan.sparse_available`.
     """
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
@@ -289,18 +493,24 @@ def partition_graph(graph: Graph, n_shards: int, *,
     return PartitionedGraph(
         indptr=graph.indptr, indices=graph.indices, degree=graph.degree,
         shards=shards, n_nodes=graph.n_nodes, n_edges=graph.n_edges,
-        max_degree=graph.max_degree)
+        max_degree=graph.max_degree,
+        exchange_budget=_resolve_exchange_budget(
+            shard_rows, block_v, exchange_budget))
 
 
 def abstract_partitioned_graph(n_nodes: int, n_edges_directed: int,
                                n_shards: int, *, block_v: int,
                                block_e: int, max_degree: int = 100_000,
-                               pad_to: int = 128) -> PartitionedGraph:
+                               pad_to: int = 128,
+                               exchange_budget: int | None = None
+                               ) -> PartitionedGraph:
     """ShapeDtypeStruct twin of a balanced partition, for lowering the
     sharded epoch on a production mesh without materializing a graph
     (repro.launch.dryrun).  Per-shard edge slots assume balance: the
     real builder's padding adds at most one ``block_e`` block per local
-    bucket, which this sizing includes."""
+    bucket, which this sizing includes.  ``exchange_budget`` defaults
+    exactly as in :func:`partition_graph`, so the lowered epoch carries
+    the same sparse-exchange schedule a real partition would."""
     sds = jax.ShapeDtypeStruct
     v1 = n_nodes + 1
     n_nb = -(-v1 // block_v)
@@ -319,4 +529,6 @@ def abstract_partitioned_graph(n_nodes: int, n_edges_directed: int,
         indptr=sds((v1,), jnp.int32), indices=sds((e_pad,), jnp.int32),
         degree=sds((n_nodes,), jnp.int32), shards=shards,
         n_nodes=int(n_nodes), n_edges=int(n_edges_directed),
-        max_degree=int(max_degree))
+        max_degree=int(max_degree),
+        exchange_budget=_resolve_exchange_budget(
+            bps * block_v, block_v, exchange_budget))

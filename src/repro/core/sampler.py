@@ -203,8 +203,12 @@ def sample_path_batched_sharded(pg: PartitionedGraph, key, batch: int, *,
     mesh cooperatively advances one batch of samples; per-device keys
     would desynchronize the collective BFS).
 
-    The bidirectional BFS runs with sharded state end-to-end; only
-    after it completes is the per-sample state all-gathered ONCE for
+    The bidirectional BFS runs with sharded state end-to-end — its
+    per-level communication is the bitmap-scheduled frontier exchange
+    of ``repro.core.bfs`` (KADABRA's balanced bidirectional frontiers
+    are precisely the sparse regime it targets; the partition's
+    ``exchange_budget`` governs it, no knob here); only after it
+    completes is the per-sample state all-gathered ONCE for
     the meeting-vertex draw and the backward walks (O(V * B) per round
     vs O(V * B) per *level* if the BFS itself were replicated).  The
     key splits, the pair draw, the Gumbel draws and the walks are

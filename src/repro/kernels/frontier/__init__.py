@@ -1,16 +1,20 @@
-from .kernel import (frontier_block_bitmap, frontier_expand_batched_pallas,
+from .kernel import (edge_bitmap_from_source_bits, frontier_block_bitmap,
+                     frontier_expand_batched_pallas,
                      frontier_expand_node_blocked_pallas,
-                     frontier_expand_pallas)
+                     frontier_expand_pallas, frontier_row_mask,
+                     frontier_source_block_bitmap)
 from .ops import (choose_csc_blocks, frontier_expand, node_blocked_supported,
                   pallas_supported, select_route, sharded_supported)
 from .ref import (frontier_expand_batched_ref,
                   frontier_expand_node_blocked_ref, frontier_expand_ref,
                   frontier_expand_sharded_ref)
 
-__all__ = ["choose_csc_blocks", "frontier_block_bitmap", "frontier_expand",
+__all__ = ["choose_csc_blocks", "edge_bitmap_from_source_bits",
+           "frontier_block_bitmap", "frontier_expand",
            "frontier_expand_batched_pallas", "frontier_expand_batched_ref",
            "frontier_expand_node_blocked_pallas",
            "frontier_expand_node_blocked_ref", "frontier_expand_pallas",
            "frontier_expand_ref", "frontier_expand_sharded_ref",
+           "frontier_row_mask", "frontier_source_block_bitmap",
            "node_blocked_supported", "pallas_supported", "select_route",
            "sharded_supported"]

@@ -194,6 +194,25 @@ def frontier_expand_pallas(src, dst, dist, sigma, level, *,
 # Two-level node-blocked CSC kernel
 # ---------------------------------------------------------------------------
 
+def frontier_row_mask(dist, levels, active=None):
+    """(rows,) bool — row is on SOME sample's frontier this level.
+
+    The shared primitive of every occupancy bitmap: ``dist`` is
+    vertex-major (rows, B), ``levels`` (B,) per-sample frontier depths.
+    Rows at or past ``n_nodes`` (the sink, dist -3) never match.
+    ``active`` (optional (B,) bool) drops finished samples: a sample
+    that left its loop keeps a FROZEN ``levels`` entry, so its last
+    frontier would otherwise stay in the mask for every remaining
+    iteration — harmless for correctness (its contributions are
+    discarded) but inflating every occupancy bitmap built from the
+    mask.
+    """
+    hit = dist == levels[None, :]
+    if active is not None:
+        hit = hit & active[None, :]
+    return jnp.any(hit, axis=1)
+
+
 def frontier_block_bitmap(csc, dist, levels):
     """Per-edge-block "any active source" occupancy bitmap.
 
@@ -206,10 +225,48 @@ def frontier_block_bitmap(csc, dist, levels):
     is a reshape + max).  O(E) comparisons, no floats, no matmuls —
     cheap relative to the expansion it lets the kernel skip.
     """
-    frontier = jnp.any(dist == levels[None, :], axis=1)        # (rows,)
-    hit = frontier[csc.src]                                    # (e_slots,)
+    hit = frontier_row_mask(dist, levels)[csc.src]             # (e_slots,)
     return jnp.max(hit.reshape(csc.n_edge_blocks, csc.block_e)
                    .astype(jnp.int32), axis=1)
+
+
+def frontier_source_block_bitmap(dist, levels, block_rows: int,
+                                 active=None):
+    """Per-source-block occupancy: 1 iff the ``block_rows``-row block
+    holds at least one frontier row.
+
+    This is the *exchange schedule* of the sharded lane
+    (DESIGN.md §Frontier exchange): each device computes it over its own
+    (shard_rows, B) state slice at the partition's exchange-chunk
+    granularity (``PartitionedGraph.exchange_chunk_rows`` — a divisor
+    of the kernel's ``block_v``, so chunk boundaries nest inside node
+    blocks), the bits decide which chunks are worth exchanging at all,
+    and — all-gathered — they double as a conservative edge-block
+    bitmap via :func:`edge_bitmap_from_source_bits`.  ``dist`` rows
+    must be a multiple of ``block_rows`` (shard rows always are);
+    ``active`` as in :func:`frontier_row_mask`.
+    Returns (rows // block_rows,) int32.
+    """
+    mask = frontier_row_mask(dist, levels, active)
+    return jnp.max(mask.reshape(-1, block_rows).astype(jnp.int32), axis=1)
+
+
+def edge_bitmap_from_source_bits(csc, src_bits, chunk_rows: int):
+    """Derive the kernel's per-edge-block bitmap from per-source-chunk
+    occupancy bits (the all-gathered exchange schedule).
+
+    ``src_bits`` is (global_rows // chunk_rows,) int32 over the GLOBAL
+    ``chunk_rows``-row source tiling; an edge block is marked active
+    when any of its sources lies in an active chunk.  This is a
+    *superset* of :func:`frontier_block_bitmap`'s exact bitmap (a chunk
+    can be active through a row that no edge of this block reads) —
+    conservative bitmaps are always legal, the kernel output is
+    bit-identical.  The win over the exact pass: the sharded driver
+    already holds the gathered bits, so this costs one O(E) int gather
+    with no (rows, B) comparison behind it.
+    """
+    hit = src_bits[csc.src // chunk_rows]                      # (e_slots,)
+    return jnp.max(hit.reshape(csc.n_edge_blocks, csc.block_e), axis=1)
 
 
 def _nb_kernel(nb_ref, first_ref, act_ref, level_ref, src_any, dst_any,

@@ -48,14 +48,34 @@ of ``repro.core.graph.build_csc_layout``.
 
 A fourth lane serves the vertex-partitioned graph shards of
 ``repro.core.partition`` (DESIGN.md §Partitioning): passing ``shard=``
-(one shard's local layout view) routes to the SHARDED expansion — the
-caller runs inside shard_map, ``dist``/``sigma`` are the all-gathered
-per-level frontier state over the *global* padded rows, and the output
-is the shard's local (shard_rows, B) contribution tile stack.  Its fit
-predicate is :func:`sharded_supported` (the shard's local blocking
-only: the gathered state lives in ANY memory); on compiled TPU
-backends the lane reuses the node-blocked kernel in ``wide_state``
-mode, elsewhere the ``frontier_expand_sharded_ref`` segment sum.
+(one shard's local layout view, ``ShardedCSCLayout.local()``) routes to
+the SHARDED expansion.  The operand contract of that route, precisely:
+
+  * the caller runs INSIDE shard_map over the mesh axes carrying the
+    shard dimension;
+  * ``src``/``dst`` are ignored — the shard's bucket arrays drive the
+    expansion (``shard.src`` holds GLOBAL ids, ``shard.dst`` LOCAL
+    shard rows; padding slots are sink-source / ``shard_rows``-dst);
+  * ``dist``/``sigma`` cover the all-gathered per-level frontier state
+    over the *global* padded rows (>= ``shard.v_pad`` rows; typically
+    the (fdist, fvals) pair the BFS driver synthesizes from the
+    bitmap-scheduled exchange, DESIGN.md §Frontier exchange);
+  * the output is the shard's local (shard_rows, B) contribution tile
+    stack — output rows != input rows, which is why the flat kernel can
+    never serve this route.
+
+Its fit predicate is :func:`sharded_supported` (the shard's local
+blocking only: the gathered state lives in ANY memory, so the GLOBAL
+vertex count never enters the VMEM budget); on compiled TPU backends
+the lane reuses the node-blocked kernel in ``wide_state`` mode,
+elsewhere the ``frontier_expand_sharded_ref`` segment sum.
+
+``block_active=`` lets a caller hand any lane a precomputed occupancy
+bitmap instead of the O(E) exact pass the kernel would run itself —
+the sharded BFS drivers derive it from the exchange schedule's
+source-block bits (``edge_bitmap_from_source_bits``), which is
+conservative (a superset of the exact bitmap) and therefore
+bit-identical by the skipping contract in ``kernel.py``.
 """
 from __future__ import annotations
 
@@ -121,6 +141,11 @@ def sharded_supported(shard, batch: int = 1) -> bool:
     (block_v, block_e) blocking; the all-gathered frontier state lives
     in ANY memory and never counts against the VMEM cell budget, so a
     shard fits iff its blocking does — independent of the global V.
+    Because :func:`partition_graph` blocks shards with the same
+    :func:`choose_csc_blocks` heuristic the replicated layout uses,
+    a default-blocked shard always fits: this predicate only rejects
+    hand-picked oversize blockings (and then the automatic dispatch
+    falls back to the segment-sum reference rather than erroring).
     """
     b = max(batch, 1)
     return _nb_cells(shard.block_v, shard.block_e, b) <= _VMEM_CELL_BUDGET
@@ -234,7 +259,17 @@ def select_route(n_nodes: int, e_pad: int, batch: int, *, csc=None,
                                    "skip_inactive"))
 def frontier_expand(src, dst, dist, sigma, level, *, csc=None, shard=None,
                     use_pallas=None, interpret=None,
-                    block_e=DEFAULT_BLOCK_E, skip_inactive=True):
+                    block_e=DEFAULT_BLOCK_E, skip_inactive=True,
+                    block_active=None):
+    """Route one frontier expansion to the right lane (module docstring).
+
+    ``block_active`` (optional, (n_edge_blocks,) int32) is a
+    precomputed occupancy bitmap for the node-blocked/sharded kernels —
+    any conservative bitmap is legal; ``None`` lets the kernel compute
+    the exact one (or skip nothing under ``skip_inactive=False``).  The
+    XLA reference lanes reduce over every edge regardless, so the
+    bitmap is ignored there.
+    """
     if interpret is None:
         # default by backend: compile the Pallas kernels on real TPUs,
         # interpret (and hence auto-route to the XLA ref) elsewhere —
@@ -261,7 +296,8 @@ def frontier_expand(src, dst, dist, sigma, level, *, csc=None, shard=None,
         if route == "sharded_nb":
             out = frontier_expand_node_blocked_pallas(
                 shard, d2, s2, lv, interpret=interpret,
-                skip_inactive=skip_inactive, wide_state=True)
+                skip_inactive=skip_inactive, block_active=block_active,
+                wide_state=True)
         else:
             out = frontier_expand_sharded_ref(shard, d2, s2, lv)
         return out if batched else out[:, 0]
@@ -272,7 +308,7 @@ def frontier_expand(src, dst, dist, sigma, level, *, csc=None, shard=None,
               else jnp.asarray(level, jnp.int32).reshape(1))
         out = frontier_expand_node_blocked_pallas(
             csc, d2, s2, lv, interpret=interpret,
-            skip_inactive=skip_inactive)
+            skip_inactive=skip_inactive, block_active=block_active)
         return out if batched else out[:, 0]
     if route == "flat":
         if batched:

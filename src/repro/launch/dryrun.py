@@ -405,13 +405,19 @@ def run_betweenness(mesh_name: str, aggregation: str,
 
     ``partitioned=True`` lowers the vertex-sharded cooperative epoch
     instead (repro.core.partition; DESIGN.md §Partitioning): the graph's
-    frontier structure is split over the mesh and each BFS level
-    all-gathers only the masked frontier slice.  Because the frontier
-    all-gather sits INSIDE the level while-loop (counted once), the
-    recorded all-gather bytes of the loop body ARE the per-level
-    exchange volume — reported in the record's ``exchange`` block,
-    together with the per-device shard bytes vs the replicated-layout
-    equivalent (the O(E) -> O(E / n_dev) claim, measured)."""
+    frontier structure is split over the mesh and each BFS level runs
+    the bitmap-scheduled frontier exchange (DESIGN.md §Frontier
+    exchange).  Because the exchange sits INSIDE the level while-loop
+    (counted once), the recorded all-gather bytes of the loop body ARE
+    per-level exchange volume — with the caveat that the HLO text
+    contains BOTH protocol branches of the per-level ``lax.cond``
+    (sparse + dense fallback), so the parsed total over-counts one
+    level by the branch not taken; the record's ``exchange`` block
+    therefore also carries the analytic per-protocol figures from
+    :func:`repro.core.partition.exchange_plan` (dense, sparse-budget,
+    and the static block budget itself), together with the per-device
+    shard bytes vs the replicated-layout equivalent (the
+    O(E) -> O(E / n_dev) claim, measured)."""
     import jax.numpy as jnp
     from repro.core.adaptive import make_epoch_step_spmd, _pad_len
     from repro.core.kadabra import KadabraParams
@@ -448,21 +454,36 @@ def run_betweenness(mesh_name: str, aggregation: str,
     exchange = None
     if partitioned:
         from repro.core.adaptive import make_epoch_step_sharded
-        from repro.core.partition import abstract_partitioned_graph
+        from repro.core.partition import (abstract_partitioned_graph,
+                                          exchange_plan)
         from repro.kernels.frontier.ops import choose_csc_blocks
         block_v, block_e = choose_csc_blocks(v, batch_size)
         pg = abstract_partitioned_graph(v, e_dir, n_dev, block_v=block_v,
                                         block_e=block_e)
         shard_bytes = 4 * (2 * pg.shards.e_slots_per_shard
                            + 2 * pg.shards.n_edge_blocks)
+        plan = exchange_plan(pg, batch_size)
         exchange = {
             "per_device_shard_bytes": int(shard_bytes),
             "replicated_csc_bytes_estimate": int(4 * (2 * e_dir
                                                       + 2 * e_dir // block_e)),
             "frontier_slice_bytes_per_level_dense":
                 int(pg.v_pad * batch_size * 4),
+            # the bitmap-scheduled protocol (DESIGN.md §Frontier
+            # exchange): analytic per-level volumes of the two branches
+            # the compiled cond carries, from the shared ExchangePlan
+            "exchange_budget_blocks": int(plan.budget),
+            "chunks_per_shard": int(plan.chunks_per_shard),
+            "level_bytes_dense_protocol": int(plan.dense_bytes),
+            "level_bytes_sparse_protocol": int(plan.sparse_bytes),
+            "bitmap_bytes_per_level": int(plan.bitmap_bytes),
             "note": "loop-body all-gather bytes below = one BFS level's "
-                    "frontier exchange (while bodies counted once)",
+                    "frontier exchange (while bodies counted once); the "
+                    "HLO text holds BOTH cond branches (sparse + dense "
+                    "fallback), so at runtime a level moves "
+                    "level_bytes_sparse_protocol when its occupancy fits "
+                    "exchange_budget_blocks on every shard, "
+                    "level_bytes_dense_protocol otherwise",
         }
         step = make_epoch_step_sharded(mesh, v, v_pad, n0,
                                        batch_size=batch_size)

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Docs-integrity check: fail on dangling intra-repo references in the
+top-level docs (README.md, DESIGN.md, ROADMAP.md).
+
+Two classes of reference are machine-checked:
+
+* markdown links ``[text](target)`` with a relative target — the target
+  must exist (anchors and external URLs are skipped);
+* path-looking tokens with a known extension (``core/bfs.py``,
+  ``BENCH_sampling.json``, ``EXPERIMENTS.md``, ...) anywhere in the
+  text, including inside backticks — resolved against the repo root,
+  ``src/`` and ``src/repro/`` (module docstrings cite paths relative to
+  the package); a ``*`` glob passes when it matches anything.
+
+This is the regression guard for the PR 4 EXPERIMENTS.md episode: the
+file was folded into DESIGN.md §Perf and every dangling mention had to
+be chased by hand.  Run from anywhere:
+
+    python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["README.md", "DESIGN.md", "ROADMAP.md"]
+ROOTS = ["", "src", os.path.join("src", "repro")]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# path-ish token: word chars / dots / dashes / slashes / '*', ending in a
+# checked extension (word boundary so 'x.py' inside 'prefix.py' is fine)
+_PATH_RE = re.compile(r"[\w./*-]+\.(?:py|md|json|yml|yaml|toml)\b")
+
+
+def _exists(ref: str) -> bool:
+    ref = ref.strip().rstrip(".,;:")
+    for root in ROOTS:
+        path = os.path.join(REPO, root, ref)
+        if "*" in ref:
+            if glob.glob(path):
+                return True
+        elif os.path.exists(path):
+            return True
+    return False
+
+
+def check(doc_path: str) -> list:
+    with open(doc_path) as f:
+        text = f.read()
+    missing = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        refs = set()
+        for m in _LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "#", "mailto:")):
+                continue
+            refs.add(target.split("#")[0])
+        refs.update(m.group(0) for m in _PATH_RE.finditer(line))
+        for ref in sorted(refs):
+            if ref and not _exists(ref):
+                missing.append((lineno, ref))
+    return missing
+
+
+def main() -> int:
+    bad = 0
+    for doc in DOCS:
+        path = os.path.join(REPO, doc)
+        if not os.path.exists(path):
+            print(f"MISSING DOC {doc}")
+            bad += 1
+            continue
+        for lineno, ref in check(path):
+            print(f"{doc}:{lineno}: dangling reference '{ref}'")
+            bad += 1
+    if bad:
+        print(f"docs integrity: {bad} dangling reference(s)")
+        return 1
+    print(f"docs integrity: OK ({', '.join(DOCS)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
