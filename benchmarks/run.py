@@ -277,7 +277,7 @@ def bench_batch_sweep(full: bool):
 # Node-blocked sweep: frontier-kernel throughput vs graph size V
 # ---------------------------------------------------------------------------
 
-def bench_node_blocked_sweep(full: bool):
+def bench_node_blocked_sweep(full: bool, interpret: bool = True):
     """Per-level sampling throughput of the three frontier lanes (flat
     Pallas, node-blocked CSC Pallas, XLA ref) at V in {2^12, 2^15, 2^17}.
 
@@ -287,14 +287,21 @@ def bench_node_blocked_sweep(full: bool):
     samples/s; the ratio BETWEEN lanes is depth-independent).  At
     V = 2^17 the flat kernel's (V+1) * B state is rejected by
     ``pallas_supported`` — only the node-blocked lane (and the XLA ref)
-    can run, which is the regime the two-level kernel exists for.  On
-    this container both Pallas lanes execute in interpret mode, so the
-    absolute rates understate a real TPU massively; the node-blocked /
-    flat ratio is still meaningful (the two-level kernel does
-    (V+1)/block_v fewer one-hot MACs per edge).  Results append to
-    BENCH_sampling.json so the perf trajectory stays machine-readable.
+    can run, which is the regime the two-level kernel exists for.  The
+    instances are 2D grids (the paper's road-network stand-in): the
+    staged gather's pair-bucketed layout is sized for source locality,
+    and a scattered Erdos-Renyi instance at 2^17 would pay ~100x slot
+    padding (DESIGN.md §Perf "Staged gather").  ``interpret`` selects
+    the Pallas execution mode (``--interpret``/``--compiled``;
+    compiled requires real TPU hardware) and is recorded per row as
+    ``pallas_mode``, so interpret-mode rates are never silently
+    compared against hardware runs; interpret-mode absolute rates
+    understate a real TPU massively, but the node-blocked / flat ratio
+    is still meaningful (the two-level kernel does (V+1)/block_v fewer
+    one-hot MACs per edge).  Results append to BENCH_sampling.json so
+    the perf trajectory stays machine-readable.
     """
-    from repro.core import build_csc_layout, erdos_renyi_graph
+    from repro.core import build_csc_layout, grid_graph
     from repro.core.bfs import bfs_sssp_batched
     from repro.kernels.frontier import (frontier_expand_batched_pallas,
                                         frontier_expand_batched_ref,
@@ -302,12 +309,14 @@ def bench_node_blocked_sweep(full: bool):
                                         pallas_supported)
     B = 8
     reps = 3 if full else 1
+    mode = "interpret" if interpret else "compiled"
     print("\n== node-blocked sweep: frontier lanes vs graph size ==")
-    print(f"  B={B} concurrent samples; samples/s = per-level throughput")
+    print(f"  B={B} concurrent samples; samples/s = per-level throughput; "
+          f"pallas_mode={mode}")
     rows = []
     for scale in [12, 15, 17]:
         v = 1 << scale
-        g = erdos_renyi_graph(v, 4.0, seed=scale)
+        g = grid_graph(1 << ((scale + 1) // 2), 1 << (scale // 2))
         csc = build_csc_layout(g)
         rng = np.random.default_rng(scale)
         sources = jnp.asarray(rng.integers(0, v, B), jnp.int32)
@@ -321,17 +330,17 @@ def bench_node_blocked_sweep(full: bool):
                 g.src, g.dst, d, s, levels)),
             "node_blocked": jax.jit(
                 lambda d, s: frontier_expand_node_blocked_pallas(
-                    csc, d, s, levels)),
+                    csc, d, s, levels, interpret=interpret)),
         }
         if flat_ok:
             lanes["flat"] = jax.jit(
                 lambda d, s: frontier_expand_batched_pallas(
-                    g.src, g.dst, d, s, levels))
+                    g.src, g.dst, d, s, levels, interpret=interpret))
         row = {"scale": scale, "n_nodes": v,
                "n_edges_directed": int(g.n_edges),
                "flat_supported": bool(flat_ok),
                "block_v": csc.block_v, "block_e": csc.block_e,
-               "batch": B, "lanes": {}}
+               "batch": B, "pallas_mode": mode, "lanes": {}}
         for name, fn in lanes.items():
             us = _time_call(fn, dist, sigma, reps=reps)
             rate = B / (us / 1e6)
@@ -350,9 +359,10 @@ def bench_node_blocked_sweep(full: bool):
         rows.append(row)
     _append_bench_record({
         "section": "node_blocked_sweep",
-        "instance": {"family": "erdos_renyi", "avg_degree": 4.0},
+        "instance": {"family": "grid"},
         "metric": "samples_per_s = B / t(one frontier expansion); "
-                  "per-BFS-level throughput, interpret-mode Pallas",
+                  "per-BFS-level throughput",
+        "pallas_mode": mode,
         "full": full,
         "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
         "device": jax.devices()[0].platform,
@@ -532,10 +542,11 @@ for family, scale in instances:
     pg = partition_graph(g, n_dev, batch=B)
     # --- per-device graph bytes: the frontier-lane edge structure ------
     rep_bytes = sum(int(np.asarray(a).nbytes) for a in
-                    (csc.src, csc.dst, csc.block_nb, csc.block_first))
+                    (csc.src, csc.dst, csc.block_nb, csc.block_sb,
+                     csc.block_first))
     tot_shard = sum(int(np.asarray(a).nbytes) for a in
                     (pg.shards.src, pg.shards.dst, pg.shards.block_nb,
-                     pg.shards.block_first))
+                     pg.shards.block_sb, pg.shards.block_first))
     per_dev = tot_shard // n_dev
     # acceptance: per-device shard bytes <= (1/n_dev + eps) * replicated
     # (eps covers the per-bucket block padding of small shards)
@@ -590,6 +601,7 @@ for family, scale in instances:
     row = {
         "family": family, "scale": scale, "n_nodes": int(g.n_nodes),
         "n_edges_directed": int(g.n_edges),
+        "pallas_mode": args.get("pallas_mode", "interpret"),
         "n_dev": n_dev, "batch": B, "n_samples": n,
         "blocking": {"block_v": pg.shards.block_v,
                      "block_e": pg.shards.block_e,
@@ -617,7 +629,7 @@ print("PARTITION SWEEP OK")
 def run_partition_sweep(scales, n_dev: int = 8, batch: int = 8,
                         n_samples: int = 16, reps: int = 1,
                         write_json: bool = True, full: bool = False,
-                        grid_scales=()):
+                        grid_scales=(), interpret: bool = True):
     """Replicated vs vertex-sharded frontier lane (subprocess: the fake
     device count must be set before JAX initializes).
 
@@ -637,15 +649,19 @@ def run_partition_sweep(scales, n_dev: int = 8, batch: int = 8,
     cooperative lane (n samples, the whole mesh on one batch).  On
     this container fake devices serialize, so the sharded lane's
     absolute rate understates real hardware, but the memory + exchange
-    columns are exact.  Returns the rows; ``write_json`` appends to
-    BENCH_sampling.json."""
+    columns are exact.  ``interpret`` names the Pallas execution mode
+    the sweep's expansions run under (``--interpret``/``--compiled``)
+    and is recorded per row as ``pallas_mode``, so interpret-mode rates
+    are never silently compared against hardware runs.  Returns the
+    rows; ``write_json`` appends to BENCH_sampling.json."""
     import json
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PARTITION_SWEEP_ARGS"] = json.dumps({
         "scales": list(scales), "grid_scales": list(grid_scales),
         "n_dev": n_dev, "batch": batch,
-        "n_samples": n_samples, "reps": reps})
+        "n_samples": n_samples, "reps": reps,
+        "pallas_mode": "interpret" if interpret else "compiled"})
     out = subprocess.run([sys.executable, "-c", _PARTITION_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=3600)
     if out.returncode or "PARTITION SWEEP OK" not in out.stdout:
@@ -674,6 +690,7 @@ def run_partition_sweep(scales, n_dev: int = 8, batch: int = 8,
         "section": "partition_sweep",
         "instance": {"families": ["erdos_renyi", "grid"],
                      "avg_degree_er": 4.0},
+        "pallas_mode": "interpret" if interpret else "compiled",
         "metric": "per-device frontier-lane bytes (sharded vs replicated "
                   "CSCLayout); per-level bitmap-scheduled exchange: "
                   "exchange_bytes = protocol actually taken (sparse when "
@@ -704,11 +721,16 @@ def run_partition_sweep(scales, n_dev: int = 8, batch: int = 8,
     return record
 
 
-def bench_partition_sweep(full: bool):
+def bench_partition_sweep(full: bool, interpret: bool = True):
     print("\n== partition sweep: replicated vs vertex-sharded lane ==")
-    run_partition_sweep([15, 17], grid_scales=[15], n_dev=8, batch=8,
+    # the scattered Erdos-Renyi instance stays at 2^15: at 2^17 the
+    # pair-bucketed staged-gather layout pays ~100x slot padding on a
+    # scattered graph (DESIGN.md §Perf "Staged gather"); the 2^17 point
+    # runs on the high-diameter grid, the regime the layout targets
+    run_partition_sweep([15], grid_scales=[15, 17], n_dev=8, batch=8,
                         n_samples=32 if full else 16,
-                        reps=3 if full else 1, full=full)
+                        reps=3 if full else 1, full=full,
+                        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -754,6 +776,15 @@ def main():
     ap.add_argument("section", nargs="?", default=None, choices=sections,
                     help="run a single section (same as --only)")
     ap.add_argument("--only", default=None, choices=sections)
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--interpret", dest="interpret", action="store_true",
+                      default=True,
+                      help="run Pallas kernels in interpret mode (default; "
+                           "the only mode this CPU container can execute)")
+    mode.add_argument("--compiled", dest="interpret", action="store_false",
+                      help="compile the Pallas kernels (Mosaic; requires "
+                           "real TPU hardware) — recorded per "
+                           "BENCH_sampling.json row as pallas_mode")
     args = ap.parse_args()
     if args.only and args.section and args.only != args.section:
         ap.error(f"conflicting sections: positional '{args.section}' "
@@ -768,10 +799,14 @@ def main():
         "partition_sweep": bench_partition_sweep,
         "kernels": bench_kernels,
     }
+    takes_mode = {"node_blocked_sweep", "partition_sweep"}
     for name, fn in jobs.items():
         if args.only and name != args.only:
             continue
-        fn(args.full)
+        if name in takes_mode:
+            fn(args.full, interpret=args.interpret)
+        else:
+            fn(args.full)
     print("\n== CSV summary ==")
     print("name,us_per_call,derived")
     for row in CSV_ROWS:

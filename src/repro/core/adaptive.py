@@ -607,15 +607,43 @@ def _run_spmd_sharded(pg: PartitionedGraph, cfg: AdaptiveConfig, key,
     v1 = pg.n_nodes + 1
 
     # ---- phase 1: sharded double-sweep diameter -------------------------
-    @partial(shard_map, mesh=mesh, in_specs=(gspec,), out_specs=rep,
+    # With exchange_budget="auto" the sweeps double as the budget's
+    # occupancy sample: the second sweep's dist comes back (sharded over
+    # rows, gathered by jit) and its per-level worst-shard chunk counts
+    # feed auto_exchange_budget BEFORE any later phase compiles — the
+    # calibration and epoch lanes then close over the derived budget as
+    # an ordinary static.
+    want_dist = pg.exchange_budget_auto
+
+    @partial(shard_map, mesh=mesh, in_specs=(gspec,),
+             out_specs=(rep, P(all_axes)) if want_dist else rep,
              check_vma=False)
     def diam_step(g):
         est = estimate_diameter_sharded(g, n_sweeps=cfg.diameter_sweeps,
-                                        axis=all_axes)
+                                        axis=all_axes,
+                                        return_dist=want_dist)
+        if want_dist:
+            est, d = est
+            return est.vertex_diameter, d
         return est.vertex_diameter
 
     t0 = time.perf_counter()
-    vd = int(jax.jit(diam_step)(pg))
+    if want_dist:
+        from .partition import auto_exchange_budget, max_active_source_chunks
+        vd_dev, dist_dev = jax.jit(diam_step)(pg)
+        vd = int(vd_dev)
+        dist_np = np.asarray(dist_dev)             # (v_pad, n_sweep_seeds)
+        occupancies = []
+        for lvl in range(int(dist_np.max(initial=-1)) + 1):
+            rows = (dist_np == lvl).any(axis=1)
+            if rows.any():
+                occupancies.append(max_active_source_chunks(pg, rows))
+        pg = dataclasses.replace(
+            pg, exchange_budget=auto_exchange_budget(pg, occupancies),
+            exchange_budget_auto=False)
+        gspec = pg.partition_spec(all_axes)        # statics changed
+    else:
+        vd = int(jax.jit(diam_step)(pg))
     t_diam = time.perf_counter() - t0
     bsz = resolve_sample_batch_size(cfg.sample_batch_size, pg.n_nodes, vd)
 

@@ -96,12 +96,12 @@ def _sweep_batched_sharded(pg: PartitionedGraph, seeds, axis):
     fars = jax.lax.all_gather(offset + loc_far, axis, axis=0)   # (S, K)
     best = jnp.argmax(vals, axis=0)
     far = fars[best, jnp.arange(seeds.shape[0])].astype(jnp.int32)
-    return res.levels, far
+    return res.levels, far, res.dist
 
 
 def estimate_diameter_sharded(pg: PartitionedGraph, key=None,
                               n_sweeps: int = 2, *,
-                              axis=None) -> DiameterEstimate:
+                              axis=None, return_dist: bool = False):
     """Sharded twin of :func:`estimate_diameter` — call inside
     shard_map with the shard axis name(s).  Phase 1 was the paper's
     Fig. 2b scalability bottleneck; on a partitioned graph it runs the
@@ -111,7 +111,14 @@ def estimate_diameter_sharded(pg: PartitionedGraph, key=None,
     driver (double sweeps are exactly the high-diameter, sparse-
     frontier regime the sparse protocol is built for; see DESIGN.md
     §Frontier exchange).  The seed draw matches the replicated
-    estimator key-for-key (bit-identical bounds on the same graph)."""
+    estimator key-for-key (bit-identical bounds on the same graph).
+
+    ``return_dist=True`` additionally returns the SECOND sweep's local
+    dist block, shape ``(shard_rows, n_seeds)`` int32 (unreached / pad
+    rows hold -1).  Those sweeps start from eccentric vertices — long
+    BFS traces whose per-level frontiers are exactly what the
+    ``exchange_budget="auto"`` rule samples occupancy from
+    (:func:`repro.core.partition.auto_exchange_budget`)."""
     if axis is None:
         raise ValueError("estimate_diameter_sharded requires the shard "
                          "axis name(s) (axis=...)")
@@ -120,11 +127,12 @@ def estimate_diameter_sharded(pg: PartitionedGraph, key=None,
         key = jax.random.PRNGKey(0)
     seeds = jax.random.randint(key, (max(1, n_sweeps - 1),), 0, pg.n_nodes)
 
-    ecc0, far0 = _sweep_batched_sharded(pg, seeds, axis)
-    ecc1, _far1 = _sweep_batched_sharded(pg, far0, axis)
+    ecc0, far0, _ = _sweep_batched_sharded(pg, seeds, axis)
+    ecc1, _far1, dist1 = _sweep_batched_sharded(pg, far0, axis)
     lowers = ecc1
     uppers = 2 * jnp.minimum(ecc0, ecc1)
     uppers = jnp.maximum(uppers, lowers)
     lower = jnp.max(lowers)
     upper = jnp.maximum(jnp.min(uppers), lower)
-    return DiameterEstimate(lower, upper, upper + 1)
+    est = DiameterEstimate(lower, upper, upper + 1)
+    return (est, dist1) if return_dist else est

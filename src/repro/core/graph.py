@@ -23,8 +23,9 @@ Three edge layouts are kept side by side:
 * node-blocked CSC (:class:`CSCLayout`, built by
   :func:`build_csc_layout` and *persisted on the graph* by
   :func:`with_csc_layout`) — edges bucketed by *destination-node block*
-  of ``block_v`` vertices, each bucket padded to a multiple of
-  ``block_e``.  This is the layout of the two-level frontier kernel: the
+  of ``block_v`` vertices and, within each bucket, sorted and ranged by
+  *source block*, each (dst block, src block) pair padded to a multiple
+  of ``block_e``.  This is the layout of the two-level frontier kernel: the
   grid walks (node block, edge block) cells, only a (block_v, B) contrib
   tile is VMEM-resident per step, so the kernel scales past the
   all-state-resident V * B cap of the flat layout.  A graph carrying a
@@ -173,43 +174,72 @@ def build_graph(src: np.ndarray, dst: np.ndarray, n_nodes: int, *,
 
 def bucket_layout(src: np.ndarray, dst: np.ndarray, nb: np.ndarray,
                   n_buckets: int, block_e: int, *, sink_src: int,
-                  sink_dst: int):
-    """Bucket an edge list by the per-edge bucket id ``nb``, block-padded.
+                  sink_dst: int, src_block: np.ndarray,
+                  sink_src_block: int):
+    """Bucket an edge list by ``(nb, src_block)`` pairs, block-padded.
 
-    The shared numpy core of :func:`build_csc_layout` (one bucket per
-    destination-node block of the whole graph) and of the per-shard
-    builder in :mod:`repro.core.partition` (one bucket per *local* node
-    block of one vertex shard).  Edges keep their stable CSR order
-    within a bucket; every bucket's range is padded with
-    ``(sink_src, sink_dst)`` edges to a multiple of ``block_e`` (at
-    least one block, so every contrib tile is initialized even for
-    empty buckets).  Returns ``(out_src, out_dst, block_nb,
-    block_first)`` — the flattened (bucket, edge block) arrays of the
-    two-level grid.
+    The shared numpy core of :func:`build_csc_layout` (one destination
+    bucket per node block of the whole graph) and of the per-shard
+    builder in :mod:`repro.core.partition` (one destination bucket per
+    *local* node block of one vertex shard).  Within each destination
+    bucket ``nb`` the edges are further sorted by source block
+    ``src_block``, and every *(dst bucket, src block)* pair gets its own
+    block-aligned edge range: edge blocks are source-block-pure, so the
+    staged kernel can DMA exactly one (block_v, B) dist/sigma source
+    tile per edge block.  Edges keep their stable CSR order within a
+    pair; every pair's range is padded with ``(sink_src, sink_dst)``
+    edges to a multiple of ``block_e``.  Destination buckets with no
+    edges still get one all-pad block (pair ``(bucket,
+    sink_src_block)``) so every contrib tile is initialized.  Returns
+    ``(out_src, out_dst, block_nb, block_sb, block_first)`` — the
+    flattened (bucket, source block, edge block) arrays of the
+    two-level grid; ``block_first`` flags the first edge block of each
+    *destination* bucket (contrib-tile zeroing is per bucket, not per
+    pair).
     """
-    counts = np.bincount(nb, minlength=n_buckets).astype(np.int64)
-    # per-bucket slot count: padded to block_e, at least one block each
+    nb = np.asarray(nb, dtype=np.int64)
+    sb = np.asarray(src_block, dtype=np.int64)
+    mult = int(max(int(sink_src_block), int(sb.max()) if sb.size else 0)) + 1
+    pair = nb * mult + sb
+    order = np.argsort(pair, kind="stable")
+    pair_sorted = pair[order]
+    upairs, counts = np.unique(pair_sorted, return_counts=True)
+    # destination buckets with no edges still need one pad block so the
+    # kernel initializes their contrib tile: synthesize a zero-count
+    # (bucket, sink_src_block) pair for each.
+    present = (upairs // mult) if upairs.size else np.array([], np.int64)
+    missing = np.setdiff1d(np.arange(n_buckets, dtype=np.int64), present)
+    if missing.size:
+        upairs = np.concatenate([upairs, missing * mult + sink_src_block])
+        counts = np.concatenate([counts,
+                                 np.zeros(missing.size, counts.dtype)])
+        reorder = np.argsort(upairs, kind="stable")
+        upairs, counts = upairs[reorder], counts[reorder]
+    counts = counts.astype(np.int64)
+    # per-pair slot count: padded to block_e, at least one block each
     slots = np.maximum(block_e, -(-counts // block_e) * block_e)
-    slot_starts = np.zeros(n_buckets + 1, np.int64)
+    slot_starts = np.zeros(upairs.size + 1, np.int64)
     np.cumsum(slots, out=slot_starts[1:])
     total = int(slot_starts[-1])
     out_src = np.full(total, sink_src, np.int32)
     out_dst = np.full(total, sink_dst, np.int32)
-    order = np.argsort(nb, kind="stable")
-    edge_starts = np.zeros(n_buckets + 1, np.int64)
-    np.cumsum(counts, out=edge_starts[1:])
-    nb_sorted = nb[order]
-    pos = (slot_starts[nb_sorted]
+    first_edge = np.zeros(upairs.size + 1, np.int64)
+    np.cumsum(counts, out=first_edge[1:])
+    p = np.searchsorted(upairs, pair_sorted)
+    pos = (slot_starts[p]
            + np.arange(order.shape[0], dtype=np.int64)
-           - edge_starts[nb_sorted])
+           - first_edge[p])
     out_src[pos] = src[order]
     out_dst[pos] = dst[order]
-    eblocks = slots // block_e
-    block_nb = np.repeat(np.arange(n_buckets, dtype=np.int32),
-                         eblocks.astype(np.int64))
+    eblocks = (slots // block_e).astype(np.int64)
+    block_nb = np.repeat((upairs // mult).astype(np.int32), eblocks)
+    block_sb = np.repeat((upairs % mult).astype(np.int32), eblocks)
+    is_new_bucket = np.ones(upairs.size, dtype=bool)
+    if upairs.size > 1:
+        is_new_bucket[1:] = (upairs[1:] // mult) != (upairs[:-1] // mult)
     block_first = np.zeros(block_nb.shape[0], np.int32)
-    block_first[slot_starts[:-1] // block_e] = 1
-    return out_src, out_dst, block_nb, block_first
+    block_first[slot_starts[:-1][is_new_bucket] // block_e] = 1
+    return out_src, out_dst, block_nb, block_sb, block_first
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -229,13 +259,26 @@ class CSCLayout:
     length, so flattening avoids the rectangular-grid padding blowup a
     power-law degree distribution would cause (the hub bucket would
     otherwise size every bucket).
+
+    Within each destination bucket the edges are additionally sorted
+    and ranged by *source block* (``block_sb[k]``): every edge block is
+    source-block-pure, so the staged compiled kernel DMAs exactly one
+    (block_v, B) dist/sigma source tile per edge block instead of
+    gathering from ``pltpu.ANY`` refs directly.  ``n_src_blocks`` is the
+    number of source blocks the gathered state rows are tiled into —
+    equal to ``n_node_blocks`` for a replicated layout, ``n_shards *
+    blocks_per_shard`` for the per-shard view of a sharded one (sources
+    are *global* there).
     """
 
     src: jax.Array        # (n_edge_blocks * block_e,) int32
     dst: jax.Array        # (n_edge_blocks * block_e,) int32 — sorted by
-                          #   dst // block_v (stable, so CSR order within)
+                          #   (dst // block_v, src // block_v), stable
+                          #   (CSR order within each pair range)
     block_nb: jax.Array   # (n_edge_blocks,) int32 — dest node block per
                           #   edge block (scalar-prefetched by the kernel)
+    block_sb: jax.Array   # (n_edge_blocks,) int32 — source block per edge
+                          #   block (the dist/sigma tile the kernel DMAs)
     block_first: jax.Array  # (n_edge_blocks,) int32 — 1 on each bucket's
                           #   first edge block
     block_v: int          # static: vertices per node block
@@ -243,11 +286,13 @@ class CSCLayout:
     n_node_blocks: int    # static
     n_edge_blocks: int    # static
     n_nodes: int          # static: logical vertex count (sink row = this)
+    n_src_blocks: int     # static: source-tile count of the gathered rows
 
     def tree_flatten(self):
-        leaves = (self.src, self.dst, self.block_nb, self.block_first)
+        leaves = (self.src, self.dst, self.block_nb, self.block_sb,
+                  self.block_first)
         aux = (self.block_v, self.block_e, self.n_node_blocks,
-               self.n_edge_blocks, self.n_nodes)
+               self.n_edge_blocks, self.n_nodes, self.n_src_blocks)
         return leaves, aux
 
     @classmethod
@@ -291,19 +336,23 @@ def build_csc_layout(graph: Graph, *, block_v: int | None = None,
     src = np.asarray(graph.src[: graph.n_edges], dtype=np.int64)
     dst = np.asarray(graph.dst[: graph.n_edges], dtype=np.int64)
     nb = dst // block_v
-    out_src, out_dst, block_nb, block_first = bucket_layout(
+    out_src, out_dst, block_nb, block_sb, block_first = bucket_layout(
         src, dst, nb, n_nb, block_e,
-        sink_src=graph.n_nodes, sink_dst=graph.n_nodes)
+        sink_src=graph.n_nodes, sink_dst=graph.n_nodes,
+        src_block=src // block_v,
+        sink_src_block=graph.n_nodes // block_v)
     return CSCLayout(
         src=jnp.asarray(out_src),
         dst=jnp.asarray(out_dst),
         block_nb=jnp.asarray(block_nb),
+        block_sb=jnp.asarray(block_sb),
         block_first=jnp.asarray(block_first),
         block_v=int(block_v),
         block_e=int(block_e),
         n_node_blocks=int(n_nb),
         n_edge_blocks=int(block_nb.shape[0]),
         n_nodes=int(graph.n_nodes),
+        n_src_blocks=int(n_nb),
     )
 
 

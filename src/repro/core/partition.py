@@ -108,6 +108,7 @@ __all__ = [
     "shard_vertex_range",
     "abstract_partitioned_graph",
     "default_exchange_budget",
+    "auto_exchange_budget",
     "exchange_plan",
     "max_active_source_chunks",
 ]
@@ -137,6 +138,7 @@ class ShardedCSCLayout:
     src: jax.Array          # (S, n_edge_blocks * block_e) int32 GLOBAL ids
     dst: jax.Array          # (S, n_edge_blocks * block_e) int32 LOCAL rows
     block_nb: jax.Array     # (S, n_edge_blocks) int32 — local node block
+    block_sb: jax.Array     # (S, n_edge_blocks) int32 — GLOBAL source block
     block_first: jax.Array  # (S, n_edge_blocks) int32
     block_v: int            # static: vertices per node block
     block_e: int            # static: edges per edge block
@@ -146,7 +148,8 @@ class ShardedCSCLayout:
     n_nodes: int            # static: logical GLOBAL vertex count
 
     def tree_flatten(self):
-        leaves = (self.src, self.dst, self.block_nb, self.block_first)
+        leaves = (self.src, self.dst, self.block_nb, self.block_sb,
+                  self.block_first)
         aux = (self.block_v, self.block_e, self.blocks_per_shard,
                self.n_edge_blocks, self.n_shards, self.n_nodes)
         return leaves, aux
@@ -176,13 +179,18 @@ class ShardedCSCLayout:
         (``v_pad == shard_rows``); ``src`` stays global, ``dst`` local —
         exactly the operand contract of the dispatcher's sharded route.
         ``n_nodes`` is kept global (the sink id padding slots point at).
+        ``n_src_blocks`` tiles the GLOBAL gathered row space (sources
+        stay global in the sharded lane), so the view's staged kernel
+        DMAs source tiles out of the all-gathered state.
         """
         return CSCLayout(
             src=self.src[s], dst=self.dst[s],
-            block_nb=self.block_nb[s], block_first=self.block_first[s],
+            block_nb=self.block_nb[s], block_sb=self.block_sb[s],
+            block_first=self.block_first[s],
             block_v=self.block_v, block_e=self.block_e,
             n_node_blocks=self.blocks_per_shard,
-            n_edge_blocks=self.n_edge_blocks, n_nodes=self.n_nodes)
+            n_edge_blocks=self.n_edge_blocks, n_nodes=self.n_nodes,
+            n_src_blocks=self.n_shards * self.blocks_per_shard)
 
     def local(self) -> CSCLayout:
         """THIS device's shard, inside shard_map (leading axis sliced to
@@ -217,11 +225,17 @@ class PartitionedGraph:
     # pytree aux data, so two partitions that differ only in budget
     # compile as distinct programs.
     exchange_budget: int = 0
+    # static: the partition was built with exchange_budget="auto" — the
+    # sharded driver re-derives the budget from the diameter-estimate
+    # phase's observed chunk occupancy (auto_exchange_budget) and swaps
+    # it in before calibration.  exchange_budget above holds the default
+    # policy until then, so the graph is runnable as-is.
+    exchange_budget_auto: bool = False
 
     def tree_flatten(self):
         leaves = (self.indptr, self.indices, self.degree, self.shards)
         aux = (self.n_nodes, self.n_edges, self.max_degree,
-               self.exchange_budget)
+               self.exchange_budget, self.exchange_budget_auto)
         return leaves, aux
 
     @classmethod
@@ -323,6 +337,33 @@ def default_exchange_budget(chunks_per_shard: int) -> int:
     return max(0, min(chunks_per_shard - 1, -(-chunks_per_shard // 4)))
 
 
+def auto_exchange_budget(pg: PartitionedGraph, level_occupancies,
+                         quantile: float = 0.9) -> int:
+    """Derive a sparse-exchange budget from observed per-level
+    worst-shard chunk occupancies (the ``exchange_budget="auto"``
+    rule).
+
+    ``level_occupancies`` is a sequence of worst-shard active-chunk
+    counts, one per BFS level — typically reconstructed from the
+    diameter-estimate phase's final dist via
+    :func:`max_active_source_chunks`.  The budget is the ``quantile``-th
+    occupancy (simple order statistic): levels at or below it take the
+    sparse branch, the heavy tail above it falls back to dense.  The
+    result goes through the same structural clamp as an explicit budget
+    (:func:`_resolve_exchange_budget`), so the contract — in
+    ``[0, chunks_per_shard - 1]``, break-even still guarded at run time
+    by :attr:`ExchangePlan.sparse_available` — is unchanged.  An empty
+    occupancy list falls back to the default policy.
+    """
+    occ = sorted(int(o) for o in level_occupancies)
+    if not occ:
+        return _resolve_exchange_budget(pg.shard_rows, pg.shards.block_v,
+                                        None)
+    q = min(max(float(quantile), 0.0), 1.0)
+    pick = occ[min(len(occ) - 1, int(q * (len(occ) - 1) + 0.5))]
+    return _resolve_exchange_budget(pg.shard_rows, pg.shards.block_v, pick)
+
+
 @dataclasses.dataclass(frozen=True)
 class ExchangePlan:
     """Static accounting of the per-level frontier exchange.
@@ -422,7 +463,8 @@ def max_active_source_chunks(pg: PartitionedGraph, frontier_rows) -> int:
 def partition_graph(graph: Graph, n_shards: int, *,
                     block_v: int | None = None, block_e: int | None = None,
                     batch: int = 16,
-                    exchange_budget: int | None = None) -> PartitionedGraph:
+                    exchange_budget: "int | str | None" = None
+                    ) -> PartitionedGraph:
     """Split ``graph`` into ``n_shards`` destination-owned vertex shards.
 
     Pure numpy, one stable sort per shard; call once per (graph,
@@ -442,10 +484,17 @@ def partition_graph(graph: Graph, n_shards: int, *,
     ``exchange_chunks_per_shard - 1``.  The clamp is structural only;
     whether a given budget actually undercuts the dense gather depends
     on the run-time batch width, and that break-even guard lives in
-    the BFS driver / :attr:`ExchangePlan.sparse_available`.
+    the BFS driver / :attr:`ExchangePlan.sparse_available`.  The string
+    ``"auto"`` starts from the default policy and flags the graph
+    (``exchange_budget_auto``) so the sharded adaptive driver re-derives
+    the budget from the diameter-estimate phase's observed chunk
+    occupancy (:func:`auto_exchange_budget`) before the sampling epochs.
     """
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    budget_auto = exchange_budget == "auto"
+    if budget_auto:
+        exchange_budget = None
     if block_v is None or block_e is None:
         from repro.kernels.frontier.ops import choose_csc_blocks
         auto_v, auto_e = choose_csc_blocks(graph.n_nodes, batch)
@@ -465,6 +514,7 @@ def partition_graph(graph: Graph, n_shards: int, *,
     order = np.argsort(owner, kind="stable")
     src_o, dst_o = src[order], dst[order]
     bounds = np.searchsorted(owner[order], np.arange(n_shards + 1))
+    sink_sb = graph.n_nodes // block_v             # global source block
     per_shard = []
     for s in range(n_shards):
         lo, hi = int(bounds[s]), int(bounds[s + 1])
@@ -472,21 +522,26 @@ def partition_graph(graph: Graph, n_shards: int, *,
         nb_local = s_dst // block_v                # local node block
         per_shard.append(bucket_layout(
             src_o[lo:hi], s_dst, nb_local, bps, block_e,
-            sink_src=graph.n_nodes, sink_dst=shard_rows))
+            sink_src=graph.n_nodes, sink_dst=shard_rows,
+            src_block=src_o[lo:hi] // block_v,     # GLOBAL source block
+            sink_src_block=sink_sb))
     eb_max = max(p[2].shape[0] for p in per_shard)
     out_src = np.full((n_shards, eb_max * block_e), graph.n_nodes, np.int32)
     out_dst = np.full((n_shards, eb_max * block_e), shard_rows, np.int32)
     # inert padding blocks accumulate zeros into the last local tile
     out_nb = np.full((n_shards, eb_max), bps - 1, np.int32)
+    out_sb = np.full((n_shards, eb_max), sink_sb, np.int32)
     out_first = np.zeros((n_shards, eb_max), np.int32)
-    for s, (a_src, a_dst, a_nb, a_first) in enumerate(per_shard):
+    for s, (a_src, a_dst, a_nb, a_sb, a_first) in enumerate(per_shard):
         out_src[s, : a_src.shape[0]] = a_src
         out_dst[s, : a_dst.shape[0]] = a_dst
         out_nb[s, : a_nb.shape[0]] = a_nb
+        out_sb[s, : a_sb.shape[0]] = a_sb
         out_first[s, : a_first.shape[0]] = a_first
     shards = ShardedCSCLayout(
         src=jnp.asarray(out_src), dst=jnp.asarray(out_dst),
-        block_nb=jnp.asarray(out_nb), block_first=jnp.asarray(out_first),
+        block_nb=jnp.asarray(out_nb), block_sb=jnp.asarray(out_sb),
+        block_first=jnp.asarray(out_first),
         block_v=int(block_v), block_e=int(block_e),
         blocks_per_shard=int(bps), n_edge_blocks=int(eb_max),
         n_shards=int(n_shards), n_nodes=int(graph.n_nodes))
@@ -495,32 +550,43 @@ def partition_graph(graph: Graph, n_shards: int, *,
         shards=shards, n_nodes=graph.n_nodes, n_edges=graph.n_edges,
         max_degree=graph.max_degree,
         exchange_budget=_resolve_exchange_budget(
-            shard_rows, block_v, exchange_budget))
+            shard_rows, block_v, exchange_budget),
+        exchange_budget_auto=budget_auto)
 
 
 def abstract_partitioned_graph(n_nodes: int, n_edges_directed: int,
                                n_shards: int, *, block_v: int,
                                block_e: int, max_degree: int = 100_000,
                                pad_to: int = 128,
-                               exchange_budget: int | None = None
+                               exchange_budget: "int | str | None" = None
                                ) -> PartitionedGraph:
     """ShapeDtypeStruct twin of a balanced partition, for lowering the
     sharded epoch on a production mesh without materializing a graph
-    (repro.launch.dryrun).  Per-shard edge slots assume balance: the
-    real builder's padding adds at most one ``block_e`` block per local
-    bucket, which this sizing includes.  ``exchange_budget`` defaults
-    exactly as in :func:`partition_graph`, so the lowered epoch carries
-    the same sparse-exchange schedule a real partition would."""
+    (repro.launch.dryrun).  Per-shard edge slots assume balance and
+    bound the pair-bucketed layout from above: a shard with ``e_sh``
+    edges has at most ``min(bps * n_src_blocks, bps + e_sh)`` populated
+    (dst block, src block) pairs (every pair holds >= 1 edge except the
+    <= bps empty-bucket pads), and each pair's block_e rounding adds at
+    most one block beyond its edges' own ``ceil(e_sh / block_e)``
+    blocks.  ``exchange_budget`` defaults exactly as in
+    :func:`partition_graph` (including ``"auto"``), so the lowered
+    epoch carries the same sparse-exchange schedule a real partition
+    would."""
+    budget_auto = exchange_budget == "auto"
+    if budget_auto:
+        exchange_budget = None
     sds = jax.ShapeDtypeStruct
     v1 = n_nodes + 1
     n_nb = -(-v1 // block_v)
     bps = -(-n_nb // n_shards)
-    eb = bps + -(-(n_edges_directed // n_shards) // block_e)
+    e_sh = -(-n_edges_directed // n_shards)
+    eb = min(bps * n_nb, bps + e_sh) + -(-e_sh // block_e)
     e_pad = (n_edges_directed // pad_to + 2) * pad_to
     shards = ShardedCSCLayout(
         src=sds((n_shards, eb * block_e), jnp.int32),
         dst=sds((n_shards, eb * block_e), jnp.int32),
         block_nb=sds((n_shards, eb), jnp.int32),
+        block_sb=sds((n_shards, eb), jnp.int32),
         block_first=sds((n_shards, eb), jnp.int32),
         block_v=int(block_v), block_e=int(block_e),
         blocks_per_shard=int(bps), n_edge_blocks=int(eb),
@@ -531,4 +597,5 @@ def abstract_partitioned_graph(n_nodes: int, n_edges_directed: int,
         n_nodes=int(n_nodes), n_edges=int(n_edges_directed),
         max_degree=int(max_degree),
         exchange_budget=_resolve_exchange_budget(
-            bps * block_v, block_v, exchange_budget))
+            bps * block_v, block_v, exchange_budget),
+        exchange_budget_auto=budget_auto)

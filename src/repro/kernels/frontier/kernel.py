@@ -71,22 +71,48 @@ through the dispatcher.
 **Double-buffered edge-block pipeline.**  The ``src``/``dst`` edge
 blocks live in ``pltpu.ANY`` (HBM) and are staged into VMEM scratch by
 explicit ``pltpu.make_async_copy`` DMA with two slots: at grid step
-``k`` the copy for block ``k + 1`` is started *before* the gather +
-one-hot MXU matmul of block ``k`` runs, so the next block's edge
-stream is in flight behind the current block's compute (slot parity
-``k % 2``; inactive blocks start no copy and wait on none).  This
-replaces the BlockSpec auto-pipeline so the copy schedule can follow
-the occupancy bitmap — an auto-pipelined operand would prefetch
-skipped blocks too.
+``k`` the copy for block ``k + 1`` is started *before* the one-hot MXU
+matmuls of block ``k`` run, so the next block's edge stream is in
+flight behind the current block's compute (slot parity ``k % 2``;
+inactive blocks start no copy and wait on none).  This replaces the
+BlockSpec auto-pipeline so the copy schedule can follow the occupancy
+bitmap — an auto-pipelined operand would prefetch skipped blocks too.
+
+**Staged dist/sigma gather (the Mosaic-compilable formulation).**
+Every edge block of the layout is *source-block-pure*
+(:func:`repro.core.graph.bucket_layout` additionally sorts each
+destination bucket by source block and records the block in
+``block_sb``), so the per-edge gather needs rows from exactly ONE
+(block_v, B) dist tile and one sigma tile.  Those tiles ride the same
+double-buffered DMA pipeline as the edge blocks (semaphore lanes 2-3 of
+the shared (2, 4) array): ``issue`` for block ``k`` starts the edge
+copies and — only when the slot does not already hold source block
+``block_sb[k]`` (an SMEM (slot, [held, pending]) tracker; consecutive
+blocks of the same pair reuse the resident tiles without re-DMA) — the
+two state-tile copies.  The gather itself is then block-local: the
+frontier-value tile ``where(dist_tile == levels, sigma_tile, 0)`` is
+computed once per staged tile, and the per-edge read becomes a second
+one-hot matmul ``onehot(src_local) @ fval`` (a (block_e x block_v) x
+(block_v x B) MXU product) — no ``pltpu.ANY`` ref is ever indexed
+directly in the kernel body (``tools/check_kernels.py`` enforces this),
+which is exactly the restriction Mosaic imposes.  Sink-padded edges
+carry ``src = n_nodes``: when the sink row lies outside the staged tile
+the one-hot row is all zero, and when it lies inside it the tile's sink
+dist (-3) never matches a level — inert either way.  Both one-hot
+matmuls accumulate exact small-integer float32 values, so the staged
+path is bit-for-bit identical to a direct gather even though the pair
+sort reorders edges within a bucket (the additions commute exactly).
 
 On real TPUs pick B as a multiple of the f32 lane tiling (8; ideally
-128 to fill the MXU); the flat kernel compiles with
-``interpret=False``.  The node-blocked kernel's per-edge gather of
-dist/sigma from ``pltpu.ANY`` refs is exercised in interpret mode
-only: a compiled Mosaic version must additionally stage those gathers
-through DMA (the edge-block pipeline above is written; the
-gather-side DMA is the remaining ROADMAP follow-up together with the
-Mosaic compile itself).
+128 to fill the MXU); both kernels are now written to the compiled
+Mosaic contract (explicit DMA staging of everything read from ANY
+memory).  The staged gather trades slot padding for compilability:
+every (dst block, src block) pair is padded to a ``block_e`` multiple,
+which stays ~2-3x on locality-friendly instances (grids, roads — the
+source span of a destination block is O(1) blocks) but grows with the
+number of populated pairs on scattered graphs (see DESIGN.md §Perf
+"Staged gather" for the accounting and ``choose_csc_blocks`` for the
+VMEM budget the four staged tile slots join).
 
 All shapes static; padded edges target the sink row V (dist = -3) and
 contribute exactly 0.
@@ -269,8 +295,9 @@ def edge_bitmap_from_source_bits(csc, src_bits, chunk_rows: int):
     return jnp.max(hit.reshape(csc.n_edge_blocks, csc.block_e), axis=1)
 
 
-def _nb_kernel(nb_ref, first_ref, act_ref, level_ref, src_any, dst_any,
-               dist_ref, sigma_ref, out_ref, src_s, dst_s, sem, *,
+def _nb_kernel(nb_ref, sb_ref, first_ref, act_ref, level_ref, src_any,
+               dst_any, dist_any, sigma_any, out_ref, src_s, dst_s,
+               dist_s, sigma_s, tile_state, sem, *,
                block_v: int, block_e: int):
     k = pl.program_id(0)         # flattened (node block, edge block) cell
     nsteps = pl.num_programs(0)
@@ -285,22 +312,54 @@ def _nb_kernel(nb_ref, first_ref, act_ref, level_ref, src_any, dst_any,
                     dst_any.at[pl.ds(block_idx * block_e, block_e)],
                     dst_s.at[s], sem.at[s, 1]))
 
-    # -- double-buffered pipeline: block k+1's copy is started before
+    def tile_dma(sb, s):
+        # HBM -> VMEM stage of one (block_v, B) dist/sigma source tile
+        return (pltpu.make_async_copy(
+                    dist_any.at[pl.ds(sb * block_v, block_v)],
+                    dist_s.at[s], sem.at[s, 2]),
+                pltpu.make_async_copy(
+                    sigma_any.at[pl.ds(sb * block_v, block_v)],
+                    sigma_s.at[s], sem.at[s, 3]))
+
+    def issue(block_idx, s):
+        # start block_idx's copies into slot s: edges always; the state
+        # tiles only when the slot does not already hold this source
+        # block (consecutive blocks of a (dst, src)-block pair reuse the
+        # resident tiles — the payoff of the source-block sort).  The
+        # SMEM tracker rows are (held source block, wait pending).
+        for dma in edge_dma(block_idx, s):
+            dma.start()
+        sb = sb_ref[block_idx]
+
+        @pl.when(tile_state[s, 0] != sb)
+        def _stage_tiles():
+            for dma in tile_dma(sb, s):
+                dma.start()
+            tile_state[s, 0] = sb
+            tile_state[s, 1] = 1
+
+    @pl.when(k == 0)
+    def _reset():                # scratch persists across pallas_calls
+        tile_state[0, 0] = -1
+        tile_state[0, 1] = 0
+        tile_state[1, 0] = -1
+        tile_state[1, 1] = 0
+
+    # -- double-buffered pipeline: block k+1's copies are started before
     # block k's compute; slots alternate on block-index parity.  Copies
     # are only issued for ACTIVE blocks (an auto-pipelined BlockSpec
     # operand would prefetch skipped blocks too), and only waited on by
-    # the matching active compute step below.
+    # the matching active compute step below — every issued copy is
+    # waited, because issue and wait share the act[j] == 1 condition.
     @pl.when((k == 0) & (act_ref[0] == 1))
     def _warmup():               # block 0 has no predecessor step
-        for dma in edge_dma(0, 0):
-            dma.start()
+        issue(0, 0)
 
     nxt = jnp.minimum(k + 1, nsteps - 1)     # clamp: trace-safe at the end
 
     @pl.when((k + 1 < nsteps) & (act_ref[nxt] == 1))
     def _prefetch_next():
-        for dma in edge_dma(nxt, jax.lax.rem(k + 1, 2)):
-            dma.start()
+        issue(nxt, jax.lax.rem(k + 1, 2))
 
     @pl.when(first_ref[k] == 1)
     def _init():                 # first edge block of this bucket: the
@@ -310,14 +369,29 @@ def _nb_kernel(nb_ref, first_ref, act_ref, level_ref, src_any, dst_any,
     def _expand():               # skipped entirely on inactive cells
         for dma in edge_dma(k, slot):
             dma.wait()
-        src = src_s[slot]        # (block_e,)
+
+        @pl.when(tile_state[slot, 1] == 1)
+        def _wait_tiles():       # tiles staged for this block (or a
+            for dma in tile_dma(sb_ref[k], slot):   # reused resident
+                dma.wait()                          # pair needs no wait)
+            tile_state[slot, 1] = 0
+
+        src = src_s[slot]        # (block_e,) — all inside source block
         dst = dst_s[slot]        # (block_e,) — all inside this node block
         levels = level_ref[...]  # (B,)
-        # per-edge-block gather from the (ANY-space) vertex-major state:
-        # the node state is NOT pinned in VMEM — only these (block_e, B)
-        # values (interpret-mode only; Mosaic needs a DMA stage here)
-        vals = jnp.where(dist_ref[src, :] == levels[None, :],
-                         sigma_ref[src, :], 0.0)          # (block_e, B)
+        # block-local frontier values of the staged source tile: rows
+        # whose dist matches a sample's level carry their sigma
+        fval = jnp.where(dist_s[slot] == levels[None, :],
+                         sigma_s[slot], 0.0)          # (block_v, B)
+        # gather = one-hot matmul against the staged tile.  Sink-padded
+        # edges (src = n_nodes) either fall outside [0, block_v) — an
+        # all-zero one-hot row — or hit the sink row whose dist (-3)
+        # never matches a level: inert either way.
+        src_local = src - sb_ref[k] * block_v
+        onehot_src = (src_local[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (block_e, block_v), 1)).astype(jnp.float32)
+        vals = jnp.dot(onehot_src, fval,
+                       preferred_element_type=jnp.float32)  # (block_e, B)
         # local scatter rows inside the current (block_v, B) contrib
         # tile; sink-padded edges fall outside [0, block_v) (all-zero
         # one-hot column) or hit the sink row with a 0 value — inert
@@ -345,29 +419,37 @@ def frontier_expand_node_blocked_pallas(csc, dist, sigma, levels, *,
     contrib tile is VMEM-resident per grid step, so V is not bounded by
     the VMEM cell budget.
 
-    ``block_nb``/``block_first``/``block_active`` ride in as
-    scalar-prefetch operands (``PrefetchScalarGridSpec``): the output
-    index map follows ``block_nb`` to the current node block's tile,
-    the tile is zeroed on each bucket's first edge block, and cells
-    whose edge block holds no frontier source are skipped (see the
-    module docstring for the bitmap contract).  ``block_active=None``
-    with ``skip_inactive=True`` computes the bitmap from dist/levels;
-    ``skip_inactive=False`` forces the all-ones bitmap (every cell
-    runs — the lane the occupancy benchmark compares against).
+    ``block_nb``/``block_sb``/``block_first``/``block_active`` ride in
+    as scalar-prefetch operands (``PrefetchScalarGridSpec``): the
+    output index map follows ``block_nb`` to the current node block's
+    tile, ``block_sb`` names the (block_v, B) dist/sigma source tile
+    the kernel DMA-stages for each edge block (module docstring,
+    "Staged dist/sigma gather"), the tile is zeroed on each bucket's
+    first edge block, and cells whose edge block holds no frontier
+    source are skipped (see the module docstring for the bitmap
+    contract).  ``block_active=None`` with ``skip_inactive=True``
+    computes the bitmap from dist/levels; ``skip_inactive=False``
+    forces the all-ones bitmap (every cell runs — the lane the
+    occupancy benchmark compares against).
     """
     v_rows, batch = dist.shape
     levels = jnp.asarray(levels, jnp.int32).reshape(batch)
     v_pad = csc.v_pad
+    # the staged gather DMAs source tiles [sb*block_v, (sb+1)*block_v)
+    # for every sb < n_src_blocks — the state must cover them all
+    src_rows = csc.n_src_blocks * csc.block_v
     if wide_state:
         # Sharded lane: ``csc`` is one shard's LOCAL layout view
         # (ShardedCSCLayout.local(): global src ids, local dst rows)
         # while dist/sigma cover the all-gathered GLOBAL row space —
-        # strictly more rows than the local tiles.  The gather indexes
-        # the wide state (ANY memory, any row count), the output is the
-        # local (csc.v_pad, B) tile stack; no pad/slice of the state.
-        if v_rows < v_pad:
+        # strictly more rows than the local tiles.  The staged gather
+        # tiles the wide state (ANY memory) by GLOBAL source block, the
+        # output is the local (csc.v_pad, B) tile stack; no pad/slice
+        # of the state.
+        if v_rows < max(v_pad, src_rows):
             raise ValueError(
-                f"wide_state expects >= {v_pad} gathered rows, got {v_rows}")
+                f"wide_state expects >= {max(v_pad, src_rows)} gathered "
+                f"rows, got {v_rows}")
     elif v_pad > v_rows:
         # Compat lane for (V+1, B) callers: rows in [V+1, v_pad) back the
         # last tile; no edge targets them.  This pad (and the [:v_rows]
@@ -390,21 +472,26 @@ def frontier_expand_node_blocked_pallas(csc, dist, sigma, levels, *,
             csc.n_edge_blocks)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,   # block_nb, block_first, block_active
+        # block_nb, block_sb, block_first, block_active
+        num_scalar_prefetch=4,
         grid=(csc.n_edge_blocks,),
         in_specs=[
-            pl.BlockSpec((batch,), lambda k, nb, first, act: (0,)),  # levels
+            pl.BlockSpec((batch,),
+                         lambda k, nb, sb, first, act: (0,)),  # levels
             pl.BlockSpec(memory_space=pltpu.ANY),   # src: manual DMA stage
             pl.BlockSpec(memory_space=pltpu.ANY),   # dst: manual DMA stage
-            pl.BlockSpec(memory_space=pltpu.ANY),   # dist: gathered, not pinned
-            pl.BlockSpec(memory_space=pltpu.ANY),   # sigma: gathered, not pinned
+            pl.BlockSpec(memory_space=pltpu.ANY),   # dist: DMA-staged tiles
+            pl.BlockSpec(memory_space=pltpu.ANY),   # sigma: DMA-staged tiles
         ],
         out_specs=pl.BlockSpec((csc.block_v, batch),
-                               lambda k, nb, first, act: (nb[k], 0)),
+                               lambda k, nb, sb, first, act: (nb[k], 0)),
         scratch_shapes=[
             pltpu.VMEM((2, csc.block_e), jnp.int32),   # src double buffer
             pltpu.VMEM((2, csc.block_e), jnp.int32),   # dst double buffer
-            pltpu.SemaphoreType.DMA((2, 2)),           # (slot, src|dst)
+            pltpu.VMEM((2, csc.block_v, batch), jnp.int32),    # dist tiles
+            pltpu.VMEM((2, csc.block_v, batch), jnp.float32),  # sigma tiles
+            pltpu.SMEM((2, 2), jnp.int32),  # (slot, [held sb, pending])
+            pltpu.SemaphoreType.DMA((2, 4)),  # (slot, src|dst|dist|sigma)
         ],
     )
     out = pl.pallas_call(
@@ -413,7 +500,7 @@ def frontier_expand_node_blocked_pallas(csc, dist, sigma, levels, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((v_pad, batch), jnp.float32),
         interpret=interpret,
-    )(csc.block_nb, csc.block_first, block_active, levels,
+    )(csc.block_nb, csc.block_sb, csc.block_first, block_active, levels,
       csc.src, csc.dst, dist, sigma)
     if wide_state:
         return out                     # local (csc.v_pad, B) tile stack

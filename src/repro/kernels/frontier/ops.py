@@ -115,9 +115,11 @@ def node_blocked_supported(csc, batch: int = 1) -> bool:
     """True when the node-blocked kernel's per-step tiles fit VMEM.
 
     Resident per grid step: the (block_v, B) contrib tile, the
-    (block_v, block_e) one-hot operand, the (block_e, B) gathered
-    values, and the double-buffered (2, block_e) src/dst edge-block
-    stage — independent of V.
+    frontier-value tile and the four double-buffered staged dist/sigma
+    source tiles (6 * block_v * B total), the two (block_v, block_e)
+    one-hot operands, the (block_e, B) gathered values, and the
+    double-buffered (2, block_e) src/dst edge-block stage — independent
+    of V.
     """
     b = max(batch, 1)
     cells = _nb_cells(csc.block_v, csc.block_e, b)
@@ -125,10 +127,10 @@ def node_blocked_supported(csc, batch: int = 1) -> bool:
 
 
 def _nb_cells(block_v: int, block_e: int, b: int) -> int:
-    return (block_v * b                 # contrib tile
-            + block_v * block_e         # one-hot operand
-            + 2 * block_e * b           # gathered dist/sigma values
-            + 2 * 2 * block_e)          # double-buffered src/dst stage
+    return (6 * block_v * b             # contrib + fval + 4 staged tiles
+            + 2 * block_v * block_e     # src + dst one-hot operands
+            + block_e * b               # gathered values (src one-hot @ fval)
+            + 2 * 2 * block_e)          # double-buffered src/dst edge stage
 
 
 def sharded_supported(shard, batch: int = 1) -> bool:
@@ -168,10 +170,10 @@ def choose_csc_blocks(n_nodes: int, batch: int = 16, *,
     v_cap = max(128, -(-(n_nodes + 1) // 128) * 128)
     best = None
     for block_e in (2048, 1024, 512, 256, 128):
-        rem = budget - 2 * block_e * b - 4 * block_e
+        rem = budget - block_e * b - 4 * block_e
         if rem <= 0:
             continue  # the edge-stream residency alone busts the budget
-        block_v = min((rem // (b + block_e)) // 128 * 128, v_cap)
+        block_v = min((rem // (6 * b + 2 * block_e)) // 128 * 128, v_cap)
         if block_v >= 256 or block_v == v_cap:
             return block_v, block_e
         if block_v >= 128 and best is None:

@@ -114,6 +114,158 @@ def collective_stats(hlo_text: str) -> dict:
     return {"bytes": out, "counts": counts}
 
 
+# --------------------------------------------------------------------------
+# Per-computation collective accounting (cond-branch attribution)
+#
+# ``collective_stats`` sums over the WHOLE module text, so a ``lax.cond``
+# contributes the collectives of BOTH its arms even though a device
+# executes exactly one per invocation.  The helpers below split the HLO
+# into named computations, walk the call graph (kWhile / kConditional /
+# kCall / fusions), and attribute transitive collective bytes to each
+# branch of a conditional — letting callers subtract the branch NOT
+# taken instead of reporting the double-counted module total.
+# --------------------------------------------------------------------------
+
+# "%name (params...) -> result {"  — computation header (ENTRY or not);
+# params may hold nested parens (tuple types), hence the greedy middle
+_COMP_HEADER_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+# call-graph edges carried by instruction attributes
+_CALLS_RE = re.compile(
+    r"(?:to_apply|condition|body|calls|true_computation|"
+    r"false_computation)=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def split_computations(hlo_text: str) -> dict:
+    """Map computation name -> its body text (header line included).
+
+    HLO computations never nest, but instruction lines carry inline
+    balanced braces (``replica_groups={{...}}``, ``metadata={...}``), so
+    a running per-line brace depth cleanly finds each closing ``}``."""
+    comps, name, depth, buf = {}, None, 0, []
+    for line in hlo_text.splitlines():
+        if name is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                name, depth, buf = m.group(1), 0, []
+        if name is not None:
+            buf.append(line)
+            depth += line.count("{") - line.count("}")
+            if depth <= 0:
+                comps[name] = "\n".join(buf)
+                name = None
+    return comps
+
+
+def _computation_callees(body: str) -> list:
+    out = [m.group(1) for m in _CALLS_RE.finditer(body)]
+    for m in _BRANCHES_RE.finditer(body):
+        out.extend(p.strip().lstrip("%")
+                   for p in m.group(1).split(",") if p.strip())
+    return out
+
+
+def _reachable(comps: dict, root: str) -> set:
+    seen, stack = set(), [root]
+    while stack:
+        name = stack.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        stack.extend(_computation_callees(comps[name]))
+    return seen
+
+
+def _transitive_stats(comps: dict, root: str) -> dict:
+    """Collective bytes/counts of ``root`` plus everything it can call.
+
+    Each reachable computation is counted ONCE — the same
+    text-appears-once semantics as ``collective_stats`` over the module,
+    so branch totals subtract cleanly from the module total."""
+    total = {"bytes": {k: 0.0 for k in _COLLECTIVES},
+             "counts": {k: 0 for k in _COLLECTIVES}}
+    for name in _reachable(comps, root):
+        st = collective_stats(comps[name])
+        for k in _COLLECTIVES:
+            total["bytes"][k] += st["bytes"][k]
+            total["counts"][k] += st["counts"][k]
+    return total
+
+
+def cond_branch_collective_stats(hlo_text: str) -> list:
+    """Per-branch transitive collective stats for every HLO conditional.
+
+    Returns one entry per ``conditional(...)`` instruction:
+    ``{"branches": [{"computation": name, "bytes": {...},
+    "counts": {...}}, ...]}``, ordered as the branch list appears."""
+    comps = split_computations(hlo_text)
+    out = []
+    for body in comps.values():
+        for line in body.splitlines():
+            if " conditional(" not in line:
+                continue
+            names = []
+            m = _BRANCHES_RE.search(line)
+            if m:
+                names = [p.strip().lstrip("%")
+                         for p in m.group(1).split(",") if p.strip()]
+            else:
+                attrs = dict(
+                    (a, v) for a, v in re.findall(
+                        r"(true_computation|false_computation)=%?([\w.\-]+)",
+                        line))
+                if "true_computation" in attrs:
+                    # report [false, true] = HLO branch-index order
+                    names = [attrs.get("false_computation"),
+                             attrs.get("true_computation")]
+                    names = [n for n in names if n]
+            if not names:
+                continue
+            out.append({"branches": [
+                dict(computation=n, **_transitive_stats(comps, n))
+                for n in names]})
+    return out
+
+
+def exchange_branch_accounting(hlo_text: str) -> "dict | None":
+    """Attribute the frontier-exchange ``lax.cond``'s all-gather bytes.
+
+    Finds the conditional moving the most all-gather traffic across its
+    branches (the per-level sparse/dense protocol switch — the only
+    data-dependent all-gather in the partitioned epoch), labels the
+    heavier branch ``dense`` and the lighter ``sparse``, and returns
+    module-total all-gather bytes corrected to each taken-branch
+    hypothesis.  None when no conditional carries an all-gather."""
+    conds = cond_branch_collective_stats(hlo_text)
+    best, best_ag = None, 0.0
+    for c in conds:
+        ag = sum(b["bytes"]["all-gather"] for b in c["branches"])
+        if ag > best_ag:
+            best, best_ag = c, ag
+    if best is None or len(best["branches"]) < 2:
+        return None
+    ranked = sorted(best["branches"],
+                    key=lambda b: b["bytes"]["all-gather"])
+    sparse, dense = ranked[0], ranked[-1]
+    raw = collective_stats(hlo_text)["bytes"]["all-gather"]
+    return {
+        "dense_branch": {"computation": dense["computation"],
+                         "all_gather_bytes":
+                             float(dense["bytes"]["all-gather"])},
+        "sparse_branch": {"computation": sparse["computation"],
+                          "all_gather_bytes":
+                              float(sparse["bytes"]["all-gather"])},
+        "module_all_gather_bytes_raw": float(raw),
+        # module total with the NOT-taken arm's bytes removed — what a
+        # device actually moves under each protocol hypothesis
+        "module_all_gather_bytes_if_sparse_taken":
+            float(raw - dense["bytes"]["all-gather"]),
+        "module_all_gather_bytes_if_dense_taken":
+            float(raw - sparse["bytes"]["all-gather"]),
+    }
+
+
 def _to_shardings(mesh, tree):
     from jax.sharding import NamedSharding, PartitionSpec
     return jax.tree.map(
@@ -409,11 +561,15 @@ def run_betweenness(mesh_name: str, aggregation: str,
     the bitmap-scheduled frontier exchange (DESIGN.md §Frontier
     exchange).  Because the exchange sits INSIDE the level while-loop
     (counted once), the recorded all-gather bytes of the loop body ARE
-    per-level exchange volume — with the caveat that the HLO text
-    contains BOTH protocol branches of the per-level ``lax.cond``
-    (sparse + dense fallback), so the parsed total over-counts one
-    level by the branch not taken; the record's ``exchange`` block
-    therefore also carries the analytic per-protocol figures from
+    per-level exchange volume.  The HLO text contains BOTH protocol
+    branches of the per-level ``lax.cond`` (sparse + dense fallback);
+    the raw module total in ``full.collectives`` keeps that
+    text-appears-once convention, and the record's ``exchange`` block
+    carries the per-branch split from
+    :func:`exchange_branch_accounting` — module all-gather bytes with
+    the NOT-taken arm subtracted, under each protocol hypothesis — so
+    no consumer needs to sum both arms.  It also carries the analytic
+    per-protocol figures from
     :func:`repro.core.partition.exchange_plan` (dense, sparse-budget,
     and the static block budget itself), together with the per-device
     shard bytes vs the replicated-layout equivalent (the
@@ -477,13 +633,15 @@ def run_betweenness(mesh_name: str, aggregation: str,
             "level_bytes_dense_protocol": int(plan.dense_bytes),
             "level_bytes_sparse_protocol": int(plan.sparse_bytes),
             "bitmap_bytes_per_level": int(plan.bitmap_bytes),
-            "note": "loop-body all-gather bytes below = one BFS level's "
-                    "frontier exchange (while bodies counted once); the "
-                    "HLO text holds BOTH cond branches (sparse + dense "
-                    "fallback), so at runtime a level moves "
-                    "level_bytes_sparse_protocol when its occupancy fits "
-                    "exchange_budget_blocks on every shard, "
-                    "level_bytes_dense_protocol otherwise",
+            "note": "loop-body all-gather bytes = one BFS level's "
+                    "frontier exchange (while bodies counted once). "
+                    "full.collectives is the raw module-text total and "
+                    "holds BOTH cond branches; cond_branches below "
+                    "reports each arm separately and the module total "
+                    "with the not-taken arm removed — at runtime a "
+                    "level moves level_bytes_sparse_protocol when its "
+                    "occupancy fits exchange_budget_blocks on every "
+                    "shard, level_bytes_dense_protocol otherwise",
         }
         step = make_epoch_step_sharded(mesh, v, v_pad, n0,
                                        batch_size=batch_size)
@@ -538,6 +696,11 @@ def run_betweenness(mesh_name: str, aggregation: str,
                 "counts); aggregation collectives exact",
     }
     if exchange is not None:
+        # split the per-level protocol cond by branch (taken-arm-only
+        # totals); parsed from the same optimized HLO as
+        # full.collectives, so the two subtract consistently
+        exchange["cond_branches"] = exchange_branch_accounting(
+            compiled.as_text())
         record["exchange"] = exchange
     record["extrapolated"] = _lin(record["full"])
     _write(record, out_dir)

@@ -91,9 +91,13 @@ def test_persisted_csc_state_shape_identity_over_budget():
     result shapes equal the kernel's padded row count (had any per-call
     pad/slice of dist/sigma happened inside the while_loop, the output
     would be (V+1, B) again) — on an instance whose (V+1) * B state is
-    over the flat kernel's VMEM budget."""
-    batch = 16
-    g = erdos_renyi_graph(70_000, 4.0, seed=11)
+    over the flat kernel's VMEM budget.  A grid instance: the staged
+    gather's pair-bucketed layout targets source-locality-friendly
+    graphs (road networks in the paper), where a destination block's
+    sources span O(1) source blocks."""
+    batch = 64
+    g = grid_graph(126, 126)
+    assert (g.n_nodes + 1) * batch > 1_000_000
     gc = with_csc_layout(g, batch=batch)
     assert not pallas_supported(g.n_nodes, g.e_pad, batch=batch)
     assert node_blocked_supported(gc.csc, batch)

@@ -103,11 +103,15 @@ def test_node_blocked_above_vmem_budget_bit_for_bit():
     """The regime the tentpole exists for: (V+1) * B above the 1M-cell
     VMEM budget, where ``pallas_supported`` rejects the flat kernel; the
     node-blocked kernel must still run and match the XLA reference
-    bit-for-bit."""
-    batch = 16
-    g = erdos_renyi_graph(70_000, 2.0, seed=11)
+    bit-for-bit.  A grid instance (the paper's road-network stand-in):
+    the staged gather's pair-bucketed layout is sized for
+    source-locality-friendly graphs — on a grid a destination block's
+    sources span O(1) source blocks, so the slot padding stays small."""
+    batch = 64
+    g = grid_graph(126, 126)
+    assert (g.n_nodes + 1) * batch > 1_000_000
     assert not pallas_supported(g.n_nodes, g.e_pad, batch=batch)
-    csc = build_csc_layout(g)  # default blocking fits the budget
+    csc = build_csc_layout(g, batch=batch)  # default blocking fits
     assert node_blocked_supported(csc, batch)
     dist, sigma, levels = _bfs_state(g, batch, seed=11)
     ref = frontier_expand_batched_ref(g.src, g.dst, dist, sigma, levels)

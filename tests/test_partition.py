@@ -28,6 +28,7 @@ from repro.core import (build_csc_layout, erdos_renyi_graph, grid_graph,
                         partition_graph, vertex_owner)
 from repro.core.bfs import bfs_sssp_batched, bfs_sssp_batched_sharded
 from repro.core.partition import (PartitionedGraph, abstract_partitioned_graph,
+                                  auto_exchange_budget,
                                   default_exchange_budget, exchange_plan,
                                   global_row, max_active_source_chunks,
                                   shard_vertex_range)
@@ -211,6 +212,38 @@ def test_default_exchange_budget_contract():
     assert ab.exchange_budget == pg.exchange_budget
 
 
+def test_auto_exchange_budget_rule():
+    """The ``exchange_budget="auto"`` derivation: quantile order
+    statistic over observed worst-shard occupancies, then the same
+    structural clamp as an explicit budget; empty observations fall
+    back to the default policy."""
+    g = grid_graph(128, 16)
+    pg = partition_graph(g, 4, block_v=64, block_e=128)
+    cps = pg.exchange_chunks_per_shard
+    assert cps >= 4  # the cases below need clamp headroom
+    # q=0.9 over 10 ascending observations picks (about) the 9th-ranked
+    occ = list(range(1, 11))
+    assert auto_exchange_budget(pg, occ, quantile=0.9) == min(9, cps - 1)
+    # the median rule and order-independence
+    assert auto_exchange_budget(pg, [3, 1, 2], quantile=0.5) == 2
+    assert auto_exchange_budget(pg, [2, 3, 1], quantile=0.5) == 2
+    # clamp contract: huge observed occupancies cap at cps - 1, and a
+    # quantile of 0 picks the smallest observation
+    assert auto_exchange_budget(pg, [10**6], quantile=0.9) == cps - 1
+    assert auto_exchange_budget(pg, [1, 10**6], quantile=0.0) == 1
+    # empty observations -> the static default policy
+    assert auto_exchange_budget(pg, []) == default_exchange_budget(cps)
+    # partition_graph accepts the sentinel: default budget now, flag
+    # set for the driver to swap in the derived one post-diameter
+    pga = partition_graph(g, 4, block_v=64, block_e=128,
+                          exchange_budget="auto")
+    assert pga.exchange_budget_auto
+    assert pga.exchange_budget == default_exchange_budget(cps)
+    ab = abstract_partitioned_graph(g.n_nodes, g.n_edges, 4, block_v=64,
+                                    block_e=128, exchange_budget="auto")
+    assert ab.exchange_budget_auto
+
+
 def test_exchange_volume_accounting():
     """The satellite acceptance numbers: on a high-diameter (narrow)
     grid the reported per-level exchange bytes are <= the dense
@@ -358,8 +391,11 @@ _MESH8_SCRIPT = textwrap.dedent("""
     mesh = make_mesh_compat((8,), axes)
 
     # --- batched BFS parity at V ABOVE the single-shard fit predicate ---
-    B = 16
-    g = erdos_renyi_graph(70_000, 4.0, seed=11)
+    # (grid instance: the staged gather's pair-bucketed layout targets
+    # source-locality-friendly graphs, the paper's road networks)
+    from repro.core import grid_graph
+    B = 64
+    g = grid_graph(126, 126)
     assert not pallas_supported(g.n_nodes, g.e_pad, batch=B)
     pg = partition_graph(g, 8, batch=B)
     gspec = pg.partition_spec(axes)
@@ -464,6 +500,19 @@ _MESH8_SCRIPT = textwrap.dedent("""
     assert res.converged and res.tau > 0
     print(f"OK kadabra_partitioned err={err:.4f} tau={res.tau}")
 
+    # --- exchange_budget="auto": derived post-diameter, same bits -------
+    # (the driver swaps in the occupancy-derived budget before
+    # calibration; the protocol choice never changes BFS results, so
+    # the whole run stays bit-identical to the static-budget one)
+    pg3_auto = partition_graph(g3, 8, block_v=8, block_e=128,
+                               exchange_budget="auto")
+    assert pg3_auto.exchange_budget_auto
+    res_auto = run_kadabra(pg3_auto, mesh=mesh3, config=cfg,
+                           key=jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(res_auto.btilde, res.btilde)
+    assert res_auto.converged and res_auto.tau == res.tau
+    print("OK kadabra_auto_budget")
+
     # --- checkpoint/resume on the sharded lane --------------------------
     import dataclasses as dc
     import tempfile
@@ -492,7 +541,7 @@ def test_partitioned_mesh8_subprocess():
                          capture_output=True, text=True, timeout=1200)
     assert out.returncode == 0, \
         f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
-    assert out.stdout.count("OK") == 7
+    assert out.stdout.count("OK") == 8
 
 
 # ---------------------------------------------------------------------------

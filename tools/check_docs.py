@@ -60,7 +60,9 @@ def check(doc_path: str) -> list:
             refs.add(target.split("#")[0])
         refs.update(m.group(0) for m in _PATH_RE.finditer(line))
         for ref in sorted(refs):
-            if ref and not _exists(ref):
+            # absolute paths point outside the repo (retrieval-set
+            # material like /root/related/...) — not intra-repo refs
+            if ref and not ref.startswith("/") and not _exists(ref):
                 missing.append((lineno, ref))
     return missing
 

@@ -1,0 +1,188 @@
+#!/usr/bin/env python
+"""Kernel-compilability check: no Pallas kernel body may index a
+``pltpu.ANY``-space ref directly.
+
+Mosaic cannot lower a dynamic per-element read of an operand left in
+``memory_space=pltpu.ANY`` (HBM) — everything read from ANY memory has
+to be staged into VMEM scratch with ``pltpu.make_async_copy`` first
+(see ``src/repro/kernels/frontier/kernel.py``, "Staged dist/sigma
+gather").  Interpret mode happily executes the direct gather, so the
+regression only surfaces when someone finally runs the kernel compiled
+on hardware.  This check makes it a CI failure instead:
+
+* every ``pl.pallas_call(...)`` in ``src/repro/kernels/**/kernel.py``
+  is located; its kernel function (possibly ``functools.partial``-
+  wrapped) and its ``in_specs`` / ``grid_spec`` are resolved from the
+  same module's AST;
+* each spec that is a ``pl.BlockSpec(memory_space=pltpu.ANY)`` is
+  mapped to its kernel parameter (scalar-prefetch operands come first
+  under ``PrefetchScalarGridSpec``, then the positional inputs);
+* inside that kernel's body, subscripting such a parameter NAME
+  (``dist_any[src]``, ``dist_any[...]``) is an error.  Attribute
+  chains stay legal: ``dist_any.at[...]`` is how the DMA staging
+  *addresses* the ref, and only ``pltpu.make_async_copy`` consumes it.
+
+Run from anywhere:
+
+    python tools/check_kernels.py
+"""
+from __future__ import annotations
+
+import ast
+import glob
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KERNEL_GLOB = os.path.join(REPO, "src", "repro", "kernels", "**",
+                           "kernel.py")
+
+
+def _call_name(node: ast.AST) -> str:
+    """Dotted name of a call's func: 'pl.pallas_call', 'pltpu.ANY', ..."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_any_blockspec(node: ast.AST) -> bool:
+    """True for ``pl.BlockSpec(..., memory_space=pltpu.ANY)``."""
+    if not (isinstance(node, ast.Call)
+            and _call_name(node.func).endswith("BlockSpec")):
+        return False
+    for kw in node.keywords:
+        if kw.arg == "memory_space" and isinstance(kw.value, ast.Attribute) \
+                and kw.value.attr == "ANY":
+            return True
+    return False
+
+
+def _kernel_fn_name(call: ast.Call) -> "str | None":
+    """The kernel function a pallas_call's first argument names —
+    directly or through ``functools.partial(fn, ...)``."""
+    if not call.args:
+        return None
+    fn = call.args[0]
+    if isinstance(fn, ast.Call) and _call_name(fn.func).endswith("partial"):
+        fn = fn.args[0] if fn.args else None
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def _find_kw(call: ast.Call, name: str):
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve_specs(call: ast.Call, assigns: dict):
+    """(in_specs list, num_scalar_prefetch) for one pallas_call — from
+    its own kwargs or a grid_spec (inline or a local variable holding a
+    ``PrefetchScalarGridSpec(...)`` call)."""
+    in_specs = _find_kw(call, "in_specs")
+    n_prefetch = 0
+    gs = _find_kw(call, "grid_spec")
+    if gs is not None:
+        if isinstance(gs, ast.Name):
+            gs = assigns.get(gs.id)
+        if isinstance(gs, ast.Call):
+            in_specs = _find_kw(gs, "in_specs")
+            np_node = _find_kw(gs, "num_scalar_prefetch")
+            if isinstance(np_node, ast.Constant):
+                n_prefetch = int(np_node.value)
+    if not isinstance(in_specs, ast.List):
+        return [], n_prefetch
+    return in_specs.elts, n_prefetch
+
+
+def _function_defs(tree: ast.Module) -> dict:
+    return {n.name: n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)}
+
+
+def _last_assigns(tree: ast.Module) -> dict:
+    """name -> last assigned value node (module- and function-level)."""
+    out = {}
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    out[t.id] = n.value
+    return out
+
+
+def _check_kernel_body(fn: ast.FunctionDef, any_params: set) -> list:
+    """Direct subscripts of ANY-space parameter NAMES inside ``fn``."""
+    bad = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id in any_params:
+            bad.append((node.lineno, node.value.id))
+    return bad
+
+
+def check_file(path: str) -> list:
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    fns = _function_defs(tree)
+    assigns = _last_assigns(tree)
+    errors = []
+    checked = 0
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _call_name(node.func).endswith("pallas_call")):
+            continue
+        kname = _kernel_fn_name(node)
+        if kname not in fns:
+            continue
+        kernel = fns[kname]
+        specs, n_prefetch = _resolve_specs(node, assigns)
+        params = [a.arg for a in kernel.args.args]
+        any_params = set()
+        for i, spec in enumerate(specs):
+            if _is_any_blockspec(spec):
+                idx = n_prefetch + i
+                if idx < len(params):
+                    any_params.add(params[idx])
+        checked += 1
+        if not any_params:
+            continue
+        for lineno, name in _check_kernel_body(kernel, any_params):
+            errors.append(
+                (lineno, f"kernel '{kname}' indexes ANY-space ref "
+                         f"'{name}' directly (stage it into VMEM with "
+                         f"pltpu.make_async_copy)"))
+    return errors if checked else [
+        (1, "no pallas_call with a resolvable kernel found "
+            "(checker out of sync with the kernel idiom?)")]
+
+
+def main() -> int:
+    files = sorted(glob.glob(KERNEL_GLOB, recursive=True))
+    if not files:
+        print(f"kernel check: no files match {KERNEL_GLOB}")
+        return 1
+    bad = 0
+    for path in files:
+        rel = os.path.relpath(path, REPO)
+        for lineno, msg in check_file(path):
+            print(f"{rel}:{lineno}: {msg}")
+            bad += 1
+    if bad:
+        print(f"kernel check: {bad} error(s)")
+        return 1
+    print(f"kernel check: OK ({len(files)} file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
