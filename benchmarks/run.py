@@ -34,6 +34,13 @@ report).  Laptop-scale stand-ins for the paper's instances:
            <= (1/n_dev + eps) of the replicated CSCLayout), per-level
            frontier-exchange volume, and samples/s of the independent
            vs cooperative sampling lanes.
+  metric_sweep
+           Multi-estimator amortization: samples/s of one forward draw
+           stream folding betweenness+closeness+harmonic together vs
+           three independent single-metric streams (each on its natural
+           stream).  The committed row asserts the >=1.5x amortization
+           acceptance of the estimator substrate; ``--smoke`` runs a
+           seconds-scale version for CI.
   kernels  Pallas-kernel oracle microbenches (XLA path timings; the
            Pallas path is interpret-mode on CPU and not timed).
 
@@ -734,6 +741,109 @@ def bench_partition_sweep(full: bool, interpret: bool = True):
 
 
 # ---------------------------------------------------------------------------
+# Metric sweep: multi-estimator amortization over one BFS stream
+# ---------------------------------------------------------------------------
+
+def run_metric_sweep(scale: int = 9, n_samples: int = 256, reps: int = 3,
+                     smoke: bool = False, write_json: bool = True,
+                     full: bool = False):
+    """Samples/s of the shared-stream multi-estimator fold vs three
+    independent single-metric streams.
+
+    The estimator substrate's amortization claim: a
+    betweenness+closeness+harmonic stack folds all four channels out of
+    ONE forward BFS stream per drawn sample (dryrun's ``while_loops``
+    census shows the identical traversal count), so serving E metrics
+    costs one traversal instead of E.  Here that is measured end-to-end:
+    ``draw_fold`` with the 3-estimator stack, timed against the sum of
+    the three solo streams — each solo on its NATURAL stream
+    (betweenness on the cheaper bidirectional draw, the distance metrics
+    on forward), so the baseline is what three separate runs would
+    actually cost, not a strawman.  Amortization = t(3 solo) / t(multi);
+    the committed (non-smoke) row asserts >= 1.5x.  ``--smoke`` shrinks
+    the instance to a seconds-scale CI gate that checks the lane runs
+    and the stack agrees with the solo streams on tau.
+    """
+    from repro.core import rmat_graph
+    from repro.core.diameter import estimate_diameter
+    from repro.core.engine import draw_fold, resolve_sample_batch_size
+    from repro.core.estimators import get_estimator
+    from repro.core.estimators.base import RunContext
+
+    if smoke:
+        scale, n, reps = 8, 64, 1
+    else:
+        n = 512 if full else n_samples
+    g = rmat_graph(scale, 8, seed=3)
+    vd = int(jax.jit(estimate_diameter)(g).vertex_diameter)
+    ctx = RunContext(g.n_nodes, vd)
+    B = resolve_sample_batch_size(None, g.n_nodes, vd)
+    metrics = ("betweenness", "closeness", "harmonic")
+    ests = {m: get_estimator(m) for m in metrics}
+    print("\n== metric sweep: shared-stream amortization =="
+          + ("  [smoke]" if smoke else ""))
+    print(f"  instance: R-MAT |V|={g.n_nodes} |E|={g.n_edges_undirected}, "
+          f"{n} samples, B={B}, vd={vd}")
+
+    def lane(est_stack, stream):
+        return jax.jit(lambda k: draw_fold(
+            g, k, n, estimators=est_stack, ctx=ctx, stream=stream,
+            batch_size=B))
+
+    key = jax.random.PRNGKey(0)
+    us_multi = _time_call(lane(tuple(ests.values()), "forward"), key,
+                          reps=reps)
+    solo_us = {}
+    for m, e in ests.items():
+        stream = "forward" if e.needs_forward else "bidir"
+        solo_us[m] = _time_call(lane((e,), stream), key, reps=reps)
+        print(f"  solo {m:<12} ({stream:>7}) "
+              f"{n / (solo_us[m] / 1e6):>12,.0f} samples/s")
+    us_indep = sum(solo_us.values())
+    amort = us_indep / us_multi
+    rate_multi = len(metrics) * n / (us_multi / 1e6)
+    print(f"  multi (3 metrics, forward) "
+          f"{rate_multi:>12,.0f} metric-samples/s")
+    print(f"  amortization vs three independent runs: {amort:.2f}x"
+          + ("" if smoke else "  (acceptance: >= 1.5x)"))
+    # tau agreement: the stack consumed exactly the solo sample count
+    _, tau_multi = lane(tuple(ests.values()), "forward")(key)
+    assert int(tau_multi) == n, (int(tau_multi), n)
+    if not smoke:
+        assert amort >= 1.5, f"amortization {amort:.2f}x below 1.5x"
+    emit("metric_sweep.multi", us_multi / n,
+         f"amortization={amort:.2f};metric_samples_per_s={rate_multi:.0f}")
+    for m in metrics:
+        emit(f"metric_sweep.solo.{m}", solo_us[m] / n,
+             f"rate={n / (solo_us[m] / 1e6):.0f}")
+    record = {
+        "section": "metric_sweep",
+        "instance": {"family": "rmat", "n_nodes": g.n_nodes,
+                     "n_edges_undirected": g.n_edges_undirected,
+                     "edge_factor": 8, "seed": 3},
+        "metrics": list(metrics),
+        "n_samples": n, "batch_size": B, "smoke": smoke,
+        "metric": "amortization = sum(t solo streams, each on its "
+                  "natural stream) / t(one forward stream folding all "
+                  "channels); acceptance >= 1.5x on the committed row",
+        "us_per_sample_multi": us_multi / n,
+        "us_per_sample_solo": {m: solo_us[m] / n for m in metrics},
+        "metric_samples_per_s_multi": rate_multi,
+        "amortization_vs_independent": amort,
+        "full": full,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "device": jax.devices()[0].platform,
+    }
+    if write_json and not smoke:
+        _append_bench_record(record)
+    return record
+
+
+def bench_metric_sweep(full: bool, smoke: bool = False):
+    run_metric_sweep(reps=3 if full else 2, smoke=smoke, full=full)
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenches
 # ---------------------------------------------------------------------------
 
@@ -772,7 +882,7 @@ def main():
     ap.add_argument("--full", action="store_true")
     sections = ["table2", "fig2", "fig3", "fig4", "batch_sweep",
                 "node_blocked_sweep", "csc_driver_sweep", "partition_sweep",
-                "kernels"]
+                "metric_sweep", "kernels"]
     ap.add_argument("section", nargs="?", default=None, choices=sections,
                     help="run a single section (same as --only)")
     ap.add_argument("--only", default=None, choices=sections)
@@ -785,6 +895,10 @@ def main():
                       help="compile the Pallas kernels (Mosaic; requires "
                            "real TPU hardware) — recorded per "
                            "BENCH_sampling.json row as pallas_mode")
+    ap.add_argument("--smoke", action="store_true",
+                    help="metric_sweep only: seconds-scale CI gate "
+                         "(tiny instance, no BENCH row, no >=1.5x "
+                         "assertion)")
     args = ap.parse_args()
     if args.only and args.section and args.only != args.section:
         ap.error(f"conflicting sections: positional '{args.section}' "
@@ -797,6 +911,7 @@ def main():
         "node_blocked_sweep": bench_node_blocked_sweep,
         "csc_driver_sweep": bench_csc_driver_sweep,
         "partition_sweep": bench_partition_sweep,
+        "metric_sweep": bench_metric_sweep,
         "kernels": bench_kernels,
     }
     takes_mode = {"node_blocked_sweep", "partition_sweep"}
@@ -805,6 +920,8 @@ def main():
             continue
         if name in takes_mode:
             fn(args.full, interpret=args.interpret)
+        elif name == "metric_sweep":
+            fn(args.full, smoke=args.smoke)
         else:
             fn(args.full)
     print("\n== CSV summary ==")

@@ -32,7 +32,20 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+__all__ = ["save", "restore", "latest_step", "CheckpointManager",
+           "CheckpointSchemaError"]
+
+
+class CheckpointSchemaError(ValueError):
+    """The checkpoint's logical layout does not match the restorer's.
+
+    Raised BEFORE any leaf-count/shape assertion: a schema mismatch is a
+    *format* incompatibility (e.g. a pre-estimator-substrate checkpoint
+    restored by the plugin engine, or a run restarted with a different
+    metric set), and the remedy — restart the run or point at a matching
+    directory — is different from a shape bug, so the error must say so
+    instead of dying inside an opaque ``assert``.
+    """
 
 
 def _leaf_paths(tree):
@@ -41,9 +54,15 @@ def _leaf_paths(tree):
 
 
 def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
-         keep: int = 3, blocking: bool = True):
+         keep: int = 3, blocking: bool = True,
+         schema: Optional[str] = None):
     """Write one checkpoint; returns the publish thread (joined if
-    ``blocking``)."""
+    ``blocking``).
+
+    ``schema`` (optional) stamps the manifest with a caller-chosen
+    layout identifier (e.g. the adaptive engine's frame-schema string);
+    a later :func:`restore` with ``expect_schema=`` then fails loudly on
+    any mismatch instead of tripping shape asserts."""
     os.makedirs(root, exist_ok=True)
     tmp = os.path.join(root, f"step_{step:08d}.tmp")
     final = os.path.join(root, f"step_{step:08d}")
@@ -65,6 +84,8 @@ def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
             "shapes": [list(a.shape) for a in host_leaves],
             "metadata": metadata or {},
         }
+        if schema is not None:
+            manifest["schema"] = schema
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -105,12 +126,17 @@ def latest_step(root: str) -> Optional[int]:
 
 
 def restore(root: str, tree_like, *, step: Optional[int] = None,
-            shardings=None):
+            shardings=None, expect_schema: Optional[str] = None):
     """Restore into the structure of ``tree_like``.
 
     ``shardings``: optional pytree of Sharding objects — the elastic
     path: arrays are placed onto whatever mesh the *restoring* job runs,
     regardless of the mesh that wrote them.
+
+    ``expect_schema``: when given, the manifest's ``schema`` stamp must
+    match it exactly; a mismatch (or an unstamped checkpoint written by
+    a pre-schema version of the caller) raises
+    :class:`CheckpointSchemaError` *before* any leaf/shape check.
     Returns (tree, step, metadata).
     """
     if step is None:
@@ -120,6 +146,18 @@ def restore(root: str, tree_like, *, step: Optional[int] = None,
     d = os.path.join(root, f"step_{step:08d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
+    if expect_schema is not None:
+        found = manifest.get("schema")
+        if found != expect_schema:
+            detail = (f"it is stamped {found!r}" if found is not None else
+                      "it carries no schema stamp (written by a pre-schema "
+                      "version of this code)")
+            raise CheckpointSchemaError(
+                f"checkpoint {d} does not match the expected state layout: "
+                f"restorer expects schema {expect_schema!r} but {detail}. "
+                "The stored run state is structurally incompatible — "
+                "restart the run fresh (or point checkpoint_dir at a "
+                "directory written with the same schema).")
     leaves, treedef = _leaf_paths(tree_like)
     assert manifest["n_leaves"] == len(leaves), (
         f"checkpoint has {manifest['n_leaves']} leaves, "
@@ -144,10 +182,12 @@ def restore(root: str, tree_like, *, step: Optional[int] = None,
 class CheckpointManager:
     """Keep-last-k manager with async publishing and restart recovery."""
 
-    def __init__(self, root: str, keep: int = 3, save_every: int = 100):
+    def __init__(self, root: str, keep: int = 3, save_every: int = 100,
+                 schema: Optional[str] = None):
         self.root = root
         self.keep = keep
         self.save_every = save_every
+        self.schema = schema
         self._pending: Optional[threading.Thread] = None
 
     def maybe_save(self, step: int, tree, metadata=None):
@@ -155,7 +195,8 @@ class CheckpointManager:
             return False
         self.wait()
         self._pending = save(self.root, step, tree, metadata=metadata,
-                             keep=self.keep, blocking=False)
+                             keep=self.keep, blocking=False,
+                             schema=self.schema)
         return True
 
     def wait(self):
@@ -164,7 +205,10 @@ class CheckpointManager:
             self._pending = None
 
     def restore_or_none(self, tree_like, shardings=None):
+        # a schema mismatch propagates (CheckpointSchemaError): restoring
+        # an incompatible layout must be loud, never a silent fresh start
         try:
-            return restore(self.root, tree_like, shardings=shardings)
+            return restore(self.root, tree_like, shardings=shardings,
+                           expect_schema=self.schema)
         except FileNotFoundError:
             return None

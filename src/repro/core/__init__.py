@@ -17,10 +17,16 @@ from .diameter import (DiameterEstimate, estimate_diameter,
                        estimate_diameter_sharded)
 from .kadabra import (KadabraParams, calibrate_deltas, check_stop,
                       compute_omega, f_term, g_term)
-from .sampler import (PathSample, sample_batch, sample_pair, sample_pairs,
-                      sample_path, sample_path_batched,
-                      sample_path_batched_sharded)
-from .epoch import StateFrame, epoch_length, zero_frame
+from .sampler import (ForwardSample, PathSample, sample_batch, sample_pair,
+                      sample_pairs, sample_path, sample_path_batched,
+                      sample_path_batched_sharded,
+                      sample_path_forward_batched,
+                      sample_path_forward_batched_sharded)
+from .epoch import StateFrame, epoch_length, frame_schema_id, zero_frame
+from .estimators import (Estimator, MetricReport, available_metrics,
+                         get_estimator)
+from .engine import (AdaptiveRunResult, EngineEpochStats, run_adaptive,
+                     run_fixed)
 from .adaptive import (AdaptiveConfig, BetweennessResult, EpochStats,
                        run_fixed_sampling, run_kadabra)
 from . import distributed
@@ -39,9 +45,13 @@ __all__ = [
     "DiameterEstimate", "estimate_diameter", "estimate_diameter_sharded",
     "KadabraParams", "calibrate_deltas", "check_stop", "compute_omega",
     "f_term", "g_term",
-    "PathSample", "sample_batch", "sample_pair", "sample_pairs",
-    "sample_path", "sample_path_batched", "sample_path_batched_sharded",
-    "StateFrame", "epoch_length", "zero_frame",
+    "ForwardSample", "PathSample", "sample_batch", "sample_pair",
+    "sample_pairs", "sample_path", "sample_path_batched",
+    "sample_path_batched_sharded", "sample_path_forward_batched",
+    "sample_path_forward_batched_sharded",
+    "StateFrame", "epoch_length", "frame_schema_id", "zero_frame",
+    "Estimator", "MetricReport", "available_metrics", "get_estimator",
+    "AdaptiveRunResult", "EngineEpochStats", "run_adaptive", "run_fixed",
     "AdaptiveConfig", "BetweennessResult", "EpochStats",
     "run_fixed_sampling", "run_kadabra", "distributed",
 ]

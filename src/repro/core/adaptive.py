@@ -1,118 +1,42 @@
-"""The adaptive sampling engine (paper's Algorithm 2 on a TPU mesh).
+"""Betweenness entry points over the estimator-generic adaptive engine.
 
-Drives the full KADABRA pipeline:
+PR 1-6 grew three hard-wired betweenness drivers here (single-device,
+SPMD, vertex-sharded).  They are gone: the phases, the epoch loop, the
+aggregation strategies, checkpointing and all three execution lanes now
+live ONCE in ``repro.core.engine``, generic over the estimator plugins
+of ``repro.core.estimators`` — betweenness is just the C=1 plugin.
+What remains here is the historical public surface:
 
-  phase 1  diameter        — double-sweep BFS bounds (repro.core.diameter)
-  phase 2  calibration     — fixed number of samples, *blocking* reduce
-                             (paper: MPI_Reduce), then the per-vertex
-                             delta allocation (repro.core.kadabra)
-  phase 3  adaptive loop   — per epoch: aggregate the previous frame
-                             hierarchically while sampling the next one,
-                             then evaluate the stopping condition on the
-                             aggregated consistent snapshot.
+  * :func:`run_kadabra` — the paper's parallel KADABRA, now a thin
+    mapping of the engine's multi-metric result onto the classic
+    :class:`BetweennessResult`.  Bit-for-bit identical to the
+    pre-refactor drivers on all three lanes at a fixed seed (pinned by
+    tests/test_estimators.py);
+  * :func:`run_fixed_sampling` — the non-adaptive baseline, routed
+    through the same engine;
+  * re-exports (``AdaptiveConfig``, ``make_epoch_step_*``, ``_pad_len``,
+    …) so PR 1-6 call sites and the dry-run keep importing from here.
 
-The engine is generic over the *sampler*: betweenness plugs in
-``repro.core.sampler.sample_batch``; any adaptive sampling algorithm whose
-state is a (counts, tau) frame and whose stop rule reads an aggregated
-frame fits the same driver (the paper's closing claim).  The stopping rule
-is a callback as well.
-
-Three execution paths share the epoch logic:
-
-  * ``mesh=None`` — single-device (the "shared-memory competitor" lane,
-    used by unit tests and the laptop benchmarks);
-  * ``mesh=...``  — SPMD via shard_map; frames carry a leading device
-    axis sharded over all mesh axes; aggregation is the hierarchical
-    reduce of repro.core.distributed;
-  * a :class:`repro.core.partition.PartitionedGraph` + ``mesh=...`` —
-    the vertex-sharded lane (DESIGN.md §Partitioning): the graph's
-    frontier structure is partitioned over the mesh and every phase
-    samples COOPERATIVELY (one collective BFS batch at a time), so the
-    per-device graph memory is O(E / n_dev) and the frames come back
-    replicated without any reduction collective.
-
-``checkpoint_dir=``/``checkpoint_every=`` add mid-run persistence and
-bit-identical resume to all three lanes (the elastic-restart story for
-long billion-edge runs).
+For closeness/harmonic — or several metrics amortized over one BFS
+stream — call ``repro.core.engine.run_adaptive`` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.compat import shard_map
-from . import distributed as dist
-from .diameter import estimate_diameter, estimate_diameter_sharded
-from .epoch import StateFrame, epoch_length, zero_frame
-from .graph import Graph
-from .kadabra import (KadabraParams, calibrate_deltas, check_stop,
-                      compute_omega)
-from .partition import PartitionedGraph
-from .sampler import sample_batch
+# re-exports: PR 1-6 call sites (tests, dry-run, benchmarks) import the
+# engine's building blocks from this module — keep that surface stable
+from .engine import (DEFAULT_SAMPLE_BATCH_SIZE, AdaptiveConfig,  # noqa: F401
+                     AdaptiveRunResult, _pad_len, make_agg_fn,
+                     make_epoch_step_sharded, make_epoch_step_spmd,
+                     resolve_sample_batch_size, run_adaptive, run_fixed)
 
 __all__ = ["DEFAULT_SAMPLE_BATCH_SIZE", "AdaptiveConfig",
            "BetweennessResult", "EpochStats", "resolve_sample_batch_size",
            "run_kadabra", "run_fixed_sampling"]
-
-# Fallback B of the batched sampling lane (concurrent samples per BFS
-# round) for entry points that run without a diameter estimate (the
-# fixed-sampling baseline, the dry-run, the benchmarks).  run_kadabra
-# itself resolves B per instance — see resolve_sample_batch_size.
-DEFAULT_SAMPLE_BATCH_SIZE = 16
-
-
-def resolve_sample_batch_size(requested, n_nodes: int,
-                              vertex_diameter: int) -> int:
-    """Pick the concurrent-sample width B for an instance.
-
-    An explicitly ``requested`` B always wins.  Left as ``None`` it is
-    derived from the phase-1 diameter estimate (free by the time
-    sampling starts) and V: per-sample BFS depth tracks the diameter,
-    and the batched lane masks a sample's column once its own search
-    finishes while the rest of the batch keeps relaxing — so wide
-    batches only pay off when path lengths are short and uniform.
-    Low-diameter instances (R-MAT/social: VD within ~4 log2 V) run wide
-    (B=64, edge-stream amortization maxed); mid-range runs the default
-    16; high-diameter instances (grids/roads: VD beyond ~12 log2 V,
-    widely varying path lengths within a batch) drop to 8 to bound the
-    masked-round waste.  The batch_sweep/csc_driver_sweep sections of
-    ``benchmarks/run.py`` are the empirical basis (BENCH_sampling.json).
-    """
-    if requested is not None:
-        return max(1, int(requested))
-    logv = max(1.0, float(np.log2(max(n_nodes, 2))))
-    ratio = float(vertex_diameter) / logv
-    if ratio <= 4.0:
-        return 64
-    if ratio <= 12.0:
-        return DEFAULT_SAMPLE_BATCH_SIZE
-    return 8
-
-
-@dataclasses.dataclass(frozen=True)
-class AdaptiveConfig:
-    eps: float = 0.01
-    delta: float = 0.1
-    calib_samples_per_device: int = 32
-    n0_base: int = 1000
-    n0_exponent: float = 1.33
-    max_epochs: int = 10_000
-    diameter_sweeps: int = 2
-    aggregation: str = "hierarchical"  # "hierarchical" | "flat" | "root"
-    # Concurrent samples per batched BFS round: each device draws
-    # ceil(n0 / B) rounds of B samples sharing one edge stream per BFS
-    # level (the intra-device analogue of the paper's thread parallelism).
-    # None = resolve per instance from the diameter estimate and V at
-    # run time (resolve_sample_batch_size); an explicit value always
-    # wins.  1 = the paper's sequential per-thread lane.
-    sample_batch_size: Optional[int] = None
 
 
 class EpochStats(NamedTuple):
@@ -134,595 +58,7 @@ class BetweennessResult(NamedTuple):
     phase_seconds: dict         # diameter / calibration / sampling
 
 
-def _pad_len(v: int, n_dev: int) -> int:
-    """counts length: V+1 (sink) padded so psum_scatter tiles evenly."""
-    base = v + 1
-    return ((base + n_dev - 1) // n_dev) * n_dev
-
-
-def _make_params(graph, cfg, vd, btilde0) -> KadabraParams:
-    omega = compute_omega(vd, cfg.eps, cfg.delta)
-    lil, liu, _tau_star = calibrate_deltas(btilde0, cfg.eps, cfg.delta, omega)
-    return KadabraParams(cfg.eps, cfg.delta, omega, lil, liu)
-
-
-def _check(agg: StateFrame, params: KadabraParams, n_nodes: int):
-    return check_stop(agg.counts[:n_nodes], agg.tau, params)
-
-
-class _EpochCheckpointer:
-    """Mid-run persistence of the adaptive loop's state (the elastic
-    restart of long billion-edge runs): every ``checkpoint_every``
-    epochs the tuple ``(agg counts, agg tau, frame counts, frame tau,
-    surplus counts, surplus tau, rng key)`` is published atomically via
-    ``repro.checkpoint.store.CheckpointManager``; a fresh ``run_kadabra``
-    pointed at the same directory re-derives the deterministic phases
-    1-2 (diameter + calibration replay bit-for-bit from the run key) and
-    resumes the epoch loop from ``latest_step`` — the resumed trajectory
-    is identical to the uninterrupted one because the loop key is saved
-    *after* the epoch's split.  ``shardings`` (optional pytree matching
-    the state tuple) re-places the restored host arrays onto whatever
-    mesh the restoring job runs (the store's elastic-restore path; the
-    frame's leading device axis must still match the new mesh size).
-    """
-
-    def __init__(self, checkpoint_dir, checkpoint_every: int,
-                 shardings=None):
-        self.mgr = None
-        self.shardings = shardings
-        if checkpoint_dir:
-            from repro.checkpoint.store import CheckpointManager
-            self.mgr = CheckpointManager(checkpoint_dir, keep=3,
-                                         save_every=max(1, checkpoint_every))
-
-    # The state tuple's field order lives ONLY in the two methods below:
-    # every lane packs/unpacks through them, so a layout change cannot
-    # desynchronize save and restore (equal-shape counts/tau leaves
-    # would otherwise mix silently).
-
-    def restore_state(self, agg, frame, sur_counts, sur_tau, key):
-        """-> (agg, frame, sur_counts, sur_tau, key, epoch, done): the
-        latest checkpoint when one exists, the passed-in templates
-        (epoch 0, not done) otherwise.  ``agg``/``frame`` are
-        StateFrames.  ``done`` short-circuits the epoch loop when the
-        checkpointed run had already converged — resuming a completed
-        run must re-flush the same state, not sample extra epochs."""
-        fresh = (agg, frame, sur_counts, sur_tau, key, 0, False)
-        if self.mgr is None:
-            return fresh
-        out = self.mgr.restore_or_none(
-            (agg.counts, agg.tau, frame.counts, frame.tau, sur_counts,
-             sur_tau, key), shardings=self.shardings)
-        if out is None:
-            return fresh
-        (ac, at, fc, ft, sc, st, k), step, meta = out
-        return (StateFrame(ac, at), StateFrame(fc, ft), sc, st, k,
-                int(meta.get("epoch", step)), bool(meta.get("done", False)))
-
-    def save_state(self, epoch: int, agg, frame, sur_counts, sur_tau, key,
-                   done: bool = False):
-        if self.mgr is not None:
-            self.mgr.maybe_save(
-                epoch, (agg.counts, agg.tau, frame.counts, frame.tau,
-                        sur_counts, sur_tau, key),
-                metadata={"epoch": epoch, "done": bool(done)})
-
-    def wait(self):
-        if self.mgr is not None:
-            self.mgr.wait()
-
-
-# ---------------------------------------------------------------------------
-# Single-device lane
-# ---------------------------------------------------------------------------
-
-def _run_single(graph: Graph, cfg: AdaptiveConfig, key,
-                ckpt: Optional[_EpochCheckpointer] = None
-                ) -> BetweennessResult:
-    v_pad = _pad_len(graph.n_nodes, 1)
-    t0 = time.perf_counter()
-    diam = jax.jit(partial(estimate_diameter, n_sweeps=cfg.diameter_sweeps))(
-        graph)
-    vd = int(diam.vertex_diameter)
-    t_diam = time.perf_counter() - t0
-    bsz = resolve_sample_batch_size(cfg.sample_batch_size, graph.n_nodes, vd)
-
-    t0 = time.perf_counter()
-    key, k_cal = jax.random.split(key)
-    counts0, tau0 = jax.jit(partial(sample_batch,
-                                    n_samples=cfg.calib_samples_per_device,
-                                    batch_size=bsz))(
-        graph, k_cal)
-    btilde0 = (counts0[: graph.n_nodes]
-               / jnp.maximum(tau0.astype(jnp.float32), 1.0))
-    params = jax.jit(partial(_make_params, cfg=cfg))(graph, vd=vd,
-                                                     btilde0=btilde0)
-    t_cal = time.perf_counter() - t0
-
-    n0 = epoch_length(1, base=cfg.n0_base, exponent=cfg.n0_exponent)
-    v1 = graph.n_nodes + 1
-
-    @jax.jit
-    def epoch_step(agg_counts, agg_tau, frame_counts, frame_tau,
-                   sur_counts, sur_tau, k):
-        agg_counts = agg_counts + frame_counts
-        agg_tau = agg_tau + frame_tau
-        # surplus reuse: the masked tail of the previous epoch's last
-        # round seeds this epoch's frame (valid i.i.d. samples; tau
-        # counts them, so the estimator stays exact)
-        (c, t), (sc, st) = sample_batch(graph, k, n0, batch_size=bsz,
-                                        carry=(sur_counts, sur_tau),
-                                        return_carry=True)
-        new_counts = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
-        agg = StateFrame(agg_counts, agg_tau)
-        done, mf, mg = _check(agg, params, graph.n_nodes)
-        return agg_counts, agg_tau, new_counts, t, sc, st, done, mf, mg
-
-    agg = zero_frame(v_pad)
-    frame = zero_frame(v_pad)
-    sur_counts = jnp.zeros((v1,), jnp.float32)
-    sur_tau = jnp.int32(0)
-    # seed the pipeline: the calibration samples are *not* reused for the
-    # adaptive estimate (they informed the deltas; reusing them would break
-    # the martingale argument) — matching NetworKit's implementation.
-    stats = []
-    t0 = time.perf_counter()
-    done = False
-    epoch = 0
-    k = key
-    if ckpt is not None:
-        agg, frame, sur_counts, sur_tau, k, epoch, done = ckpt.restore_state(
-            agg, frame, sur_counts, sur_tau, k)
-    while not done and epoch < cfg.max_epochs:
-        te = time.perf_counter()
-        k, ke = jax.random.split(k)
-        ac, at, fc, ft, sur_counts, sur_tau, done_dev, mf, mg = epoch_step(
-            agg.counts, agg.tau, frame.counts, frame.tau,
-            sur_counts, sur_tau, ke)
-        agg = StateFrame(ac, at)
-        frame = StateFrame(fc, ft)
-        done = bool(done_dev)
-        epoch += 1
-        stats.append(EpochStats(epoch, int(agg.tau), float(mf), float(mg),
-                                time.perf_counter() - te))
-        if ckpt is not None:
-            ckpt.save_state(epoch, agg, frame, sur_counts, sur_tau, k,
-                            done=done)
-    if ckpt is not None:
-        ckpt.wait()
-    # final flush: the frame sampled during the last epoch still counts,
-    # and so does its surplus tail (computed, valid, tau-counted)
-    agg = agg + frame
-    agg = StateFrame(
-        agg.counts.at[:v1].add(sur_counts), agg.tau + sur_tau)
-    t_samp = time.perf_counter() - t0
-
-    tau = int(agg.tau)
-    btilde = np.asarray(agg.counts[: graph.n_nodes]) / max(tau, 1)
-    return BetweennessResult(
-        btilde, tau, epoch, bool(done), float(params.omega), vd, stats,
-        {"diameter": t_diam, "calibration": t_cal, "sampling": t_samp})
-
-
-# ---------------------------------------------------------------------------
-# SPMD lane (shard_map over the production mesh)
-# ---------------------------------------------------------------------------
-
-def _run_spmd(graph: Graph, cfg: AdaptiveConfig, key, mesh: Mesh,
-              ckpt: Optional[_EpochCheckpointer] = None
-              ) -> BetweennessResult:
-    all_axes = tuple(mesh.axis_names)
-    n_dev = int(np.prod(mesh.devices.shape))
-    local_axes, global_axes = dist.sampler_axes(mesh)
-    v_pad = _pad_len(graph.n_nodes, n_dev)
-
-    agg_fn = make_agg_fn(mesh, cfg.aggregation)
-
-    rep = P()
-    frame_spec = P(all_axes, None)
-    key_spec = P(all_axes)
-    gspec = jax.tree.map(lambda _: rep, graph)
-
-    t0 = time.perf_counter()
-    diam = jax.jit(partial(estimate_diameter, n_sweeps=cfg.diameter_sweeps))(
-        graph)
-    vd = int(diam.vertex_diameter)
-    t_diam = time.perf_counter() - t0
-    bsz = resolve_sample_batch_size(cfg.sample_batch_size, graph.n_nodes, vd)
-
-    # ---- calibration: pleasingly parallel sampling + blocking reduce ----
-    @partial(shard_map, mesh=mesh, in_specs=(gspec, key_spec),
-             out_specs=(rep, rep), check_vma=False)
-    def calib_step(g, keys):
-        c, t = sample_batch(g, keys[0], cfg.calib_samples_per_device,
-                            batch_size=bsz)
-        cp = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
-        return dist.flat_allreduce(cp, all_axes), dist.flat_allreduce(
-            t, all_axes)
-
-    t0 = time.perf_counter()
-    key, k_cal = jax.random.split(key)
-    dev_keys = jax.random.split(k_cal, n_dev)
-    counts0, tau0 = jax.jit(calib_step)(graph, dev_keys)
-    btilde0 = (counts0[: graph.n_nodes]
-               / jnp.maximum(tau0.astype(jnp.float32), 1.0))
-    params = jax.jit(partial(_make_params, cfg=cfg))(graph, vd=vd,
-                                                     btilde0=btilde0)
-    t_cal = time.perf_counter() - t0
-
-    n0 = epoch_length(n_dev, base=cfg.n0_base, exponent=cfg.n0_exponent)
-
-    # ---- adaptive epochs --------------------------------------------------
-    epoch_step = make_epoch_step_spmd(mesh, cfg.aggregation,
-                                      graph.n_nodes, v_pad, n0,
-                                      batch_size=bsz)
-    epoch_jit = jax.jit(epoch_step)
-
-    v1 = graph.n_nodes + 1
-    zero_counts = jnp.zeros((v_pad,), jnp.float32)
-    agg_counts, agg_tau = zero_counts, jnp.int32(0)
-    frame_counts = jax.device_put(
-        jnp.zeros((n_dev, v_pad), jnp.float32),
-        NamedSharding(mesh, frame_spec))
-    frame_tau = jnp.int32(0)
-    # per-device surplus frames (the masked tail of each device's last
-    # sampling round, reused as the seed of its next epoch's frame)
-    sur_counts = jax.device_put(
-        jnp.zeros((n_dev, v1), jnp.float32),
-        NamedSharding(mesh, frame_spec))
-    sur_tau = jnp.int32(0)
-
-    stats = []
-    t0 = time.perf_counter()
-    done = False
-    epoch = 0
-    k = key
-    if ckpt is not None:
-        # shardings follow the restore_state tuple order: (agg counts,
-        # agg tau, frame counts, frame tau, surplus counts, surplus
-        # tau, key) — frames sharded, everything else replicated
-        ckpt.shardings = (
-            NamedSharding(mesh, rep), NamedSharding(mesh, rep),
-            NamedSharding(mesh, frame_spec), NamedSharding(mesh, rep),
-            NamedSharding(mesh, frame_spec), NamedSharding(mesh, rep),
-            NamedSharding(mesh, rep))
-        (aggf, framef, sur_counts, sur_tau, k, epoch,
-         done) = ckpt.restore_state(
-            StateFrame(agg_counts, agg_tau),
-            StateFrame(frame_counts, frame_tau), sur_counts, sur_tau, k)
-        agg_counts, agg_tau = aggf
-        frame_counts, frame_tau = framef
-    while not done and epoch < cfg.max_epochs:
-        te = time.perf_counter()
-        k, ke = jax.random.split(k)
-        dev_keys = jax.device_put(jax.random.split(ke, n_dev),
-                                  NamedSharding(mesh, key_spec))
-        (agg_counts, agg_tau, frame_counts, frame_tau, sur_counts, sur_tau,
-         done_dev, mf, mg) = \
-            epoch_jit(graph, params, agg_counts, agg_tau, frame_counts,
-                      frame_tau, sur_counts, sur_tau, dev_keys)
-        done = bool(done_dev)
-        epoch += 1
-        stats.append(EpochStats(epoch, int(agg_tau), float(mf), float(mg),
-                                time.perf_counter() - te))
-        if ckpt is not None:
-            ckpt.save_state(epoch, StateFrame(agg_counts, agg_tau),
-                            StateFrame(frame_counts, frame_tau),
-                            sur_counts, sur_tau, k, done=done)
-    if ckpt is not None:
-        ckpt.wait()
-
-    # final flush of the in-flight frame + the last surplus tail (both
-    # computed and tau-counted; dropping them would only waste samples)
-    @partial(shard_map, mesh=mesh,
-             in_specs=(frame_spec, rep, frame_spec, rep),
-             out_specs=(rep, rep), check_vma=False)
-    def flush(frame_counts, frame_tau, sur_counts, sur_tau):
-        c = frame_counts[0].at[:v1].add(sur_counts[0])
-        return (agg_fn(c),
-                dist.flat_allreduce(frame_tau + sur_tau, all_axes))
-
-    inc_c, inc_t = jax.jit(flush)(frame_counts, frame_tau,
-                                  sur_counts, sur_tau)
-    agg_counts = agg_counts + inc_c
-    agg_tau = agg_tau + inc_t
-    t_samp = time.perf_counter() - t0
-
-    tau = int(agg_tau)
-    btilde = np.asarray(agg_counts[: graph.n_nodes]) / max(tau, 1)
-    return BetweennessResult(
-        btilde, tau, epoch, bool(done), float(params.omega), vd, stats,
-        {"diameter": t_diam, "calibration": t_cal, "sampling": t_samp})
-
-
-def make_agg_fn(mesh, aggregation: str):
-    all_axes = tuple(mesh.axis_names)
-    local_axes, global_axes = dist.sampler_axes(mesh)
-    if aggregation == "hierarchical":
-        return lambda x: dist.hierarchical_allreduce(x, local_axes,
-                                                     global_axes)
-    if aggregation == "flat":
-        return lambda x: dist.flat_allreduce(x, all_axes)
-    return lambda x: dist.reduce_to_root_and_broadcast(x, all_axes)
-
-
-def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
-                         n0: int, batch_size: int = 1):
-    """One jit-able SPMD epoch (paper Alg. 2): aggregate the previous
-    frame (collectives) while sampling the next one — ceil(n0 /
-    batch_size) batched BFS rounds per device — then evaluate the stop
-    rule on the consistent snapshot.  Exposed at module level so the
-    multi-pod dry-run can .lower()/.compile() it on the production mesh
-    and extract its roofline terms (DESIGN.md §Perf, cell #3).
-
-    Each device's masked surplus tail (ceil(n0/B)*B - n0 extra i.i.d.
-    samples of its last round) is carried into its next epoch's frame
-    instead of dropped — the (n_dev, V+1) ``sur_counts`` / scalar
-    ``sur_tau`` loop state below.
-
-    Signature of the returned fn:
-      (graph, params: KadabraParams, agg_counts (V_pad,), agg_tau (),
-       frame_counts (n_dev, V_pad) sharded, frame_tau (),
-       sur_counts (n_dev, V+1) sharded, sur_tau (), keys (n_dev, 2))
-      -> (agg_counts, agg_tau, new_frame, new_tau, new_sur_counts,
-          new_sur_tau, done, max_f, max_g)
-    """
-    all_axes = tuple(mesh.axis_names)
-    agg_fn = make_agg_fn(mesh, aggregation)
-    rep = P()
-    frame_spec = P(all_axes, None)
-    key_spec = P(all_axes)
-
-    def epoch_step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
-                   sur_counts, sur_tau, keys):
-        gspec = jax.tree.map(lambda _: rep, g)
-        pspec = jax.tree.map(lambda _: rep, params)
-
-        @partial(shard_map, mesh=mesh,
-                 in_specs=(gspec, pspec, rep, rep, frame_spec, rep,
-                           frame_spec, rep, key_spec),
-                 out_specs=(rep, rep, frame_spec, rep, frame_spec, rep,
-                            rep, rep, rep),
-                 check_vma=False)
-        def _step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
-                  sur_counts, sur_tau, keys):
-            # 1. hand the previous frame to the (async) reduction
-            inc_counts = agg_fn(frame_counts[0])
-            inc_tau = dist.flat_allreduce(frame_tau, all_axes)
-            # 2. sample the next frame — no data dependency on the
-            #    collective, so the scheduler overlaps it (paper Alg. 2,
-            #    lines 15/21/27); the previous surplus tail seeds it,
-            #    this round's tail comes back as the next carry (the
-            #    surplus sample count is the same on every device, so
-            #    new_sur_tau stays a replicated scalar)
-            (c, t), (sc, st) = sample_batch(g, keys[0], n0,
-                                            batch_size=batch_size,
-                                            carry=(sur_counts[0], sur_tau),
-                                            return_carry=True)
-            new_counts = jnp.zeros((1, v_pad),
-                                   jnp.float32).at[0, : c.shape[0]].set(c)
-            new_sur = sc[None, :]
-            # 3. thread-0-equivalent: stop rule on the consistent snapshot
-            agg_counts = agg_counts + inc_counts
-            agg_tau = agg_tau + inc_tau
-            done, mf, mg = _check(StateFrame(agg_counts, agg_tau), params,
-                                  n_nodes)
-            return (agg_counts, agg_tau, new_counts, t, new_sur, st,
-                    done, mf, mg)
-
-        return _step(g, params, agg_counts, agg_tau, frame_counts,
-                     frame_tau, sur_counts, sur_tau, keys)
-
-    return epoch_step
-
-
-# ---------------------------------------------------------------------------
-# Sharded lane (vertex-partitioned graph over the mesh)
-# ---------------------------------------------------------------------------
-
-def make_epoch_step_sharded(mesh, n_nodes: int, v_pad: int, n0: int,
-                            batch_size: int = 1):
-    """One jit-able COOPERATIVE epoch on a :class:`PartitionedGraph`.
-
-    The graph is sharded over the whole mesh, so the mesh advances one
-    batch of B samples per BFS round *collectively* (the
-    bitmap-scheduled frontier exchange inside ``repro.core.bfs``,
-    governed by the partition's static ``exchange_budget`` — the epoch
-    lane picks it up transparently through the shared BFS drivers)
-    instead of sampling independently per device: the frame is
-    replicated by construction
-    and folds into the aggregate without any reduction collective — the
-    paper's epoch double-buffering survives purely as the dataflow that
-    lets the scheduler overlap the stop-rule evaluation with the next
-    frame's sampling.  ``n0`` is samples per epoch for the WHOLE mesh
-    (``epoch_length(1)``: the cooperative mesh is one fast sampler).
-
-    Signature of the returned fn (all frames replicated):
-      (pg, params, agg_counts (V_pad,), agg_tau (), frame_counts
-       (V_pad,), frame_tau (), sur_counts (V+1,), sur_tau (),
-       key (2,) replicated)
-      -> (agg_counts, agg_tau, new_frame, new_tau, new_sur_counts,
-          new_sur_tau, done, max_f, max_g)
-
-    Exposed at module level so the multi-pod dry-run can
-    .lower()/.compile() it on the production mesh and read the
-    per-level frontier-exchange volume off its optimized HLO
-    (DESIGN.md §Partitioning).
-    """
-    all_axes = tuple(mesh.axis_names)
-    rep = P()
-
-    def epoch_step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
-                   sur_counts, sur_tau, k):
-        gspec = g.partition_spec(all_axes)
-        pspec = jax.tree.map(lambda _: rep, params)
-
-        @partial(shard_map, mesh=mesh,
-                 in_specs=(gspec, pspec, rep, rep, rep, rep, rep, rep, rep),
-                 out_specs=(rep,) * 9, check_vma=False)
-        def _step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
-                  sur_counts, sur_tau, k):
-            # 1. previous frame -> aggregate (replicated: no collective)
-            agg_counts = agg_counts + frame_counts
-            agg_tau = agg_tau + frame_tau
-            # 2. cooperatively sample the next frame over the sharded
-            #    graph; the previous surplus tail seeds it
-            (c, t), (sc, st) = sample_batch(g, k, n0,
-                                            batch_size=batch_size,
-                                            carry=(sur_counts, sur_tau),
-                                            return_carry=True,
-                                            axis=all_axes)
-            new_counts = jnp.zeros((v_pad,),
-                                   jnp.float32).at[: c.shape[0]].set(c)
-            # 3. stop rule on the consistent snapshot
-            done, mf, mg = _check(StateFrame(agg_counts, agg_tau), params,
-                                  n_nodes)
-            return (agg_counts, agg_tau, new_counts, t, sc, st,
-                    done, mf, mg)
-
-        return _step(g, params, agg_counts, agg_tau, frame_counts,
-                     frame_tau, sur_counts, sur_tau, k)
-
-    return epoch_step
-
-
-def _run_spmd_sharded(pg: PartitionedGraph, cfg: AdaptiveConfig, key,
-                      mesh: Mesh,
-                      ckpt: Optional[_EpochCheckpointer] = None
-                      ) -> BetweennessResult:
-    """The adaptive loop on a vertex-partitioned graph: every phase
-    (diameter, calibration, epochs) runs the cooperative sharded lane —
-    no device ever materializes the full frontier-lane edge structure.
-    """
-    all_axes = tuple(mesh.axis_names)
-    n_dev = int(np.prod(mesh.devices.shape))
-    if pg.n_shards != n_dev:
-        raise ValueError(
-            f"PartitionedGraph carries {pg.n_shards} shards but the mesh "
-            f"has {n_dev} devices; rebuild with partition_graph(graph, "
-            f"{n_dev})")
-    rep = P()
-    gspec = pg.partition_spec(all_axes)
-    v_pad = _pad_len(pg.n_nodes, n_dev)
-    v1 = pg.n_nodes + 1
-
-    # ---- phase 1: sharded double-sweep diameter -------------------------
-    # With exchange_budget="auto" the sweeps double as the budget's
-    # occupancy sample: the second sweep's dist comes back (sharded over
-    # rows, gathered by jit) and its per-level worst-shard chunk counts
-    # feed auto_exchange_budget BEFORE any later phase compiles — the
-    # calibration and epoch lanes then close over the derived budget as
-    # an ordinary static.
-    want_dist = pg.exchange_budget_auto
-
-    @partial(shard_map, mesh=mesh, in_specs=(gspec,),
-             out_specs=(rep, P(all_axes)) if want_dist else rep,
-             check_vma=False)
-    def diam_step(g):
-        est = estimate_diameter_sharded(g, n_sweeps=cfg.diameter_sweeps,
-                                        axis=all_axes,
-                                        return_dist=want_dist)
-        if want_dist:
-            est, d = est
-            return est.vertex_diameter, d
-        return est.vertex_diameter
-
-    t0 = time.perf_counter()
-    if want_dist:
-        from .partition import auto_exchange_budget, max_active_source_chunks
-        vd_dev, dist_dev = jax.jit(diam_step)(pg)
-        vd = int(vd_dev)
-        dist_np = np.asarray(dist_dev)             # (v_pad, n_sweep_seeds)
-        occupancies = []
-        for lvl in range(int(dist_np.max(initial=-1)) + 1):
-            rows = (dist_np == lvl).any(axis=1)
-            if rows.any():
-                occupancies.append(max_active_source_chunks(pg, rows))
-        pg = dataclasses.replace(
-            pg, exchange_budget=auto_exchange_budget(pg, occupancies),
-            exchange_budget_auto=False)
-        gspec = pg.partition_spec(all_axes)        # statics changed
-    else:
-        vd = int(jax.jit(diam_step)(pg))
-    t_diam = time.perf_counter() - t0
-    bsz = resolve_sample_batch_size(cfg.sample_batch_size, pg.n_nodes, vd)
-
-    # ---- phase 2: cooperative calibration (one shared sample stream) ----
-    # calib_samples_per_device keeps its meaning across lanes: the mesh
-    # cooperatively draws what n_dev independent devices would, so
-    # btilde0's noise level matches the replicated SPMD lane at the
-    # same config
-    n_cal = cfg.calib_samples_per_device * n_dev
-
-    @partial(shard_map, mesh=mesh, in_specs=(gspec, rep),
-             out_specs=(rep, rep), check_vma=False)
-    def calib_step(g, k):
-        c, t = sample_batch(g, k, n_cal, batch_size=bsz, axis=all_axes)
-        cp = jnp.zeros((v_pad,), jnp.float32).at[: c.shape[0]].set(c)
-        return cp, t
-
-    t0 = time.perf_counter()
-    key, k_cal = jax.random.split(key)
-    counts0, tau0 = jax.jit(calib_step)(pg, k_cal)
-    btilde0 = (counts0[: pg.n_nodes]
-               / jnp.maximum(tau0.astype(jnp.float32), 1.0))
-    params = jax.jit(partial(_make_params, cfg=cfg))(pg, vd=vd,
-                                                     btilde0=btilde0)
-    t_cal = time.perf_counter() - t0
-
-    # the cooperative mesh is ONE fast sampler: paper's shared-memory
-    # epoch schedule, not the per-device one
-    n0 = epoch_length(1, base=cfg.n0_base, exponent=cfg.n0_exponent)
-    epoch_jit = jax.jit(make_epoch_step_sharded(mesh, pg.n_nodes, v_pad, n0,
-                                                batch_size=bsz))
-
-    agg = zero_frame(v_pad)
-    frame = zero_frame(v_pad)
-    sur_counts = jnp.zeros((v1,), jnp.float32)
-    sur_tau = jnp.int32(0)
-    stats = []
-    t0 = time.perf_counter()
-    done = False
-    epoch = 0
-    k = key
-    if ckpt is not None:
-        agg, frame, sur_counts, sur_tau, k, epoch, done = ckpt.restore_state(
-            agg, frame, sur_counts, sur_tau, k)
-    while not done and epoch < cfg.max_epochs:
-        te = time.perf_counter()
-        k, ke = jax.random.split(k)
-        ac, at, fc, ft, sur_counts, sur_tau, done_dev, mf, mg = epoch_jit(
-            pg, params, agg.counts, agg.tau, frame.counts, frame.tau,
-            sur_counts, sur_tau, ke)
-        agg = StateFrame(ac, at)
-        frame = StateFrame(fc, ft)
-        done = bool(done_dev)
-        epoch += 1
-        stats.append(EpochStats(epoch, int(agg.tau), float(mf), float(mg),
-                                time.perf_counter() - te))
-        if ckpt is not None:
-            ckpt.save_state(epoch, agg, frame, sur_counts, sur_tau, k,
-                            done=done)
-    if ckpt is not None:
-        ckpt.wait()
-    # final flush (frames are replicated: plain adds)
-    agg = agg + frame
-    agg = StateFrame(
-        agg.counts.at[:v1].add(sur_counts), agg.tau + sur_tau)
-    t_samp = time.perf_counter() - t0
-
-    tau = int(agg.tau)
-    btilde = np.asarray(agg.counts[: pg.n_nodes]) / max(tau, 1)
-    return BetweennessResult(
-        btilde, tau, epoch, bool(done), float(params.omega), vd, stats,
-        {"diameter": t_diam, "calibration": t_cal, "sampling": t_samp})
-
-
-# ---------------------------------------------------------------------------
-# Public entry points
-# ---------------------------------------------------------------------------
-
-def run_kadabra(graph: Graph, *, eps: Optional[float] = None,
+def run_kadabra(graph, *, eps: Optional[float] = None,
                 delta: Optional[float] = None,
                 key=None, mesh: Optional[Mesh] = None,
                 config: Optional[AdaptiveConfig] = None,
@@ -730,60 +66,47 @@ def run_kadabra(graph: Graph, *, eps: Optional[float] = None,
                 checkpoint_every: int = 1) -> BetweennessResult:
     """Approximate betweenness with the paper's parallel KADABRA.
 
-    Explicitly passed ``eps``/``delta`` always take precedence over the
-    corresponding fields of ``config`` (the old guard only replaced them
-    when no config was given, silently ignoring explicit kwargs
-    otherwise); left as ``None`` they fall back to the config's values —
-    ``AdaptiveConfig``'s defaults (0.01 / 0.1) when no config either.
+    A thin wrapper over ``repro.core.engine.run_adaptive`` with the
+    single betweenness estimator on the bidirectional draw stream — the
+    exact sample stream, key flow and arithmetic of the pre-refactor
+    drivers, so results are bit-for-bit identical to PR 1-6 at a fixed
+    seed on every lane.
 
-    ``graph`` may be a replicated :class:`Graph` (each device samples
-    independently; ``mesh=None`` is the single-device lane) or a
-    :class:`repro.core.partition.PartitionedGraph` (the vertex-sharded
-    lane: the mesh samples cooperatively over the partitioned edge
-    structure; a mesh whose device count equals ``pg.n_shards`` is
-    required).
+    Explicitly passed ``eps``/``delta`` take precedence over the
+    corresponding fields of ``config``; left as ``None`` they fall back
+    to the config's values (``AdaptiveConfig`` defaults 0.01 / 0.1).
 
-    ``checkpoint_dir`` enables mid-run persistence: every
-    ``checkpoint_every`` epochs the sampling state is published through
-    ``repro.checkpoint.store``; a rerun pointed at the same directory
-    resumes from the latest checkpoint with a bit-identical trajectory
-    (see :class:`_EpochCheckpointer`).
+    ``graph`` may be a replicated :class:`repro.core.graph.Graph` (each
+    device samples independently; ``mesh=None`` is the single-device
+    lane) or a :class:`repro.core.partition.PartitionedGraph` (the
+    vertex-sharded lane: the mesh samples cooperatively; its device
+    count must equal ``pg.n_shards``).
+
+    ``checkpoint_dir`` enables schema-stamped mid-run persistence; a
+    rerun pointed at the same directory resumes from the latest
+    checkpoint with a bit-identical trajectory.
     """
-    cfg = config if config is not None else AdaptiveConfig()
-    overrides = {}
-    if eps is not None:
-        overrides["eps"] = eps
-    if delta is not None:
-        overrides["delta"] = delta
-    if overrides:
-        cfg = dataclasses.replace(cfg, **overrides)
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    ckpt = (_EpochCheckpointer(checkpoint_dir, checkpoint_every)
-            if checkpoint_dir else None)
-    if isinstance(graph, PartitionedGraph):
-        if mesh is None:
-            raise ValueError(
-                "a PartitionedGraph needs the mesh its shards map onto "
-                "(mesh=...); use a plain Graph for the single-device lane")
-        return _run_spmd_sharded(graph, cfg, key, mesh, ckpt)
-    if mesh is None or int(np.prod(mesh.devices.shape)) == 1:
-        return _run_single(graph, cfg, key, ckpt)
-    return _run_spmd(graph, cfg, key, mesh, ckpt)
+    res: AdaptiveRunResult = run_adaptive(
+        graph, ("betweenness",), eps=eps, delta=delta, key=key, mesh=mesh,
+        config=config, checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every, stream="bidir")
+    rep = res.reports[0]
+    stats = [EpochStats(s.epoch, s.tau, s.max_f[0], s.max_g[0], s.seconds)
+             for s in res.stats]
+    return BetweennessResult(
+        rep.scores, rep.tau, res.n_epochs, rep.converged, rep.omega,
+        res.vertex_diameter, stats, res.phase_seconds)
 
 
-def run_fixed_sampling(graph: Graph, n_samples: int, *, key=None,
+def run_fixed_sampling(graph, n_samples: int, *, key=None,
                        batch_size: Optional[int] = None):
     """Non-adaptive baseline (RK-style fixed sample count, no stop rule).
 
-    ``batch_size=None`` falls back to ``DEFAULT_SAMPLE_BATCH_SIZE``
-    (this baseline skips phase 1, so there is no diameter estimate to
-    resolve ``run_kadabra``'s per-instance B from); pass an explicit
-    width to measure a specific lane."""
-    if key is None:
-        key = jax.random.PRNGKey(0)
-    if batch_size is None:
-        batch_size = DEFAULT_SAMPLE_BATCH_SIZE
-    counts, tau = jax.jit(partial(sample_batch, n_samples=n_samples,
-                                  batch_size=batch_size))(graph, key)
-    return np.asarray(counts[: graph.n_nodes]) / max(int(tau), 1)
+    Routed through ``repro.core.engine.run_fixed`` with the betweenness
+    estimator — same draw stream and fold as before the estimator
+    substrate (bit-for-bit at a fixed seed).  ``batch_size=None`` falls
+    back to ``DEFAULT_SAMPLE_BATCH_SIZE``; pass an explicit width to
+    measure a specific lane."""
+    reports = run_fixed(graph, n_samples, metrics=("betweenness",),
+                        key=key, batch_size=batch_size)
+    return reports[0].scores

@@ -27,21 +27,47 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["StateFrame", "zero_frame", "epoch_length"]
+__all__ = ["StateFrame", "zero_frame", "epoch_length", "frame_schema_id"]
 
 
 class StateFrame(NamedTuple):
     """S = (tau, c~).  counts includes the padding rows (stripped only when
-    the stopping condition is evaluated)."""
-    counts: jax.Array  # (V_pad,) float32
+    the stopping condition is evaluated).
+
+    Since the estimator-plugin substrate, ``counts`` may also carry a
+    leading channel axis — (C, V_pad), one row per estimator channel
+    (``FrameSchema``); the PR 1-6 KADABRA frame is the (V_pad,) / C=1
+    special case.  ``tau`` stays a single shared scalar: every channel
+    accumulates observations of the SAME drawn samples, which is the
+    invariant the multi-estimator amortization rests on."""
+    counts: jax.Array  # (V_pad,) or (C, V_pad) float32
     tau: jax.Array     # () int32
 
     def __add__(self, other: "StateFrame") -> "StateFrame":
         return StateFrame(self.counts + other.counts, self.tau + other.tau)
 
 
-def zero_frame(v_pad: int) -> StateFrame:
-    return StateFrame(jnp.zeros((v_pad,), jnp.float32), jnp.int32(0))
+def zero_frame(v_pad: int, channels: int = 0) -> StateFrame:
+    """Zero frame: (V_pad,) classic layout for ``channels=0`` (the
+    default, kept for the PR 1-6 call sites), (channels, V_pad) for the
+    channel-stacked estimator-substrate layout."""
+    shape = (v_pad,) if channels == 0 else (channels, v_pad)
+    return StateFrame(jnp.zeros(shape, jnp.float32), jnp.int32(0))
+
+
+def frame_schema_id(schemas) -> str:
+    """Canonical id of a stacked frame layout, e.g.
+    ``"epoch-state-v2:betweenness[path_counts]+closeness[dist_sum,reached]"``.
+
+    ``schemas`` is an iterable of ``FrameSchema`` (order = channel-row
+    order).  The id names every estimator and channel, so ANY change to
+    the metric set, their order, or a plugin's channel layout yields a
+    different string — it is the checkpoint ``schema`` stamp that makes
+    pre-refactor or cross-metric restores fail loudly
+    (``repro.checkpoint.store.CheckpointSchemaError``) instead of
+    tripping shape asserts."""
+    parts = [f"{s.name}[{','.join(s.channels)}]" for s in schemas]
+    return "epoch-state-v2:" + "+".join(parts)
 
 
 def epoch_length(n_devices: int, *, base: int = 1000,

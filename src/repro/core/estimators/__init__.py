@@ -1,0 +1,52 @@
+"""Estimator plugins of the adaptive-sampling substrate.
+
+The engine (``repro.core.engine``) is generic over a tuple of
+:class:`~repro.core.estimators.base.Estimator` instances; this package
+is the registry that resolves metric names to plugins:
+
+    >>> from repro.core.estimators import get_estimator
+    >>> get_estimator("closeness").channels
+    ('dist_sum', 'reached')
+
+Adding a new adaptive-sampling algorithm = one module here (subclass
+``Estimator``, implement the four hooks, register below) plus a parity
+test in tests/test_estimators.py — ``tools/check_kernels.py`` enforces
+both in CI.  Percolation and coverage centrality are the recorded
+follow-up plugins (ROADMAP).
+"""
+from __future__ import annotations
+
+from .base import (DrawBatch, Estimator, FrameSchema, MetricReport,
+                   RunContext)
+from .closeness import ClosenessEstimator
+from .harmonic import HarmonicEstimator
+from .kadabra import BetweennessEstimator
+
+__all__ = ["DrawBatch", "Estimator", "FrameSchema", "MetricReport",
+           "RunContext", "BetweennessEstimator", "ClosenessEstimator",
+           "HarmonicEstimator", "get_estimator", "available_metrics"]
+
+_REGISTRY = {
+    "betweenness": BetweennessEstimator,
+    "closeness": ClosenessEstimator,
+    "harmonic": HarmonicEstimator,
+}
+# historical name of the betweenness algorithm; run_kadabra routes here
+_ALIASES = {"kadabra": "betweenness"}
+
+
+def available_metrics():
+    """Sorted canonical metric names."""
+    return sorted(_REGISTRY)
+
+
+def get_estimator(name: str) -> Estimator:
+    """Resolve a metric name (or alias) to a fresh plugin instance."""
+    canonical = _ALIASES.get(name, name)
+    try:
+        cls = _REGISTRY[canonical]
+    except KeyError:
+        raise KeyError(
+            f"no estimator {name!r} registered "
+            f"(have: {available_metrics()})") from None
+    return cls()

@@ -1,0 +1,51 @@
+"""Harmonic centrality as an adaptive-sampling estimator plugin.
+
+Same sampled-sources scheme as closeness (one shared forward BFS
+stream), but the per-vertex observation is the *reciprocal* distance
+
+    x_v(s) = 1 / d(s, v)     (reached, d > 0)
+           = 0               (unreached, v == s, and the sink)
+
+— already in [0, 1] with no diameter cap, and exactly 0 for unreachable
+pairs, which is why harmonic centrality is the canonical
+disconnection-robust variant (Boldi & Vigna).  ``finalize`` reports the
+*normalized* harmonic centrality
+
+    h(v) = 1/(n-1) * sum_{u != v} 1/d(u, v)   in [0, 1]
+
+(the sample mean times n/(n-1), correcting for the s == v draws that
+contribute 0).  The stop rule is the shared Bernstein machinery via the
+calibration waterfilling, with the Hoeffding omega cap of the closeness
+plugin — both read only that observations live in [0, 1].
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .base import DrawBatch, RunContext
+from .closeness import DistanceEstimator
+
+__all__ = ["HarmonicEstimator"]
+
+
+class HarmonicEstimator(DistanceEstimator):
+    name = "harmonic"
+    channels = ("inv_dist_sum",)
+    needs_diameter = False
+
+    def _obs(self, batch: DrawBatch, ctx: RunContext):
+        d = self._dist(batch, ctx)
+        x = jnp.where(d > 0.0, 1.0 / jnp.maximum(d, 1.0), 0.0)
+        x = x.at[ctx.n_nodes, :].set(0.0)             # padding sink row
+        return x[None, :, :]
+
+    def finalize(self, counts, tau, params, ctx: RunContext) -> np.ndarray:
+        n = ctx.n_nodes
+        mean = np.asarray(counts[0][:n]) / max(int(tau), 1)
+        return mean * n / max(n - 1, 1)
+
+    def extras(self, params, ctx: RunContext) -> dict:
+        return {"normalized": True,
+                "scale_note": "scores are 1/(n-1) * sum 1/d — multiply "
+                              "by (n-1) for the unnormalized convention"}

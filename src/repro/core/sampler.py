@@ -41,14 +41,16 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bfs import (BidirResult, bidirectional_bfs_batched,
+from .bfs import (BidirResult, bfs_sssp_batched, bfs_sssp_batched_sharded,
+                  bidirectional_bfs_batched,
                   bidirectional_bfs_batched_sharded)
 from .graph import Graph
 from .partition import PartitionedGraph, axis_tuple
 
-__all__ = ["PathSample", "sample_pair", "sample_pairs", "sample_path",
-           "sample_path_batched", "sample_path_batched_sharded",
-           "sample_batch"]
+__all__ = ["PathSample", "ForwardSample", "sample_pair", "sample_pairs",
+           "sample_path", "sample_path_batched",
+           "sample_path_batched_sharded", "sample_path_forward_batched",
+           "sample_path_forward_batched_sharded", "sample_batch"]
 
 _NEG_INF = -1e30
 _CHUNK = 128  # matches Graph pad_to; guarantees in-bounds dynamic slices
@@ -229,6 +231,92 @@ def sample_path_batched_sharded(pg: PartitionedGraph, key, batch: int, *,
                        gather(res.sigma_s), gather(res.sigma_t),
                        res.d, res.split)
     return _finish_paths(pg, k_meet, k_s, k_t, full, batch)
+
+
+class ForwardSample(NamedTuple):
+    """One round of B *forward-stream* draws (estimator-substrate lane).
+
+    Extends :class:`PathSample` with the exhausted per-source distance
+    columns and the drawn sources — the extra state that closeness /
+    harmonic estimators consume (``repro.core.estimators``).  ``dist``
+    rides at the BFS state's native row count (csc.v_pad when a CSC
+    layout is persisted, V+1 otherwise); consumers slice to V+1.
+    """
+    contrib: jax.Array   # (B, V+1) float32 — internal path-vertex marks
+    valid: jax.Array     # (B,) bool — s,t connected
+    length: jax.Array    # (B,) int32 — d(s,t), -1 if invalid
+    dist: jax.Array      # (rows, B) int32 — dist from s (full SSSP)
+    sources: jax.Array   # (B,) int32 — the drawn s
+
+
+def _finish_forward_paths(graph, k_walk, s, t, dist, sigma,
+                          batch: int) -> ForwardSample:
+    """Backward path walk from t over a completed FORWARD BFS state.
+
+    With the full (dist_s, sigma_s) in hand there is no meeting-vertex
+    draw: walking back from t, choosing at each level-l vertex v the
+    predecessor u ~ sigma_s(u) / sum over predecessors, selects every
+    shortest s-t path with probability telescoping to 1 / sigma_s(t) —
+    the same uniform-path law as the bidirectional lane, from one side.
+    """
+    v1 = graph.n_nodes + 1
+    d = dist[t, jnp.arange(batch)]                              # (B,)
+    valid = d > 0                                # s==t never drawn; d>=1
+    contrib = jnp.zeros((batch, v1), jnp.float32)
+    # the walk from t at level d marks levels d-1 .. 1 — exactly the
+    # strictly internal vertices of the drawn path (t itself is the
+    # start node and is never marked; s sits at level 0)
+    lvl = jnp.where(valid, d, 0)
+    walk = jax.vmap(_walk_to_source, in_axes=(None, 0, 0, 0, 1, 1, 0))
+    contrib = walk(graph, jax.random.split(k_walk, batch), t, lvl,
+                   dist, sigma, contrib)
+    contrib = contrib.at[:, graph.n_nodes].set(0.0)
+    return ForwardSample(contrib, valid, jnp.where(valid, d, -1), dist, s)
+
+
+def sample_path_forward_batched(graph: Graph, key,
+                                batch: int) -> ForwardSample:
+    """Take ``batch`` samples through the FORWARD stream.
+
+    One batched *full* single-source BFS per round (no stop nodes: each
+    source's search runs to exhaustion so the distance columns are
+    unbiased per-source distance vectors — the bidirectional lane
+    truncates both sides at the meeting level and cannot provide this),
+    then one backward walk per sample.  Betweenness contributions drawn
+    from this stream follow the exact same uniform-shortest-path law as
+    :func:`sample_path_batched`; the stream additionally exposes
+    ``dist``/``sources`` for distance-based estimators.  The *sample
+    stream differs* from the bidirectional lane (different key layout,
+    different searches), so KADABRA bit-compatibility runs stay on
+    ``sample_path_batched``.
+    """
+    k_pair, k_walk = jax.random.split(key)
+    s, t = sample_pairs(k_pair, graph.n_nodes, batch)
+    res = bfs_sssp_batched(graph, s)
+    return _finish_forward_paths(graph, k_walk, s, t, res.dist, res.sigma,
+                                 batch)
+
+
+def sample_path_forward_batched_sharded(pg: PartitionedGraph, key,
+                                        batch: int, *, axis
+                                        ) -> ForwardSample:
+    """Sharded twin of :func:`sample_path_forward_batched` — call inside
+    shard_map with the key replicated across the shard axis.  The
+    forward BFS runs with sharded state end-to-end (bitmap-scheduled
+    frontier exchange per level); the per-sample state is all-gathered
+    once after it completes, and the key splits / pair draw / walks are
+    stream-identical to the replicated forward lane.
+    """
+    axis = axis_tuple(axis)
+    k_pair, k_walk = jax.random.split(key)
+    s, t = sample_pairs(k_pair, pg.n_nodes, batch)
+    res = bfs_sssp_batched_sharded(pg, s, axis=axis)
+
+    def gather(x):
+        return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+
+    return _finish_forward_paths(pg, k_walk, s, t, gather(res.dist),
+                                 gather(res.sigma), batch)
 
 
 def sample_path(graph: Graph, key) -> PathSample:

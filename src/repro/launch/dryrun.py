@@ -266,6 +266,29 @@ def exchange_branch_accounting(hlo_text: str) -> "dict | None":
     }
 
 
+# HLO while instruction: "%name = TYPE while(%operand), condition=..."
+_WHILE_RE = re.compile(r"=\s*\S+\s+while\(")
+
+
+def while_loop_stats(hlo_text: str) -> dict:
+    """Count HLO ``while`` instructions per computation and in total.
+
+    The estimator-substrate acceptance check rests on this: a
+    multi-metric epoch step must lower to the SAME number of while loops
+    (i.e. the same single BFS per sampling round — diameter phase,
+    SSSP sweep, backward walk) as a single-metric step on the same
+    stream, because extra estimators only add fold arithmetic, never
+    extra traversals.  Counted on the post-optimization module text, so
+    loops DCE'd or fused away do not inflate the number."""
+    per_comp = {}
+    for name, body in split_computations(hlo_text).items():
+        n = len(_WHILE_RE.findall(body))
+        if n:
+            per_comp[name] = n
+    return {"while_total": sum(per_comp.values()),
+            "while_by_computation": per_comp}
+
+
 def _to_shardings(mesh, tree):
     from jax.sharding import NamedSharding, PartitionSpec
     return jax.tree.map(
@@ -547,13 +570,22 @@ def _write(record, out_dir):
 def run_betweenness(mesh_name: str, aggregation: str,
                     rmat_scale: int = 22, out_dir: str = OUT_DIR,
                     n0: int = 1, batch_size: int | None = None,
-                    partitioned: bool = False) -> dict:
+                    partitioned: bool = False,
+                    metric: str = "betweenness",
+                    stream: str | None = None) -> dict:
     """Lower + compile one SPMD adaptive-sampling epoch (the paper's own
     workload) on the production mesh, with abstract graph arrays sized
     like an R-MAT 2^scale x 30 instance.  The BFS while-loops are counted
     once by cost_analysis (trip counts are data-dependent — documented),
     but the epoch's AGGREGATION — the object the paper studies — sits
     outside all loops, so its collective bytes are exact.
+
+    ``metric`` is a single estimator name or a comma list
+    (``"closeness,harmonic"``): the epoch step is lowered with that
+    estimator stack and the record carries ``while_loops`` — the HLO
+    while-instruction census proving a multi-metric step runs ONE BFS
+    stream per sampling round (same while count as any single metric on
+    the same stream; only the fold arithmetic widens).
 
     ``partitioned=True`` lowers the vertex-sharded cooperative epoch
     instead (repro.core.partition; DESIGN.md §Partitioning): the graph's
@@ -576,6 +608,7 @@ def run_betweenness(mesh_name: str, aggregation: str,
     O(E) -> O(E / n_dev) claim, measured)."""
     import jax.numpy as jnp
     from repro.core.adaptive import make_epoch_step_spmd, _pad_len
+    from repro.core.estimators import get_estimator
     from repro.core.kadabra import KadabraParams
     from repro.core.graph import Graph
     from repro.models.common import active_mesh
@@ -587,11 +620,24 @@ def run_betweenness(mesh_name: str, aggregation: str,
     e_pad = (e_dir // 128 + 2) * 128
     v_pad = _pad_len(v, n_dev)
 
+    metrics = tuple(m.strip() for m in metric.split(",") if m.strip())
+    ests = tuple(get_estimator(m) for m in metrics)
+    if stream is None:
+        stream = ("forward" if any(e.needs_forward for e in ests)
+                  else "bidir")
+    n_chan = sum(e.n_channels for e in ests)
+    # representative R-MAT vertex diameter — static input of the epoch
+    # step (closeness' distance cap); any small int lowers the same HLO
+    vdiam = 12
+
     sds = jax.ShapeDtypeStruct
-    params = KadabraParams(
+    # every shipped estimator parameterizes the shared Bernstein rule
+    # with a KadabraParams pytree, so the abstract params tuple is
+    # uniform (only omega's provenance differs — VD bound vs Hoeffding)
+    params = tuple(KadabraParams(
         eps=0.001, delta=0.1, omega=sds((), jnp.float32),
         log_inv_delta_l=sds((v,), jnp.float32),
-        log_inv_delta_u=sds((v,), jnp.float32))
+        log_inv_delta_u=sds((v,), jnp.float32)) for _ in ests)
 
     # lower the batched sampling lane at an explicit width.  The graph
     # here is abstract (ShapeDtypeStructs — no diameter estimate to
@@ -644,10 +690,13 @@ def run_betweenness(mesh_name: str, aggregation: str,
                     "shard, level_bytes_dense_protocol otherwise",
         }
         step = make_epoch_step_sharded(mesh, v, v_pad, n0,
-                                       batch_size=batch_size)
-        args = (pg, params, sds((v_pad,), jnp.float32), sds((), jnp.int32),
-                sds((v_pad,), jnp.float32), sds((), jnp.int32),
-                sds((v + 1,), jnp.float32), sds((), jnp.int32),
+                                       batch_size=batch_size,
+                                       estimators=ests, stream=stream,
+                                       vertex_diameter=vdiam)
+        args = (pg, params,
+                sds((n_chan, v_pad), jnp.float32), sds((), jnp.int32),
+                sds((n_chan, v_pad), jnp.float32), sds((), jnp.int32),
+                sds((n_chan, v + 1), jnp.float32), sds((), jnp.int32),
                 sds((2,), jnp.uint32))
     else:
         graph = Graph(
@@ -657,11 +706,15 @@ def run_betweenness(mesh_name: str, aggregation: str,
             degree=sds((v,), jnp.int32), n_nodes=v, n_edges=e_dir,
             max_degree=100_000)
         step = make_epoch_step_spmd(mesh, aggregation, v, v_pad, n0,
-                                    batch_size=batch_size)
-        args = (graph, params, sds((v_pad,), jnp.float32),
+                                    batch_size=batch_size,
+                                    estimators=ests, stream=stream,
+                                    vertex_diameter=vdiam)
+        args = (graph, params,
+                sds((n_chan, v_pad), jnp.float32), sds((), jnp.int32),
+                sds((n_dev, n_chan, v_pad), jnp.float32),
                 sds((), jnp.int32),
-                sds((n_dev, v_pad), jnp.float32), sds((), jnp.int32),
-                sds((n_dev, v + 1), jnp.float32), sds((), jnp.int32),
+                sds((n_dev, n_chan, v + 1), jnp.float32),
+                sds((), jnp.int32),
                 sds((n_dev, 2), jnp.uint32))
     with active_mesh(mesh):
         t0 = time.time()
@@ -671,12 +724,17 @@ def run_betweenness(mesh_name: str, aggregation: str,
     ca = _cost_analysis(compiled)
     ma = compiled.memory_analysis()
     cell = ("epoch_part_rmat" if partitioned else "epoch_rmat")
+    if metrics != ("betweenness",):
+        cell += "_" + "_".join(metrics)
+    if stream == "forward" and not any(e.needs_forward for e in ests):
+        cell += "_fwd"          # explicit stream override in the name
     record = {
         "arch": "betweenness", "cell": f"{cell}{rmat_scale}",
         "mesh": mesh_name, "chips": n_dev, "family": "graph-sampling",
         "basis": "exact",
         "variant": "partitioned" if partitioned else aggregation,
         "sample_batch_size": batch_size,
+        "metrics": list(metrics), "stream": stream, "channels": n_chan,
         "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
         "full": {
             "flops": float(ca.get("flops", 0.0)),
@@ -684,6 +742,7 @@ def run_betweenness(mesh_name: str, aggregation: str,
             "transcendentals": float(ca.get("transcendentals", 0.0)),
             "t_compile_s": t_compile,
             "collectives": collective_stats(compiled.as_text()),
+            "while_loops": while_loop_stats(compiled.as_text()),
             "memory": {
                 "argument_bytes": int(ma.argument_size_in_bytes),
                 "output_bytes": int(ma.output_size_in_bytes),
@@ -732,6 +791,15 @@ def main():
                          "cooperative epoch (per-level frontier exchange)")
     ap.add_argument("--aggregation", default="hierarchical",
                     choices=["hierarchical", "flat", "root"])
+    ap.add_argument("--metric", default="betweenness",
+                    help="with --betweenness: estimator name or comma "
+                         "list (e.g. closeness,harmonic) — multi-metric "
+                         "steps prove the one-BFS-stream amortization "
+                         "via the recorded while_loops census")
+    ap.add_argument("--stream", default=None,
+                    choices=["bidir", "forward"],
+                    help="with --betweenness: override the draw stream "
+                         "(default: forward iff a metric needs it)")
     ap.add_argument("--variant", default=None,
                     help="perf variant (fsdp, microN, fsdp_micro8, "
                          "noremat, chunk2048)")
@@ -742,9 +810,11 @@ def main():
         for mesh_name in meshes:
             rec = run_betweenness(mesh_name, args.aggregation,
                                   out_dir=args.out,
-                                  partitioned=args.partitioned)
+                                  partitioned=args.partitioned,
+                                  metric=args.metric,
+                                  stream=args.stream)
             lane = "partitioned" if args.partitioned else args.aggregation
-            print(f"[dryrun] betweenness x {mesh_name} x "
+            print(f"[dryrun] {args.metric} x {mesh_name} x "
                   f"{lane}: ok", flush=True)
         return
     if args.all:

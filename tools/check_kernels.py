@@ -22,6 +22,15 @@ on hardware.  This check makes it a CI failure instead:
   chains stay legal: ``dist_any.at[...]`` is how the DMA staging
   *addresses* the ref, and only ``pltpu.make_async_copy`` consumes it.
 
+A second check guards the estimator-plugin registry
+(``src/repro/core/estimators``): every registered metric must be a
+complete plugin (all four protocol hooks overridden, a non-empty
+channel schema), every estimator module must actually register
+something, and every metric must be pinned by the golden parity suite
+(``tests/test_estimators.py``) — an estimator nobody registers or
+tests is exactly the silent rot the plugin substrate was built to
+prevent.
+
 Run from anywhere:
 
     python tools/check_kernels.py
@@ -36,6 +45,8 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 KERNEL_GLOB = os.path.join(REPO, "src", "repro", "kernels", "**",
                            "kernel.py")
+ESTIMATOR_DIR = os.path.join(REPO, "src", "repro", "core", "estimators")
+ESTIMATOR_TESTS = os.path.join(REPO, "tests", "test_estimators.py")
 
 
 def _call_name(node: ast.AST) -> str:
@@ -166,6 +177,61 @@ def check_file(path: str) -> list:
             "(checker out of sync with the kernel idiom?)")]
 
 
+_PROTOCOL_HOOKS = ("make_params", "accumulate", "stopping_rule",
+                   "finalize")
+
+
+def check_estimator_registry() -> list:
+    """Registry completeness errors as (path, message) pairs."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.core.estimators import (Estimator, available_metrics,
+                                       get_estimator)
+    errors = []
+    rel_dir = os.path.relpath(ESTIMATOR_DIR, REPO)
+    metrics = available_metrics()
+    if not metrics:
+        return [(rel_dir, "estimator registry is empty")]
+    modules_seen = set()
+    for name in metrics:
+        est = get_estimator(name)
+        cls = type(est)
+        modules_seen.add(cls.__module__.rsplit(".", 1)[-1])
+        if not est.channels:
+            errors.append((rel_dir, f"estimator '{name}' declares no "
+                                    f"frame channels"))
+        # every hook must be overridden somewhere below the abstract
+        # base (shared intermediates like DistanceEstimator count)
+        for hook in _PROTOCOL_HOOKS:
+            if getattr(cls, hook) is getattr(Estimator, hook):
+                errors.append(
+                    (rel_dir, f"estimator '{name}' ({cls.__name__}) "
+                              f"inherits the abstract '{hook}' hook — "
+                              f"incomplete plugin"))
+    # every module in the package must register at least one plugin
+    for path in sorted(glob.glob(os.path.join(ESTIMATOR_DIR, "*.py"))):
+        mod = os.path.splitext(os.path.basename(path))[0]
+        if mod in ("__init__", "base"):
+            continue
+        if mod not in modules_seen:
+            errors.append((os.path.relpath(path, REPO),
+                           f"module '{mod}' registers no estimator in "
+                           f"repro.core.estimators._REGISTRY"))
+    # every metric must be pinned by the golden parity suite
+    if not os.path.exists(ESTIMATOR_TESTS):
+        errors.append((os.path.relpath(ESTIMATOR_TESTS, REPO),
+                       "estimator parity suite missing"))
+    else:
+        with open(ESTIMATOR_TESTS) as f:
+            test_src = f.read()
+        for name in metrics:
+            if f'"{name}"' not in test_src and f"'{name}'" not in test_src:
+                errors.append(
+                    (os.path.relpath(ESTIMATOR_TESTS, REPO),
+                     f"metric '{name}' is registered but never "
+                     f"referenced by the parity suite"))
+    return errors
+
+
 def main() -> int:
     files = sorted(glob.glob(KERNEL_GLOB, recursive=True))
     if not files:
@@ -177,10 +243,14 @@ def main() -> int:
         for lineno, msg in check_file(path):
             print(f"{rel}:{lineno}: {msg}")
             bad += 1
+    for where, msg in check_estimator_registry():
+        print(f"{where}: {msg}")
+        bad += 1
     if bad:
         print(f"kernel check: {bad} error(s)")
         return 1
-    print(f"kernel check: OK ({len(files)} file(s))")
+    print(f"kernel check: OK ({len(files)} kernel file(s), "
+          f"estimator registry complete)")
     return 0
 
 
