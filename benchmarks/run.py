@@ -844,6 +844,176 @@ def bench_metric_sweep(full: bool, smoke: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Fault matrix: resilience sweep over the injected-failure taxonomy
+# ---------------------------------------------------------------------------
+
+_FAULT_MATRIX_SCRIPT = r"""
+import json, os, tempfile, time
+args = json.loads(os.environ["FAULT_MATRIX_ARGS"])
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=%d"
+                           % args["n_dev"])
+import numpy as np
+import jax
+from jax.sharding import Mesh
+from repro.core.graph import build_graph
+from repro.core.partition import partition_graph
+from repro.core.adaptive import AdaptiveConfig
+from repro.core.engine import run_adaptive
+from repro.core.brandes import brandes_numpy
+from repro.runtime import (ResilientRunner, FaultSchedule, FaultSpec,
+                           RetryPolicy)
+
+V = args["n_nodes"]
+n_dev = args["n_dev"]
+rng = np.random.default_rng(0)
+src = rng.integers(0, V, 4 * V)
+dst = (src + 1 + rng.integers(0, V - 1, 4 * V)) % V
+g = build_graph(np.concatenate([src, dst]), np.concatenate([dst, src]), V)
+pg = partition_graph(g, n_dev)
+mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("dev",))
+cfg = AdaptiveConfig(eps=args["eps"], delta=0.1, max_epochs=24)
+exact = brandes_numpy(g)
+key = jax.random.PRNGKey(11)
+policy = RetryPolicy(max_retries=8, backoff_base=1e-3, backoff_cap=1e-3)
+
+baselines = {}
+def baseline(lane):
+    # the uninterrupted run every bit-identity cell is judged against
+    if lane not in baselines:
+        r = (run_adaptive(pg, ("betweenness",), mesh=mesh, config=cfg,
+                          key=key) if lane == "sharded"
+             else run_adaptive(g, ("betweenness",), config=cfg, key=key))
+        baselines[lane] = r.reports[0]
+    return baselines[lane]
+
+def cell(name, lane, sched, expect, epoch_timeout=None):
+    t0 = time.perf_counter()
+    graph, m = (pg, mesh) if lane == "sharded" else (g, None)
+    with tempfile.TemporaryDirectory() as d:
+        out = ResilientRunner(graph, mesh=m, config=cfg, key=key,
+                              checkpoint_dir=d, schedule=sched,
+                              policy=policy,
+                              epoch_timeout=epoch_timeout).run()
+    rep = out.result.reports[0]
+    base = baseline(lane)
+    bit = bool(np.array_equal(np.asarray(rep.scores),
+                              np.asarray(base.scores))
+               and rep.tau == base.tau)
+    err = float(np.max(np.abs(np.asarray(rep.scores) - exact)))
+    taus = [s.tau for s in out.result.stats]
+    tau_monotone = all(b >= a for a, b in zip(taus, taus[1:]))
+    if expect == "bit":
+        assert bit, (name, "expected bit-identical recovery")
+    else:
+        assert rep.converged and err <= cfg.eps, (name, err, cfg.eps)
+        assert tau_monotone, (name, taus)
+    row = {"cell": name, "faults": [s.kind for s in sched],
+           "lane_start": lane, "lane_final": out.lane,
+           "n_dev_final": out.n_devices, "attempts": out.attempts,
+           "n_events": len(out.events),
+           "event_kinds": sorted({e.kind for e in out.events}),
+           "expect": ("bit_identical" if expect == "bit"
+                      else "within_eps_exact_tau"),
+           "bit_identical": bit, "max_abs_err_vs_exact": err,
+           "tau": rep.tau, "tau_trace_monotone": tau_monotone,
+           "seconds": time.perf_counter() - t0}
+    print("ROW " + json.dumps(row), flush=True)
+
+half = n_dev // 2
+# same-mesh faults recover bit-identically; the elastic shrink changes
+# the calibration stream, so its contract is (eps, delta) + exact tau
+cell("kill", "sharded", FaultSchedule([FaultSpec("kill", 1),
+                                       FaultSpec("kill", 2)]), "bit")
+cell("nan", "sharded", FaultSchedule([FaultSpec("nan", 2)]), "bit")
+cell("shrink", "sharded",
+     FaultSchedule([FaultSpec("shrink", 2, survivors=half)]), "eps")
+cell("seeded-mix", "single",
+     FaultSchedule.from_seed(args["seed"],
+                             kinds=("kill", "nan", "corrupt", "truncate",
+                                    "hang"),
+                             n_faults=4, max_epoch=4, hang_delay=0.01),
+     "bit")
+if not args["smoke"]:
+    cell("corrupt", "sharded", FaultSchedule([FaultSpec("corrupt", 2)]),
+         "bit")
+    cell("truncate", "sharded",
+         FaultSchedule([FaultSpec("truncate", 2)]), "bit")
+    cell("hang-timeout", "single",
+         FaultSchedule([FaultSpec("hang", 2, delay=0.5)]), "bit",
+         epoch_timeout=0.2)
+print("FAULT MATRIX OK")
+"""
+
+
+def run_fault_matrix(n_dev: int = 8, smoke: bool = False,
+                     write_json: bool = True, full: bool = False,
+                     seed: int = 17):
+    """Resilience acceptance sweep (subprocess: the fake device count
+    must be set before JAX initializes).
+
+    One cell per fault class of ``repro.runtime.faults``, each driving
+    a full adaptive betweenness run through ``ResilientRunner`` under a
+    seeded schedule and checking the recovery contract: same-mesh
+    faults (mid-epoch kill, NaN-poisoned frame, checkpoint corruption,
+    torn manifest, hung epoch) must converge **bit-identical** to the
+    uninterrupted run at the same key (asserted inside the script);
+    the elastic 8→4 shrink re-partitions onto the surviving mesh and
+    must converge within (eps, delta) of the exact Brandes scores with
+    a monotone tau trace (no discarded in-flight draw ever re-counted).
+    The ``seeded-mix`` cell replays a ``FaultSchedule.from_seed``
+    multi-fault storm on the single-device lane.  ``--smoke`` is the
+    tier-1 CI gate: 4 cells on a smaller instance, no BENCH row.
+    """
+    import json
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["FAULT_MATRIX_ARGS"] = json.dumps({
+        "n_dev": n_dev, "n_nodes": 120 if smoke else (400 if full else 200),
+        "eps": 0.1 if smoke else 0.08, "smoke": smoke, "seed": seed})
+    out = subprocess.run([sys.executable, "-c", _FAULT_MATRIX_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=3600)
+    if out.returncode or "FAULT MATRIX OK" not in out.stdout:
+        raise RuntimeError(f"fault matrix subprocess failed:\n"
+                           f"stdout:{out.stdout[-2000:]}\n"
+                           f"stderr:{out.stderr[-2000:]}")
+    rows = [json.loads(line[4:]) for line in out.stdout.splitlines()
+            if line.startswith("ROW ")]
+    for row in rows:
+        verdict = ("bit-identical" if row["bit_identical"]
+                   else f"err={row['max_abs_err_vs_exact']:.4f}")
+        print(f"  {row['cell']:<12} [{'+'.join(row['faults']):<24}] "
+              f"{row['lane_start']:>7} -> {row['lane_final']}/"
+              f"{row['n_dev_final']}dev  attempts={row['attempts']}  "
+              f"{verdict}  ({row['seconds']:.1f}s)")
+        emit(f"fault_matrix.{row['cell']}", row["seconds"] * 1e6,
+             f"attempts={row['attempts']};"
+             f"bit_identical={row['bit_identical']};"
+             f"err={row['max_abs_err_vs_exact']:.5f}")
+    record = {
+        "section": "fault_matrix",
+        "n_dev": n_dev, "smoke": smoke, "full": full, "seed": seed,
+        "metric": "per fault class: ResilientRunner completes the run; "
+                  "same-mesh faults bit-identical to the uninterrupted "
+                  "run at the same key; elastic shrink within (eps, "
+                  "delta) of exact Brandes with a monotone tau trace "
+                  "(exact sample accounting)",
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "device": "cpu",
+        "results": rows,
+    }
+    if write_json and not smoke:
+        _append_bench_record(record)
+    return record
+
+
+def bench_fault_matrix(full: bool, smoke: bool = False):
+    print("\n== fault matrix: resilience under injected failures =="
+          + ("  [smoke]" if smoke else ""))
+    run_fault_matrix(smoke=smoke, full=full)
+
+
+# ---------------------------------------------------------------------------
 # Kernel microbenches
 # ---------------------------------------------------------------------------
 
@@ -882,7 +1052,7 @@ def main():
     ap.add_argument("--full", action="store_true")
     sections = ["table2", "fig2", "fig3", "fig4", "batch_sweep",
                 "node_blocked_sweep", "csc_driver_sweep", "partition_sweep",
-                "metric_sweep", "kernels"]
+                "metric_sweep", "fault_matrix", "kernels"]
     ap.add_argument("section", nargs="?", default=None, choices=sections,
                     help="run a single section (same as --only)")
     ap.add_argument("--only", default=None, choices=sections)
@@ -896,9 +1066,9 @@ def main():
                            "real TPU hardware) — recorded per "
                            "BENCH_sampling.json row as pallas_mode")
     ap.add_argument("--smoke", action="store_true",
-                    help="metric_sweep only: seconds-scale CI gate "
-                         "(tiny instance, no BENCH row, no >=1.5x "
-                         "assertion)")
+                    help="metric_sweep / fault_matrix: seconds-scale CI "
+                         "gate (tiny instance, fewer cells, no BENCH "
+                         "row, no >=1.5x assertion)")
     args = ap.parse_args()
     if args.only and args.section and args.only != args.section:
         ap.error(f"conflicting sections: positional '{args.section}' "
@@ -912,15 +1082,17 @@ def main():
         "csc_driver_sweep": bench_csc_driver_sweep,
         "partition_sweep": bench_partition_sweep,
         "metric_sweep": bench_metric_sweep,
+        "fault_matrix": bench_fault_matrix,
         "kernels": bench_kernels,
     }
     takes_mode = {"node_blocked_sweep", "partition_sweep"}
+    takes_smoke = {"metric_sweep", "fault_matrix"}
     for name, fn in jobs.items():
         if args.only and name != args.only:
             continue
         if name in takes_mode:
             fn(args.full, interpret=args.interpret)
-        elif name == "metric_sweep":
+        elif name in takes_smoke:
             fn(args.full, smoke=args.smoke)
         else:
             fn(args.full)

@@ -5,21 +5,51 @@ Layout: one directory per step, atomically published:
     <root>/step_000123.tmp/...      (written)
     <root>/step_000123/             (os.replace after fsync — atomic)
         manifest.json               {step, tree structure, shapes, dtypes,
-                                     mesh shape, rng, user metadata}
+                                     per-leaf checksums, rng, metadata}
         arr_000000.npy ...          one .npy per leaf (gathered to host)
+    <root>/step_000123.quarantined-0/   (a step that failed verification)
 
 Guarantees:
   * crash-consistent: a partially written checkpoint is never visible
     (readers only see directories without the .tmp suffix);
-  * keep-last-k garbage collection;
-  * *elastic restore*: leaves are stored as full (unsharded) host arrays,
-    so a restore may target a different mesh/device count — the arrays
-    are re-placed with jax.device_put against the new sharding.  This is
-    what lets a 512-chip job resume on 256 chips after losing a pod
-    (the launcher's elastic path, see repro.launch.train);
-  * async save: the gather runs synchronously (cheap device->host copy),
-    the fsync+rename pipeline runs on a background thread so the train
-    loop is not blocked (paper-adjacent: overlap I/O with compute).
+  * *integrity-checked*: every leaf's CRC32 is stamped into the
+    manifest at publish time and re-verified on restore — bit rot, a
+    torn write, or a truncated file is detected BEFORE any array
+    reaches the run, never silently folded into an estimate;
+  * *quarantine + fallback*: when the newest step fails verification
+    (torn manifest, missing or corrupt leaf) and the caller did not pin
+    an explicit step, the directory is renamed aside
+    (``.quarantined-N``, invisible to ``latest_step``) and the restore
+    falls back to the newest step that verifies — a crash during
+    publish or a corrupted disk block costs one step of progress, not
+    the run;
+  * keep-last-k garbage collection that never deletes the step a
+    concurrent restore is reading (``keep=0`` disables GC: unlimited
+    retention);
+  * *elastic restore*: leaves are stored as full (unsharded) host
+    arrays, so a restore may target a different mesh/device count — the
+    arrays are re-placed with jax.device_put against the new sharding.
+    This is what lets a 512-chip job resume on 256 chips after losing a
+    pod (the launcher's elastic path, see repro.launch.train, and the
+    degradation ladder of repro.runtime.supervisor);
+  * async save: the gather runs synchronously (cheap device->host
+    copy), the fsync+rename pipeline runs on a background thread so the
+    epoch loop is not blocked.  Publish failures (disk full, permission
+    errors) are captured and re-raised from the next
+    ``CheckpointManager.wait()`` / ``maybe_save()`` — an async save
+    never fails silently.
+
+Error taxonomy (all raise, never assert — ``python -O`` strips asserts):
+
+  * :class:`CheckpointError` — base of everything below;
+  * :class:`CheckpointIntegrityError` — the step's on-disk bytes are
+    damaged (torn manifest, missing leaf file, checksum mismatch).
+    Eligible for quarantine + fallback;
+  * :class:`CheckpointLayoutError` — the step verifies but does not fit
+    the restoring caller's tree (leaf count / shape mismatch).  The
+    bytes are fine, the CALLER is incompatible — never quarantined;
+  * :class:`CheckpointSchemaError` — logical-layout stamp mismatch
+    (see below); also never quarantined.
 """
 from __future__ import annotations
 
@@ -27,30 +57,107 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional
+import zlib
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager",
-           "CheckpointSchemaError"]
+__all__ = ["save", "restore", "restore_arrays", "latest_step",
+           "CheckpointManager", "CheckpointError",
+           "CheckpointIntegrityError", "CheckpointLayoutError",
+           "CheckpointSchemaError", "install_publish_fault_hook"]
 
 
-class CheckpointSchemaError(ValueError):
+class CheckpointError(RuntimeError):
+    """Base class of every typed checkpoint failure."""
+
+
+class CheckpointIntegrityError(CheckpointError):
+    """The step's on-disk bytes are damaged (torn manifest, missing or
+    corrupt leaf).  ``restore(step=None)`` quarantines such a step and
+    falls back to the newest one that verifies."""
+
+
+class CheckpointLayoutError(CheckpointError):
+    """The step verifies but does not fit the restoring caller's tree
+    (leaf count or shape mismatch).  The disk is fine — the caller is
+    incompatible — so the step is never quarantined."""
+
+
+class CheckpointSchemaError(CheckpointError, ValueError):
     """The checkpoint's logical layout does not match the restorer's.
 
-    Raised BEFORE any leaf-count/shape assertion: a schema mismatch is a
+    Raised BEFORE any leaf-count/shape check: a schema mismatch is a
     *format* incompatibility (e.g. a pre-estimator-substrate checkpoint
     restored by the plugin engine, or a run restarted with a different
     metric set), and the remedy — restart the run or point at a matching
     directory — is different from a shape bug, so the error must say so
-    instead of dying inside an opaque ``assert``.
+    instead of dying inside an opaque shape failure.  (Subclasses
+    ``ValueError`` for pre-taxonomy call sites that caught that.)
     """
+
+
+# ---------------------------------------------------------------------------
+# Fault hook (test/bench instrumentation of the publish pipeline)
+# ---------------------------------------------------------------------------
+
+# Called as hook(phase, step, leaf_index) from inside the background
+# publish pipeline: phase is "leaf" (before each arr_*.npy write) or
+# "manifest" (before the manifest write).  Raising from the hook aborts
+# the publish mid-write — exactly the torn state a process kill at that
+# point would leave — which is how the crash-consistency tests and
+# repro.runtime.faults drive the quarantine/fallback machinery
+# deterministically.  None disables (the default).
+_publish_fault_hook: Optional[Callable[[str, int, int], None]] = None
+
+
+def install_publish_fault_hook(hook) -> None:
+    """Install (or, with ``None``, remove) the publish fault hook."""
+    global _publish_fault_hook
+    _publish_fault_hook = hook
+
+
+# ---------------------------------------------------------------------------
+# Read guard (GC must never delete the step a restore is reading)
+# ---------------------------------------------------------------------------
+
+_read_lock = threading.Lock()
+_steps_being_read: dict = {}     # absolute step dir -> reader count
+
+
+class _reading:
+    """Context manager registering a step directory as actively read;
+    ``_gc`` (which runs on the background publish thread) skips any
+    registered directory, closing the delete-under-reader race."""
+
+    def __init__(self, d: str):
+        self.d = os.path.abspath(d)
+
+    def __enter__(self):
+        with _read_lock:
+            _steps_being_read[self.d] = _steps_being_read.get(self.d, 0) + 1
+        return self
+
+    def __exit__(self, *exc):
+        with _read_lock:
+            n = _steps_being_read.get(self.d, 1) - 1
+            if n <= 0:
+                _steps_being_read.pop(self.d, None)
+            else:
+                _steps_being_read[self.d] = n
+        return False
 
 
 def _leaf_paths(tree):
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return leaves, treedef
+
+
+def _crc(arr: np.ndarray) -> int:
+    """CRC32 of a leaf's raw bytes (dtype/shape are checked separately
+    via the manifest, so the payload bytes are the right digest scope)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
@@ -59,10 +166,23 @@ def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
     """Write one checkpoint; returns the publish thread (joined if
     ``blocking``).
 
+    ``keep`` prunes to the newest ``keep`` published steps after each
+    publish; ``keep=0`` means *unlimited retention* (GC disabled) — the
+    explicit contract, not an accident of slicing.  Negative values are
+    rejected.
+
     ``schema`` (optional) stamps the manifest with a caller-chosen
     layout identifier (e.g. the adaptive engine's frame-schema string);
     a later :func:`restore` with ``expect_schema=`` then fails loudly on
-    any mismatch instead of tripping shape asserts."""
+    any mismatch instead of tripping shape checks.
+
+    When ``blocking`` is true, a publish failure raises here; when
+    false, the exception is captured on the returned thread (``_exc``
+    attribute) and re-raised by :meth:`CheckpointManager.wait`.
+    """
+    if keep < 0:
+        raise ValueError(f"keep must be >= 0 (0 = keep everything), "
+                         f"got {keep}")
     os.makedirs(root, exist_ok=True)
     tmp = os.path.join(root, f"step_{step:08d}.tmp")
     final = os.path.join(root, f"step_{step:08d}")
@@ -74,7 +194,10 @@ def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
     host_leaves = [np.asarray(x) for x in leaves]  # gather to host
 
     def publish():
+        hook = _publish_fault_hook
         for i, arr in enumerate(host_leaves):
+            if hook is not None:
+                hook("leaf", step, i)
             np.save(os.path.join(tmp, f"arr_{i:06d}.npy"), arr)
         manifest = {
             "step": step,
@@ -82,10 +205,13 @@ def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
             "treedef": str(treedef),
             "dtypes": [str(a.dtype) for a in host_leaves],
             "shapes": [list(a.shape) for a in host_leaves],
+            "checksums": [_crc(a) for a in host_leaves],
             "metadata": metadata or {},
         }
         if schema is not None:
             manifest["schema"] = schema
+        if hook is not None:
+            hook("manifest", step, len(host_leaves))
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -93,18 +219,39 @@ def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
         os.replace(tmp, final)          # atomic publish
         _gc(root, keep)
 
-    t = threading.Thread(target=publish, daemon=True)
+    def run_publish():
+        try:
+            publish()
+        except BaseException as e:      # noqa: BLE001 — surfaced by wait()
+            t._exc = e
+
+    t = threading.Thread(target=run_publish, daemon=True)
+    t._exc = None
     t.start()
     if blocking:
         t.join()
+        if t._exc is not None:
+            raise t._exc
     return t
 
 
 def _gc(root: str, keep: int):
+    """Prune to the newest ``keep`` steps (``keep=0`` = keep all).
+
+    Runs on the background publish thread, strictly AFTER the new step's
+    atomic rename, and skips any step a concurrent :func:`restore` has
+    registered as being read — deleting a directory mid-read would feed
+    the reader a spurious "missing leaf" integrity failure."""
+    if keep == 0:
+        return
     steps = sorted(_list_steps(root))
-    for s in steps[:-keep] if keep else []:
-        shutil.rmtree(os.path.join(root, f"step_{s:08d}"),
-                      ignore_errors=True)
+    with _read_lock:
+        being_read = set(_steps_being_read)
+    for s in steps[:-keep]:
+        d = os.path.join(root, f"step_{s:08d}")
+        if os.path.abspath(d) in being_read:
+            continue
+        shutil.rmtree(d, ignore_errors=True)
 
 
 def _list_steps(root: str):
@@ -116,13 +263,124 @@ def _list_steps(root: str):
             try:
                 out.append(int(name[5:]))
             except ValueError:
-                pass
+                pass                    # .quarantined-N and friends
     return out
 
 
 def latest_step(root: str) -> Optional[int]:
     steps = _list_steps(root)
     return max(steps) if steps else None
+
+
+def _quarantine(root: str, step: int) -> Optional[str]:
+    """Rename a damaged step directory aside so ``latest_step`` /
+    fallback never consider it again; the bytes are preserved for post
+    mortem.  Returns the quarantine path (None if the rename failed —
+    e.g. the directory vanished, which achieves the same end)."""
+    d = os.path.join(root, f"step_{step:08d}")
+    for n in range(100):
+        q = f"{d}.quarantined-{n}"
+        if not os.path.exists(q):
+            try:
+                os.replace(d, q)
+                return q
+            except OSError:
+                return None
+    return None
+
+
+def _load_manifest(d: str) -> dict:
+    """Parse a step's manifest; any damage (missing file, torn JSON,
+    missing keys) is an integrity failure."""
+    path = os.path.join(d, "manifest.json")
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except FileNotFoundError as e:
+        raise CheckpointIntegrityError(
+            f"checkpoint {d} has no manifest.json (torn publish?)") from e
+    except (json.JSONDecodeError, OSError) as e:
+        raise CheckpointIntegrityError(
+            f"checkpoint {d} has a torn/unreadable manifest.json: "
+            f"{e}") from e
+    if "n_leaves" not in manifest:
+        raise CheckpointIntegrityError(
+            f"checkpoint {d} manifest carries no leaf table")
+    return manifest
+
+
+def _load_verified_arrays(d: str, manifest: dict) -> list:
+    """Load every leaf of a step, verifying the manifest's per-leaf CRC
+    stamps (checkpoints written before the stamps existed skip the CRC
+    comparison but still fail loudly on missing/unreadable files)."""
+    checksums = manifest.get("checksums")
+    arrays = []
+    for i in range(int(manifest["n_leaves"])):
+        path = os.path.join(d, f"arr_{i:06d}.npy")
+        try:
+            a = np.load(path)
+        except FileNotFoundError as e:
+            raise CheckpointIntegrityError(
+                f"checkpoint {d} is missing leaf file arr_{i:06d}.npy "
+                f"(torn publish?)") from e
+        except (ValueError, OSError) as e:
+            raise CheckpointIntegrityError(
+                f"checkpoint {d} leaf arr_{i:06d}.npy is unreadable: "
+                f"{e}") from e
+        if checksums is not None:
+            got = _crc(a)
+            if got != int(checksums[i]):
+                raise CheckpointIntegrityError(
+                    f"checkpoint {d} leaf arr_{i:06d}.npy fails its "
+                    f"checksum (manifest {int(checksums[i]):#010x}, "
+                    f"disk {got:#010x}) — corrupt or tampered bytes")
+        arrays.append(a)
+    return arrays
+
+
+def _restore_step(root: str, step: int, tree_like, shardings,
+                  expect_schema: Optional[str]):
+    """Verified restore of ONE specific step (no fallback)."""
+    d = os.path.join(root, f"step_{step:08d}")
+    with _reading(d):
+        manifest = _load_manifest(d)
+        if expect_schema is not None:
+            found = manifest.get("schema")
+            if found != expect_schema:
+                detail = (f"it is stamped {found!r}" if found is not None
+                          else "it carries no schema stamp (written by a "
+                               "pre-schema version of this code)")
+                raise CheckpointSchemaError(
+                    f"checkpoint {d} does not match the expected state "
+                    f"layout: restorer expects schema {expect_schema!r} "
+                    f"but {detail}. The stored run state is structurally "
+                    "incompatible — restart the run fresh (or point "
+                    "checkpoint_dir at a directory written with the same "
+                    "schema).")
+        leaves, treedef = _leaf_paths(tree_like)
+        if int(manifest["n_leaves"]) != len(leaves):
+            raise CheckpointLayoutError(
+                f"checkpoint {d} has {manifest['n_leaves']} leaves, "
+                f"restorer expects {len(leaves)}")
+        arrays = _load_verified_arrays(d, manifest)
+    for i, (a, ref) in enumerate(zip(arrays, leaves)):
+        if tuple(a.shape) != tuple(ref.shape):
+            raise CheckpointLayoutError(
+                f"checkpoint {d} leaf {i} has shape {tuple(a.shape)}, "
+                f"restorer expects {tuple(ref.shape)}")
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(shardings)
+        if len(shard_leaves) != len(arrays):
+            raise CheckpointLayoutError(
+                f"sharding tree has {len(shard_leaves)} leaves, "
+                f"checkpoint has {len(arrays)} — trees must align "
+                f"leaf-for-leaf")
+        placed = [jax.device_put(a, s)
+                  for a, s in zip(arrays, shard_leaves)]
+    else:
+        placed = [jax.numpy.asarray(a) for a in arrays]
+    tree = jax.tree_util.tree_unflatten(treedef, placed)
+    return tree, step, manifest["metadata"]
 
 
 def restore(root: str, tree_like, *, step: Optional[int] = None,
@@ -137,53 +395,86 @@ def restore(root: str, tree_like, *, step: Optional[int] = None,
     match it exactly; a mismatch (or an unstamped checkpoint written by
     a pre-schema version of the caller) raises
     :class:`CheckpointSchemaError` *before* any leaf/shape check.
-    Returns (tree, step, metadata).
+
+    With ``step=None`` (the default) the newest step is tried first and
+    any step failing *integrity* verification (torn manifest, missing
+    leaf, checksum mismatch) is quarantined and the next-newest tried —
+    the automatic crash/corruption recovery path.  Layout and schema
+    mismatches are CALLER incompatibilities and propagate immediately
+    (the bytes are fine; falling back would silently resurrect an older
+    run).  An explicit ``step`` is restored exactly or raises — no
+    quarantine, no fallback (a pinned step is a debugging request).
+
+    Returns (tree, step, metadata); raises ``FileNotFoundError`` when no
+    verifiable checkpoint exists under ``root``.
     """
-    if step is None:
-        step = latest_step(root)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint under {root}")
-    d = os.path.join(root, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    if expect_schema is not None:
-        found = manifest.get("schema")
-        if found != expect_schema:
-            detail = (f"it is stamped {found!r}" if found is not None else
-                      "it carries no schema stamp (written by a pre-schema "
-                      "version of this code)")
-            raise CheckpointSchemaError(
-                f"checkpoint {d} does not match the expected state layout: "
-                f"restorer expects schema {expect_schema!r} but {detail}. "
-                "The stored run state is structurally incompatible — "
-                "restart the run fresh (or point checkpoint_dir at a "
-                "directory written with the same schema).")
-    leaves, treedef = _leaf_paths(tree_like)
-    assert manifest["n_leaves"] == len(leaves), (
-        f"checkpoint has {manifest['n_leaves']} leaves, "
-        f"model expects {len(leaves)}")
-    arrays = [np.load(os.path.join(d, f"arr_{i:06d}.npy"))
-              for i in range(len(leaves))]
-    for a, ref in zip(arrays, leaves):
-        assert tuple(a.shape) == tuple(ref.shape), (a.shape, ref.shape)
-    if shardings is not None:
-        shard_leaves = jax.tree_util.tree_leaves(shardings)
-        assert len(shard_leaves) == len(arrays), (
-            f"sharding tree has {len(shard_leaves)} leaves, checkpoint "
-            f"has {len(arrays)} — trees must align leaf-for-leaf")
-        placed = [jax.device_put(a, s)
-                  for a, s in zip(arrays, shard_leaves)]
-    else:
-        placed = [jax.numpy.asarray(a) for a in arrays]
-    tree = jax.tree_util.tree_unflatten(treedef, placed)
-    return tree, step, manifest["metadata"]
+    if step is not None:
+        return _restore_step(root, step, tree_like, shardings,
+                             expect_schema)
+    while True:
+        s = latest_step(root)
+        if s is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+        try:
+            return _restore_step(root, s, tree_like, shardings,
+                                 expect_schema)
+        except CheckpointIntegrityError:
+            _quarantine(root, s)        # fall back to the next-newest
+
+
+def restore_arrays(root: str, *, step: Optional[int] = None,
+                   expect_schema: Optional[str] = None):
+    """Verified RAW restore: the host leaf arrays of a step, without a
+    template tree — (list of np arrays, step, metadata).
+
+    The shape-agnostic entry point of the *elastic* paths: a caller
+    migrating state across device counts or lanes (the degradation
+    ladder of ``repro.runtime.supervisor``) cannot present a matching
+    ``tree_like`` because the shapes are exactly what it is about to
+    change.  Integrity verification, quarantine and newest-verifying
+    fallback behave as in :func:`restore`; schema enforcement applies
+    when ``expect_schema`` is given.
+    """
+    def load_one(s: int):
+        d = os.path.join(root, f"step_{s:08d}")
+        with _reading(d):
+            manifest = _load_manifest(d)
+            if expect_schema is not None and \
+                    manifest.get("schema") != expect_schema:
+                raise CheckpointSchemaError(
+                    f"checkpoint {d} is stamped "
+                    f"{manifest.get('schema')!r}, expected "
+                    f"{expect_schema!r}")
+            return (_load_verified_arrays(d, manifest), s,
+                    manifest["metadata"])
+
+    if step is not None:
+        return load_one(step)
+    while True:
+        s = latest_step(root)
+        if s is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+        try:
+            return load_one(s)
+        except CheckpointIntegrityError:
+            _quarantine(root, s)
 
 
 class CheckpointManager:
-    """Keep-last-k manager with async publishing and restart recovery."""
+    """Keep-last-k manager with async publishing and restart recovery.
+
+    ``keep=0`` disables garbage collection (unlimited retention) — same
+    contract as :func:`save`.  Async publish failures are captured and
+    re-raised from the next :meth:`wait` or :meth:`maybe_save` call, so
+    a disk-full or permission error can never be silently swallowed by
+    the background thread.
+    """
 
     def __init__(self, root: str, keep: int = 3, save_every: int = 100,
                  schema: Optional[str] = None):
+        if keep < 0:
+            raise ValueError(f"keep must be >= 0 (0 = keep everything), "
+                             f"got {keep}")
         self.root = root
         self.keep = keep
         self.save_every = save_every
@@ -193,20 +484,26 @@ class CheckpointManager:
     def maybe_save(self, step: int, tree, metadata=None):
         if step % self.save_every:
             return False
-        self.wait()
+        self.wait()                     # raises if the previous save died
         self._pending = save(self.root, step, tree, metadata=metadata,
                              keep=self.keep, blocking=False,
                              schema=self.schema)
         return True
 
     def wait(self):
+        """Join the in-flight publish; re-raises its failure, if any."""
         if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+            t, self._pending = self._pending, None
+            t.join()
+            exc = getattr(t, "_exc", None)
+            if exc is not None:
+                raise exc
 
     def restore_or_none(self, tree_like, shardings=None):
-        # a schema mismatch propagates (CheckpointSchemaError): restoring
-        # an incompatible layout must be loud, never a silent fresh start
+        # integrity failures are handled INSIDE restore (quarantine +
+        # fallback); only "nothing restorable at all" maps to None.
+        # A schema or layout mismatch propagates: restoring an
+        # incompatible layout must be loud, never a silent fresh start.
         try:
             return restore(self.root, tree_like, shardings=shardings,
                            expect_schema=self.schema)

@@ -63,7 +63,8 @@ def run_kadabra(graph, *, eps: Optional[float] = None,
                 key=None, mesh: Optional[Mesh] = None,
                 config: Optional[AdaptiveConfig] = None,
                 checkpoint_dir: Optional[str] = None,
-                checkpoint_every: int = 1) -> BetweennessResult:
+                checkpoint_every: int = 1,
+                on_epoch=None) -> BetweennessResult:
     """Approximate betweenness with the paper's parallel KADABRA.
 
     A thin wrapper over ``repro.core.engine.run_adaptive`` with the
@@ -85,11 +86,16 @@ def run_kadabra(graph, *, eps: Optional[float] = None,
     ``checkpoint_dir`` enables schema-stamped mid-run persistence; a
     rerun pointed at the same directory resumes from the latest
     checkpoint with a bit-identical trajectory.
+
+    ``on_epoch`` is the engine's per-epoch supervision hook (see
+    ``run_adaptive``) — the seam ``repro.runtime.supervisor`` attaches
+    its watchdog and fault injection to.
     """
     res: AdaptiveRunResult = run_adaptive(
         graph, ("betweenness",), eps=eps, delta=delta, key=key, mesh=mesh,
         config=config, checkpoint_dir=checkpoint_dir,
-        checkpoint_every=checkpoint_every, stream="bidir")
+        checkpoint_every=checkpoint_every, stream="bidir",
+        on_epoch=on_epoch)
     rep = res.reports[0]
     stats = [EpochStats(s.epoch, s.tau, s.max_f[0], s.max_g[0], s.seconds)
              for s in res.stats]

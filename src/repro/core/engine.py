@@ -803,7 +803,8 @@ def run_adaptive(graph, metrics=("betweenness",), *,
                  config: Optional[AdaptiveConfig] = None,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 1,
-                 stream: Optional[str] = None) -> AdaptiveRunResult:
+                 stream: Optional[str] = None,
+                 on_epoch=None) -> AdaptiveRunResult:
     """Adaptive sampling for one or more centrality estimators.
 
     ``metrics`` names the estimator plugins (``repro.core.estimators``):
@@ -826,6 +827,17 @@ def run_adaptive(graph, metrics=("betweenness",), *,
 
     ``checkpoint_dir`` enables schema-stamped mid-run persistence with
     bit-identical resume (see :class:`_EngineCheckpointer`).
+
+    ``on_epoch(epoch, state)`` is an optional supervision hook (the
+    resilience layer, :mod:`repro.runtime.supervisor`) called once per
+    completed epoch with the 1-based epoch number and the lane's
+    6-leaf state tuple, BEFORE the epoch is frozen into any metric
+    snapshot and before it is checkpointed — so a hook that raises
+    aborts the epoch without persisting it (the rollback contract),
+    and a hook that returns a replacement state tuple (``None`` keeps
+    the current one) substitutes it for everything downstream.  If the
+    hook raises, pending async checkpoint publishes of *earlier* good
+    epochs are still flushed before the exception propagates.
     """
     cfg = config if config is not None else AdaptiveConfig()
     overrides = {}
@@ -898,38 +910,58 @@ def run_adaptive(graph, metrics=("betweenness",), *,
     stats = []
     last_flush = None
     t0 = time.perf_counter()
-    while not stopped.all() and epoch < cfg.max_epochs:
-        te = time.perf_counter()
-        k, ke = jax.random.split(k)
-        out = epoch_run(state, ke)
-        state, (done, mf, mg) = out[:6], out[6:]
-        epoch += 1
-        newly = np.asarray(done) & ~stopped
-        if newly.any():
-            # freeze the newly stopped metrics' deciding snapshot: the
-            # flush of THIS epoch's state — identical to what each
-            # metric's single-run result would be at the same seed
-            # (f/g are non-monotone, so re-reading a later snapshot
-            # would not reproduce the single-run decision)
-            last_flush = flush(state)
-            fl_c, fl_t = last_flush
-            rows = jnp.asarray(np.isin(row_metric, np.nonzero(newly)[0]))
-            newly_j = jnp.asarray(newly)
-            frozen_c = jnp.where(rows[:, None], fl_c, frozen_c)
-            frozen_tau = jnp.where(newly_j, fl_t, frozen_tau)
-            stop_epoch = jnp.where(newly_j, jnp.int32(epoch), stop_epoch)
-            stopped = stopped | newly
-        stats.append(EngineEpochStats(
-            epoch, int(state[1]),
-            tuple(float(x) for x in np.asarray(mf)),
-            tuple(float(x) for x in np.asarray(mg)),
-            time.perf_counter() - te))
+    try:
+        while not stopped.all() and epoch < cfg.max_epochs:
+            te = time.perf_counter()
+            k, ke = jax.random.split(k)
+            out = epoch_run(state, ke)
+            state, (done, mf, mg) = out[:6], out[6:]
+            epoch += 1
+            if on_epoch is not None:
+                # supervision point: runs before freeze + save so a
+                # refused (or replaced) epoch never reaches a snapshot
+                # or the checkpoint store.  Pending async publishes are
+                # flushed first: the hook (and any disk fault it
+                # injects) must observe a settled on-disk state, and a
+                # swallowed publish error surfaces at the epoch after
+                # its save, not at the end of the run
+                if ckpt is not None:
+                    ckpt.wait()
+                replacement = on_epoch(epoch, state)
+                if replacement is not None:
+                    state = tuple(replacement)
+            newly = np.asarray(done) & ~stopped
+            if newly.any():
+                # freeze the newly stopped metrics' deciding snapshot:
+                # the flush of THIS epoch's state — identical to what
+                # each metric's single-run result would be at the same
+                # seed (f/g are non-monotone, so re-reading a later
+                # snapshot would not reproduce the single-run decision)
+                last_flush = flush(state)
+                fl_c, fl_t = last_flush
+                rows = jnp.asarray(
+                    np.isin(row_metric, np.nonzero(newly)[0]))
+                newly_j = jnp.asarray(newly)
+                frozen_c = jnp.where(rows[:, None], fl_c, frozen_c)
+                frozen_tau = jnp.where(newly_j, fl_t, frozen_tau)
+                stop_epoch = jnp.where(newly_j, jnp.int32(epoch),
+                                       stop_epoch)
+                stopped = stopped | newly
+            stats.append(EngineEpochStats(
+                epoch, int(state[1]),
+                tuple(float(x) for x in np.asarray(mf)),
+                tuple(float(x) for x in np.asarray(mg)),
+                time.perf_counter() - te))
+            if ckpt is not None:
+                ckpt.save_state(
+                    epoch, state + (frozen_c, frozen_tau, stop_epoch, k),
+                    done=bool(stopped.all()))
+    finally:
+        # flush pending async publishes even when the loop aborts (an
+        # on_epoch supervisor raising) — earlier good epochs must land,
+        # and a swallowed publish error must surface here, not vanish
         if ckpt is not None:
-            ckpt.save_state(
-                epoch, state + (frozen_c, frozen_tau, stop_epoch, k),
-                done=bool(stopped.all()))
-    if ckpt is not None:
-        ckpt.wait()
+            ckpt.wait()
     converged = stopped.copy()
     if not stopped.all():
         # max_epochs freeze of whatever never converged (reported with

@@ -95,7 +95,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import CSCLayout, Graph, bucket_layout
+from .graph import CSCLayout, Graph, bucket_layout, build_graph
 
 __all__ = [
     "ShardedCSCLayout",
@@ -103,6 +103,8 @@ __all__ = [
     "ExchangePlan",
     "axis_tuple",
     "partition_graph",
+    "gather_graph",
+    "repartition",
     "vertex_owner",
     "global_row",
     "shard_vertex_range",
@@ -552,6 +554,41 @@ def partition_graph(graph: Graph, n_shards: int, *,
         exchange_budget=_resolve_exchange_budget(
             shard_rows, block_v, exchange_budget),
         exchange_budget_auto=budget_auto)
+
+
+def gather_graph(pg: PartitionedGraph) -> Graph:
+    """Reconstruct the replicated :class:`Graph` a partition was built
+    from — the degradation ladder's sharded → replicated transition
+    (``repro.runtime.supervisor``): after a device loss the surviving
+    mesh needs either a re-partition or the plain graph, and the caller
+    may no longer hold the original.
+
+    The partition keeps the full CSR arrays replicated
+    (``indptr``/``indices``/``degree``), so the directed edge list is
+    recovered exactly: ``src`` repeats each row by its CSR extent,
+    ``dst`` is the used prefix of ``indices``.  ``build_graph``'s
+    stable sort over an already-CSR-ordered list is the identity, so
+    the result is bit-identical to the original (same CSR, same CSC
+    buckets, same sampler arithmetic)."""
+    indptr = np.asarray(pg.indptr, dtype=np.int64)
+    counts = np.diff(indptr)[: pg.n_nodes]
+    src = np.repeat(np.arange(pg.n_nodes, dtype=np.int64), counts)
+    dst = np.asarray(pg.indices, dtype=np.int64)[: pg.n_edges]
+    return build_graph(src, dst, pg.n_nodes)
+
+
+def repartition(pg: PartitionedGraph, n_shards: int, *,
+                batch: int = 16) -> PartitionedGraph:
+    """Re-split a partition onto ``n_shards`` shards (the elastic-shrink
+    path: 8 devices die down to 4, the sharded cooperative lane carries
+    on with a 4-way partition of the same graph).  Gathers the original
+    graph from the replicated CSR and partitions fresh — blocking is
+    re-derived for the new shard count, and an ``"auto"`` exchange
+    budget stays auto so the new partition re-calibrates its own sparse
+    exchange on the surviving mesh."""
+    return partition_graph(
+        gather_graph(pg), n_shards, batch=batch,
+        exchange_budget="auto" if pg.exchange_budget_auto else None)
 
 
 def abstract_partitioned_graph(n_nodes: int, n_edges_directed: int,

@@ -1,0 +1,24 @@
+"""Resilience layer for the adaptive-sampling engine.
+
+``faults`` is the deterministic fault-injection harness (seeded
+schedules of kill / shrink / corrupt / truncate / nan / hang events);
+``supervisor`` is the :class:`ResilientRunner` that drives
+``repro.core.engine.run_adaptive`` through them — bounded retry with
+backoff, per-epoch invariant watchdog with rollback, and the elastic
+degradation ladder (sharded cooperative → SPMD replicated →
+single-device).  See DESIGN.md §Fault tolerance.
+"""
+from .faults import (DeviceLoss, FaultContext, FaultSchedule, FaultSpec,
+                     InjectedFault, apply_fault, available_faults)
+from .supervisor import (EpochTimeoutError, InvariantViolation,
+                         ResilienceExhausted, ResilientRunner,
+                         ResilientRunResult, RetryPolicy, RunEvent,
+                         check_state_invariants, elastic_migrate_state)
+
+__all__ = [
+    "DeviceLoss", "FaultContext", "FaultSchedule", "FaultSpec",
+    "InjectedFault", "apply_fault", "available_faults",
+    "EpochTimeoutError", "InvariantViolation", "ResilienceExhausted",
+    "ResilientRunner", "ResilientRunResult", "RetryPolicy", "RunEvent",
+    "check_state_invariants", "elastic_migrate_state",
+]

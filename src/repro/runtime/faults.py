@@ -1,0 +1,301 @@
+"""Deterministic fault injection for the adaptive-sampling runtime.
+
+A long cooperative run on real multi-host hardware dies in a small
+number of well-understood ways: a host drops out of the mesh (the
+paper's 16-node cluster loses a node), a checkpoint is torn or
+bit-rotted on disk, an accelerator NaNs a frame, a collective hangs.
+This module turns each of those into a *seeded, replayable* event so
+the resilience layer (:mod:`repro.runtime.supervisor`) can be tested —
+and benchmarked (``benchmarks/run.py fault_matrix``) — against the
+exact failure sequence every time, instead of hoping chaos strikes in
+CI.
+
+Fault taxonomy (the registry keys — audited by
+``tools/check_kernels.py``: every kind must be exercised by at least
+one test):
+
+  ``kill``       mid-epoch process death: the epoch's work is lost, the
+                 run must resume from the last good checkpoint
+                 (in-process it raises :class:`InjectedFault`; the
+                 crash-consistency tests additionally kill the real
+                 publish pipeline via the checkpoint store's fault
+                 hook).
+  ``shrink``     device-count shrink: ``survivors`` devices remain
+                 (raises :class:`DeviceLoss`; the supervisor
+                 re-partitions onto the surviving mesh via the store's
+                 elastic restore — the degradation ladder).
+  ``corrupt``    checkpoint corruption: flips bytes in the newest
+                 published step's first leaf, then kills — restore must
+                 detect the damage (per-leaf checksums), quarantine the
+                 step and fall back.
+  ``truncate``   torn checkpoint: truncates the newest step's
+                 ``manifest.json`` mid-JSON, then kills — the classic
+                 power-loss tear.
+  ``nan``        NaN/Inf poisoning of the in-flight epoch frame (a
+                 device computing garbage): returns a poisoned state;
+                 the supervisor's invariant watchdog must catch it and
+                 roll back instead of silently diverging.
+  ``hang``       delayed/hung epoch step: sleeps ``delay`` seconds
+                 inside the epoch hook; the supervisor's
+                 ``epoch_timeout`` must flag the overrun and retry.
+
+Faults are *one-shot*: a schedule entry fires at its epoch on the
+attempt it first becomes reachable and never again, so a retried run
+replays the surviving suffix deterministically (this is what makes the
+"final estimate bit-identical to an uninterrupted run" acceptance
+testable).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["InjectedFault", "DeviceLoss", "FaultSpec", "FaultSchedule",
+           "FaultContext", "available_faults", "apply_fault",
+           "corrupt_newest_step", "truncate_newest_manifest",
+           "poison_state"]
+
+
+class InjectedFault(RuntimeError):
+    """A scheduled fault fired — semantically a process death: the
+    current ``run_adaptive`` call is torn down and the supervisor's
+    retry path takes over from the last good checkpoint."""
+
+
+class DeviceLoss(RuntimeError):
+    """Part of the mesh is gone; ``survivors`` devices remain.  The
+    supervisor answers with the degradation ladder (re-partition onto
+    the surviving devices, or drop to a weaker lane)."""
+
+    def __init__(self, survivors: int, message: str = ""):
+        super().__init__(message or f"device loss: {survivors} survivors")
+        self.survivors = int(survivors)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultContext:
+    """What a firing fault may touch: the run's checkpoint directory
+    (disk faults), and the current device count (shrink defaults)."""
+    checkpoint_root: Optional[str] = None
+    n_devices: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One scheduled fault: ``kind`` (a registry key), the ``epoch`` it
+    fires at (1-based, matching the engine's epoch counter), and
+    kind-specific parameters (``survivors`` for shrink, ``delay``
+    seconds for hang)."""
+    kind: str
+    epoch: int
+    survivors: Optional[int] = None
+    delay: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in _FAULTS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r} "
+                f"(registered: {available_faults()})")
+
+
+# ---------------------------------------------------------------------------
+# Disk-fault primitives (shared with the crash-consistency tests)
+# ---------------------------------------------------------------------------
+
+def _newest_step_dir(root: Optional[str]) -> Optional[str]:
+    if not root or not os.path.isdir(root):
+        return None
+    from repro.checkpoint.store import latest_step
+    s = latest_step(root)
+    if s is None:
+        return None
+    return os.path.join(root, f"step_{s:08d}")
+
+
+def corrupt_newest_step(root: Optional[str]) -> Optional[str]:
+    """Flip bytes in the middle of the newest published step's first
+    leaf file (``arr_000000.npy``) — simulated bit rot / torn write.
+    Returns the damaged path, or None when there is nothing to damage
+    (no published step yet: the paired ``kill`` still fires, so the
+    schedule stays deterministic)."""
+    d = _newest_step_dir(root)
+    if d is None:
+        return None
+    path = os.path.join(d, "arr_000000.npy")
+    if not os.path.exists(path):
+        return None
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.seek(size // 2)
+        chunk = f.read(8)
+        f.seek(size // 2)
+        f.write(bytes(b ^ 0xFF for b in chunk) or b"\xff")
+    return path
+
+
+def truncate_newest_manifest(root: Optional[str]) -> Optional[str]:
+    """Cut the newest step's ``manifest.json`` in half — the torn state
+    a power loss mid-write leaves behind.  Returns the torn path (None
+    when no step exists yet)."""
+    d = _newest_step_dir(root)
+    if d is None:
+        return None
+    path = os.path.join(d, "manifest.json")
+    if not os.path.exists(path):
+        return None
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(1, size // 2))
+    return path
+
+
+def poison_state(state):
+    """Return ``state`` with its in-flight frame counts (leaf 2 of the
+    engine's lane state) NaN/Inf-poisoned — what a faulting device
+    writes.  The poisoned values sit in the *frame*, not the aggregate:
+    exactly the state the invariant watchdog must refuse to let fold
+    into the next consistent snapshot."""
+    import jax.numpy as jnp
+    state = list(state)
+    fc = jnp.asarray(state[2])
+    flat = fc.reshape(-1)
+    flat = flat.at[0].set(jnp.nan)
+    if flat.shape[0] > 1:
+        flat = flat.at[1].set(jnp.inf)
+    state[2] = flat.reshape(fc.shape)
+    return tuple(state)
+
+
+# ---------------------------------------------------------------------------
+# The registry
+# ---------------------------------------------------------------------------
+
+def _fire_kill(spec: FaultSpec, ctx: FaultContext, state):
+    raise InjectedFault(f"injected process kill at epoch {spec.epoch}")
+
+
+def _fire_shrink(spec: FaultSpec, ctx: FaultContext, state):
+    survivors = (spec.survivors if spec.survivors is not None
+                 else max(1, ctx.n_devices // 2))
+    raise DeviceLoss(survivors,
+                     f"injected device loss at epoch {spec.epoch}: "
+                     f"{ctx.n_devices} -> {survivors}")
+
+
+def _fire_corrupt(spec: FaultSpec, ctx: FaultContext, state):
+    hit = corrupt_newest_step(ctx.checkpoint_root)
+    raise InjectedFault(
+        f"injected checkpoint corruption at epoch {spec.epoch} "
+        f"({hit or 'no step on disk yet'}), then kill")
+
+
+def _fire_truncate(spec: FaultSpec, ctx: FaultContext, state):
+    hit = truncate_newest_manifest(ctx.checkpoint_root)
+    raise InjectedFault(
+        f"injected torn manifest at epoch {spec.epoch} "
+        f"({hit or 'no step on disk yet'}), then kill")
+
+
+def _fire_nan(spec: FaultSpec, ctx: FaultContext, state):
+    return poison_state(state)
+
+
+def _fire_hang(spec: FaultSpec, ctx: FaultContext, state):
+    time.sleep(float(spec.delay))
+    return state
+
+
+_FAULTS = {
+    "kill": _fire_kill,
+    "shrink": _fire_shrink,
+    "corrupt": _fire_corrupt,
+    "truncate": _fire_truncate,
+    "nan": _fire_nan,
+    "hang": _fire_hang,
+}
+
+
+def available_faults() -> tuple:
+    """Registered fault kinds, sorted — the audit surface of
+    ``tools/check_kernels.py``'s fault-coverage check."""
+    return tuple(sorted(_FAULTS))
+
+
+def apply_fault(spec: FaultSpec, ctx: FaultContext, state):
+    """Fire one fault against the current engine state.  Disk and
+    process faults raise (:class:`InjectedFault` / :class:`DeviceLoss`);
+    state faults (``nan``, ``hang``) return the (possibly replaced)
+    state tuple."""
+    return _FAULTS[spec.kind](spec, ctx, state)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+class FaultSchedule:
+    """An ordered, one-shot set of :class:`FaultSpec`.
+
+    ``take(epoch)`` returns the not-yet-fired specs scheduled at
+    ``epoch`` and marks them fired — so a retried run that passes
+    through the same epoch again does NOT re-trip the same fault (the
+    fault modelled a transient event, and re-firing forever would make
+    every schedule fatal).  ``reset()`` re-arms everything (a fresh
+    matrix cell).
+
+    :meth:`from_seed` derives a deterministic schedule from a seed —
+    the fault-matrix sweep's reproducibility contract: same seed, same
+    kinds, same epochs, every run.
+    """
+
+    def __init__(self, specs):
+        self.specs = tuple(specs)
+        self._fired = [False] * len(self.specs)
+
+    def __len__(self):
+        return len(self.specs)
+
+    def __iter__(self):
+        return iter(self.specs)
+
+    def take(self, epoch: int):
+        out = []
+        for i, spec in enumerate(self.specs):
+            if not self._fired[i] and spec.epoch == epoch:
+                self._fired[i] = True
+                out.append(spec)
+        return out
+
+    @property
+    def exhausted(self) -> bool:
+        return all(self._fired)
+
+    def reset(self):
+        self._fired = [False] * len(self.specs)
+
+    @classmethod
+    def from_seed(cls, seed: int, *, kinds=None, n_faults: int = 4,
+                  max_epoch: int = 8, survivors: Optional[int] = None,
+                  hang_delay: float = 0.05) -> "FaultSchedule":
+        """Deterministic schedule: ``n_faults`` draws of (kind, epoch)
+        from ``kinds`` (default: every registered kind) over epochs
+        ``[1, max_epoch]``.  Two calls with the same arguments produce
+        the same schedule, byte for byte."""
+        rng = np.random.default_rng(seed)
+        kinds = tuple(kinds) if kinds is not None else available_faults()
+        for k in kinds:
+            if k not in _FAULTS:
+                raise ValueError(f"unknown fault kind {k!r}")
+        specs = []
+        for _ in range(n_faults):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            epoch = int(rng.integers(1, max_epoch + 1))
+            specs.append(FaultSpec(kind, epoch, survivors=survivors,
+                                   delay=hang_delay))
+        # stable order: by epoch, then original draw order
+        specs.sort(key=lambda s: s.epoch)
+        return cls(specs)

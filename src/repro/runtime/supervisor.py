@@ -1,0 +1,437 @@
+"""The resilience layer: drive ``run_adaptive`` through faults.
+
+KADABRA's anytime invariant makes the *epoch* the natural recovery
+unit: the aggregated snapshot after any epoch is a valid intermediate
+state, and the engine already persists it atomically
+(``repro.core.engine._EngineCheckpointer`` over
+``repro.checkpoint.store``), with the RNG key saved post-split so a
+resumed trajectory is bit-identical.  What was missing is the loop
+around the loop — the part that notices a run died, decides whether
+the state it left behind can be trusted, and re-enters with whatever
+hardware is still alive.  That is :class:`ResilientRunner`:
+
+  * **bounded retry** with exponential backoff + deterministic jitter:
+    a failed ``run_adaptive`` call (injected or real) is re-entered
+    from the last good checkpoint up to ``RetryPolicy.max_retries``
+    times per ladder rung;
+  * **invariant watchdog**: after every epoch (the engine's
+    ``on_epoch`` hook) the lane state is checked — finite frames,
+    non-negative counts, monotone aggregated tau.  A violation raises
+    BEFORE the epoch is checkpointed, so the poisoned epoch is never
+    persisted and the retry resumes from the last *good* snapshot:
+    rollback instead of silent divergence;
+  * **degradation ladder**: a device loss re-partitions the graph onto
+    the surviving mesh (sharded cooperative stays sharded, smaller);
+    when a rung exhausts its retries the runner drops a lane — sharded
+    cooperative -> SPMD replicated -> single device — and only gives up
+    when the single-device lane itself exhausts its budget.
+
+Sample accounting across re-entry is *exact*: the migrated state keeps
+the aggregated snapshot (``agg_counts``/``agg_tau`` — only fully
+reduced epochs ever enter it) and the per-metric frozen snapshots, and
+**discards the in-flight frame and surplus** (their draws were never
+tau-counted, so dropping them loses at most one epoch of work and can
+never double-count a sample).  Same-lane recovery (kill, corruption,
+poisoned frame, hang) replays the interrupted suffix with the
+checkpointed key and is bit-identical to an uninterrupted run; a lane
+or mesh change re-derives the calibration stream on the new lane, so
+its results are "only" within the same (eps, delta) guarantee — see
+DESIGN.md §Fault tolerance for the argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import (CheckpointError, restore_arrays,
+                                    save as checkpoint_save)
+from repro.core.engine import (AdaptiveRunResult, _pad_len,
+                               resolve_estimators, resolve_stream,
+                               run_adaptive, total_channels)
+from repro.core.epoch import frame_schema_id
+from repro.core.graph import Graph
+from repro.core.partition import (PartitionedGraph, gather_graph,
+                                  partition_graph)
+
+from .faults import (DeviceLoss, FaultContext, FaultSchedule, InjectedFault,
+                     apply_fault)
+
+__all__ = ["ResilientRunner", "ResilientRunResult", "RetryPolicy",
+           "RunEvent", "InvariantViolation", "EpochTimeoutError",
+           "ResilienceExhausted", "check_state_invariants",
+           "elastic_migrate_state", "LANE_LADDER"]
+
+# The degradation ladder, strongest surviving lane first.  "sharded" is
+# the cooperative vertex-sharded lane (PartitionedGraph + mesh), "spmd"
+# the replicated per-device-independent lane (Graph + mesh), "single"
+# the one-device lane (Graph, mesh=None).
+LANE_LADDER = ("sharded", "spmd", "single")
+
+
+class InvariantViolation(RuntimeError):
+    """The per-epoch watchdog refused the lane state (non-finite frame,
+    negative count, or non-monotone tau) — the epoch is rolled back."""
+
+
+class EpochTimeoutError(RuntimeError):
+    """An epoch took longer than ``epoch_timeout`` seconds — treated as
+    a hung step (stuck collective / dead host) and retried."""
+
+
+class ResilienceExhausted(RuntimeError):
+    """Every rung of the ladder exhausted its retry budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry with exponential backoff + jitter.
+
+    ``sleep(attempt) = min(cap, base * factor**(attempt-1)) * (1 + U *
+    jitter)`` with U ~ Uniform[0, 1) from the runner's seeded RNG —
+    deterministic for a fixed seed, so fault-matrix runs are
+    replayable while real deployments still decorrelate their retry
+    storms."""
+    max_retries: int = 4
+    backoff_base: float = 0.05
+    backoff_factor: float = 2.0
+    backoff_cap: float = 2.0
+    jitter: float = 0.25
+
+    def sleep_seconds(self, attempt: int, u: float) -> float:
+        base = min(self.backoff_cap,
+                   self.backoff_base * self.backoff_factor ** max(
+                       0, attempt - 1))
+        return base * (1.0 + float(u) * self.jitter)
+
+
+class RunEvent(NamedTuple):
+    """One entry of the resilience telemetry log."""
+    kind: str       # fault | failure | retry | shrink | degrade | migrate
+    epoch: int      # engine epoch the event is attributed to (0 = outside)
+    attempt: int    # failures seen at the current rung when it happened
+    detail: str
+
+
+class ResilientRunResult(NamedTuple):
+    result: AdaptiveRunResult   # the completing run's result
+    events: tuple               # RunEvent log, in order
+    attempts: int               # total failed run_adaptive calls
+    lane: str                   # lane that completed the run
+    n_devices: int              # device count that completed the run
+
+
+# ---------------------------------------------------------------------------
+# Watchdog + elastic state migration (module-level: unit-testable, and
+# usable by code that embeds the engine without the full runner)
+# ---------------------------------------------------------------------------
+
+def check_state_invariants(state, last_tau: Optional[int] = None) -> int:
+    """Validate one lane state tuple ``(agg_c, agg_t, frame_c, frame_t,
+    sur_c, sur_t)``; returns the aggregated tau for the caller's
+    monotonicity tracking.
+
+    Checks: every leaf finite; count frames non-negative (counts are
+    sums of non-negative per-sample contributions, so any negative
+    entry is corruption, not statistics); tau counters non-negative;
+    aggregated tau monotone non-decreasing vs ``last_tau``.  Raises
+    :class:`InvariantViolation` with the failing leaf named.
+    """
+    names = ("agg_counts", "agg_tau", "frame_counts", "frame_tau",
+             "surplus_counts", "surplus_tau")
+    host = [np.asarray(x) for x in state]
+    for name, arr in zip(names, host):
+        if not np.isfinite(arr).all():
+            raise InvariantViolation(
+                f"non-finite values in {name} (NaN/Inf-poisoned frame?)")
+    for name, arr in zip(names[0::2], host[0::2]):
+        if arr.size and arr.min() < 0:
+            raise InvariantViolation(
+                f"negative entries in {name} (min {arr.min()})")
+    for name, arr in zip(names[1::2], host[1::2]):
+        if int(arr) < 0:
+            raise InvariantViolation(f"negative sample counter {name}")
+    agg_tau = int(host[1])
+    if last_tau is not None and agg_tau < last_tau:
+        raise InvariantViolation(
+            f"aggregated tau went backwards: {agg_tau} < {last_tau}")
+    return agg_tau
+
+
+def elastic_migrate_state(arrays, *, n_channels: int, v1: int,
+                          v_pad_new: int, lane_new: str, n_dev_new: int):
+    """Adapt the engine's 10-leaf checkpoint state across lanes and
+    device counts (the elastic half of the degradation ladder).
+
+    Kept bit-for-bit: the aggregated snapshot (``agg_counts`` /
+    ``agg_tau`` — only fully reduced epochs ever enter it), the frozen
+    per-metric snapshots, stop epochs and the RNG key; counts rows are
+    re-padded to the new lane's ``v_pad`` (rows at or above V+1 are
+    structurally zero, so the resize is lossless).  Discarded: the
+    in-flight frame and surplus (zeroed at the new lane's shapes) —
+    their draws were never folded into ``agg_tau``, so no sample is
+    ever double-counted and the (eps, delta) stopping statistics stay
+    exact.  Returns new host leaves in the engine's leaf order.
+    """
+    (agg_c, agg_t, _fr_c, _fr_t, _sur_c, _sur_t,
+     fro_c, fro_t, stop_e, key) = arrays
+
+    def refit(a):
+        out = np.zeros((n_channels, v_pad_new), np.float32)
+        a = np.asarray(a, np.float32).reshape(n_channels, -1)
+        m = min(a.shape[1], v_pad_new)
+        out[:, :m] = a[:, :m]
+        return out
+
+    if lane_new == "spmd":
+        frame = np.zeros((n_dev_new, n_channels, v_pad_new), np.float32)
+        surplus = np.zeros((n_dev_new, n_channels, v1), np.float32)
+    else:
+        frame = np.zeros((n_channels, v_pad_new), np.float32)
+        surplus = np.zeros((n_channels, v1), np.float32)
+    zero = np.zeros((), np.int32)
+    return (refit(agg_c), np.asarray(agg_t), frame, zero, surplus, zero,
+            refit(fro_c), np.asarray(fro_t), np.asarray(stop_e),
+            np.asarray(key))
+
+
+# ---------------------------------------------------------------------------
+# The runner
+# ---------------------------------------------------------------------------
+
+class ResilientRunner:
+    """Run :func:`repro.core.engine.run_adaptive` to completion through
+    faults (see the module docstring for the full model).
+
+    Parameters mirror ``run_adaptive`` (``graph`` may be a ``Graph`` or
+    a ``PartitionedGraph``; a ``PartitionedGraph`` needs ``mesh``),
+    plus:
+
+    ``checkpoint_dir``
+        REQUIRED — recovery is checkpoint-based.  Each ladder rung
+        writes under ``<checkpoint_dir>/rung<k>`` so state written by
+        different lane shapes never mixes in one step sequence.
+    ``schedule``
+        optional :class:`repro.runtime.faults.FaultSchedule` injected
+        at epoch boundaries (tests / fault_matrix); ``None`` runs clean
+        but still supervises real failures.
+    ``policy`` / ``epoch_timeout`` / ``watchdog`` / ``seed``
+        retry policy, hung-epoch threshold in seconds (compared between
+        successive epoch-hook arrivals; the first epoch of each attempt
+        is exempt — it absorbs compilation), watchdog toggle, and the
+        seed of the jitter/telemetry RNG.
+    """
+
+    def __init__(self, graph, metrics=("betweenness",), *,
+                 checkpoint_dir: str, mesh=None,
+                 eps: Optional[float] = None, delta: Optional[float] = None,
+                 key=None, config=None, stream: Optional[str] = None,
+                 checkpoint_every: int = 1,
+                 schedule: Optional[FaultSchedule] = None,
+                 policy: Optional[RetryPolicy] = None,
+                 epoch_timeout: Optional[float] = None,
+                 watchdog: bool = True, seed: int = 0):
+        if not checkpoint_dir:
+            raise ValueError(
+                "ResilientRunner needs checkpoint_dir: recovery is "
+                "rollback-to-last-good-checkpoint")
+        self.metrics = metrics
+        self.eps, self.delta = eps, delta
+        self.key = key
+        self.config = config
+        self.stream = stream
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = max(1, int(checkpoint_every))
+        self.schedule = schedule
+        self.policy = policy if policy is not None else RetryPolicy()
+        self.epoch_timeout = epoch_timeout
+        self.watchdog = watchdog
+        self._rng = np.random.default_rng(seed)
+
+        # lane bookkeeping -------------------------------------------------
+        self._graph = graph
+        self._mesh = mesh
+        if isinstance(graph, PartitionedGraph):
+            if mesh is None:
+                raise ValueError("a PartitionedGraph needs its mesh")
+            self._lane = "sharded"
+            self._n_dev = int(np.prod(mesh.devices.shape))
+            self._base_graph = None     # gathered lazily on first demand
+        else:
+            self._base_graph = graph
+            n_dev = (1 if mesh is None
+                     else int(np.prod(mesh.devices.shape)))
+            self._lane = "single" if n_dev == 1 else "spmd"
+            self._n_dev = n_dev
+            if self._lane == "single":
+                self._mesh = None
+        # frame geometry (for elastic migration)
+        ests = resolve_estimators(metrics)
+        self._schema = frame_schema_id(e.schema for e in ests)
+        self._C = total_channels(ests)
+        self._v1 = int(graph.n_nodes) + 1
+        resolve_stream(ests, stream)    # fail early on a bad combination
+
+        self._rung = 0
+        self._events: list = []
+        self._total_failures = 0
+        self._last_tau: Optional[int] = None
+        self._epoch_clock: Optional[float] = None
+
+    # -- lane geometry ----------------------------------------------------
+
+    def _rung_dir(self) -> str:
+        return os.path.join(self.checkpoint_dir, f"rung{self._rung}")
+
+    def _v_pad(self, lane: str, n_dev: int) -> int:
+        return _pad_len(self._v1 - 1, 1 if lane == "single" else n_dev)
+
+    def _base(self) -> Graph:
+        if self._base_graph is None:
+            self._base_graph = gather_graph(self._graph)
+        return self._base_graph
+
+    def _record(self, kind: str, epoch: int, attempt: int, detail: str):
+        self._events.append(RunEvent(kind, epoch, attempt, detail))
+
+    # -- the per-epoch hook ----------------------------------------------
+
+    def _on_epoch(self, epoch: int, state):
+        new_state = state
+        if self.schedule is not None:
+            ctx = FaultContext(checkpoint_root=self._rung_dir(),
+                               n_devices=self._n_dev)
+            for spec in self.schedule.take(epoch):
+                self._record("fault", epoch, self._attempt,
+                             f"{spec.kind} injected")
+                new_state = apply_fault(spec, ctx, new_state)
+        now = time.monotonic()
+        if (self.epoch_timeout is not None
+                and self._epoch_clock is not None
+                and now - self._epoch_clock > self.epoch_timeout):
+            raise EpochTimeoutError(
+                f"epoch {epoch} took {now - self._epoch_clock:.3f}s "
+                f"(> epoch_timeout={self.epoch_timeout}s) — treating as "
+                f"a hung step")
+        self._epoch_clock = now
+        if self.watchdog:
+            self._last_tau = check_state_invariants(new_state,
+                                                    self._last_tau)
+        return new_state if new_state is not state else None
+
+    # -- recovery transitions --------------------------------------------
+
+    def _migrate_to(self, lane_new: str, n_dev_new: int, graph_new, mesh_new,
+                    epoch_hint: int):
+        """Move to a new rung: adapt the latest verified checkpoint of
+        the old rung (if any) to the new lane's shapes and seed the new
+        rung directory with it."""
+        old_dir = self._rung_dir()
+        self._rung += 1
+        new_dir = self._rung_dir()
+        try:
+            arrays, step, meta = restore_arrays(old_dir,
+                                                expect_schema=self._schema)
+        except (FileNotFoundError, CheckpointError):
+            arrays = None               # nothing trustworthy: fresh start
+        if arrays is not None:
+            migrated = elastic_migrate_state(
+                arrays, n_channels=self._C, v1=self._v1,
+                v_pad_new=self._v_pad(lane_new, n_dev_new),
+                lane_new=lane_new, n_dev_new=n_dev_new)
+            epoch = int(meta.get("epoch", step))
+            checkpoint_save(new_dir, epoch, tuple(migrated),
+                            metadata={"epoch": epoch, "done": False},
+                            keep=3, blocking=True, schema=self._schema)
+            self._record(
+                "migrate", epoch, self._attempt,
+                f"state re-entered on {lane_new}/{n_dev_new}dev at epoch "
+                f"{epoch} (agg tau {int(np.asarray(arrays[1]))} kept, "
+                f"in-flight frame discarded)")
+        self._lane, self._n_dev = lane_new, n_dev_new
+        self._graph, self._mesh = graph_new, mesh_new
+        self._last_tau = None           # rollback may lower the aggregate
+
+    def _shrunk_mesh(self, survivors: int):
+        from jax.sharding import Mesh
+        devs = np.asarray(jax.devices()[:survivors])
+        return Mesh(devs, ("dev",))
+
+    def _handle_shrink(self, epoch_hint: int, survivors: int):
+        survivors = max(1, min(int(survivors), self._n_dev))
+        self._record("shrink", epoch_hint, self._attempt,
+                     f"{self._n_dev} -> {survivors} devices")
+        if survivors == 1:
+            self._migrate_to("single", 1, self._base(), None, epoch_hint)
+        elif self._lane == "sharded":
+            pg = partition_graph(self._base(), survivors)
+            self._migrate_to("sharded", survivors, pg,
+                             self._shrunk_mesh(survivors), epoch_hint)
+        else:                           # spmd (single never shrinks)
+            self._migrate_to("spmd", survivors, self._base(),
+                             self._shrunk_mesh(survivors), epoch_hint)
+
+    def _degrade(self, epoch_hint: int) -> bool:
+        """Drop one ladder rung after a retry budget is exhausted.
+        Returns False when already at the bottom."""
+        i = LANE_LADDER.index(self._lane)
+        if i + 1 >= len(LANE_LADDER):
+            return False
+        lane_new = LANE_LADDER[i + 1]
+        self._record("degrade", epoch_hint, self._attempt,
+                     f"{self._lane} -> {lane_new} "
+                     f"(retry budget exhausted)")
+        if lane_new == "single":
+            self._migrate_to("single", 1, self._base(), None, epoch_hint)
+        else:                           # sharded -> spmd, same mesh
+            self._migrate_to("spmd", self._n_dev, self._base(), self._mesh,
+                             epoch_hint)
+        return True
+
+    # -- the loop ---------------------------------------------------------
+
+    def run(self) -> ResilientRunResult:
+        self._attempt = 0               # failures at the current rung
+        while True:
+            self._epoch_clock = None    # first epoch absorbs compilation
+            self._last_tau = None
+            try:
+                res = run_adaptive(
+                    self._graph, self.metrics, eps=self.eps,
+                    delta=self.delta, key=self.key, mesh=self._mesh,
+                    config=self.config, checkpoint_dir=self._rung_dir(),
+                    checkpoint_every=self.checkpoint_every,
+                    stream=self.stream, on_epoch=self._on_epoch)
+                return ResilientRunResult(
+                    res, tuple(self._events), self._total_failures,
+                    self._lane, self._n_dev)
+            except DeviceLoss as e:
+                self._total_failures += 1
+                self._record("failure", 0, self._attempt, str(e))
+                self._handle_shrink(0, e.survivors)
+                self._attempt = 0
+            except (InjectedFault, InvariantViolation, EpochTimeoutError,
+                    CheckpointError) as e:
+                self._total_failures += 1
+                self._attempt += 1
+                self._record("failure", 0, self._attempt,
+                             f"{type(e).__name__}: {e}")
+                if self._attempt > self.policy.max_retries:
+                    if not self._degrade(0):
+                        raise ResilienceExhausted(
+                            f"retry budget exhausted on the final "
+                            f"'{self._lane}' rung after "
+                            f"{self._total_failures} total failures "
+                            f"(events: {len(self._events)})") from e
+                    self._attempt = 0
+                else:
+                    delay = self.policy.sleep_seconds(
+                        self._attempt, self._rng.random())
+                    self._record("retry", 0, self._attempt,
+                                 f"backoff {delay * 1e3:.0f} ms, resume "
+                                 f"from last good checkpoint")
+                    time.sleep(delay)

@@ -31,6 +31,13 @@ something, and every metric must be pinned by the golden parity suite
 tests is exactly the silent rot the plugin substrate was built to
 prevent.
 
+A third check audits the fault-injection registry
+(``src/repro/runtime/faults.py``) the same way: every registered fault
+kind must be exercised — quoted — by at least one resilience test AND
+by the ``fault_matrix`` sweep script, so a fault type added to the
+taxonomy without a test that injects it fails CI instead of rotting
+untested.
+
 Run from anywhere:
 
     python tools/check_kernels.py
@@ -232,6 +239,39 @@ def check_estimator_registry() -> list:
     return errors
 
 
+RESILIENCE_TESTS = os.path.join(REPO, "tests", "test_resilience.py")
+FAULT_MATRIX_BENCH = os.path.join(REPO, "benchmarks", "run.py")
+
+
+def check_fault_registry() -> list:
+    """Fault-taxonomy coverage errors as (path, message) pairs: every
+    kind in ``repro.runtime.faults.available_faults()`` must appear as
+    a quoted literal in the resilience suite and in the fault_matrix
+    sweep."""
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.runtime.faults import available_faults
+    errors = []
+    kinds = available_faults()
+    if not kinds:
+        return [(os.path.relpath(
+            os.path.join(REPO, "src", "repro", "runtime", "faults.py"),
+            REPO), "fault registry is empty")]
+    for path, what in ((RESILIENCE_TESTS, "resilience suite"),
+                       (FAULT_MATRIX_BENCH, "fault_matrix sweep")):
+        rel = os.path.relpath(path, REPO)
+        if not os.path.exists(path):
+            errors.append((rel, f"{what} missing"))
+            continue
+        with open(path) as f:
+            src = f.read()
+        for kind in kinds:
+            if f'"{kind}"' not in src and f"'{kind}'" not in src:
+                errors.append(
+                    (rel, f"fault kind '{kind}' is registered but never "
+                          f"injected by the {what}"))
+    return errors
+
+
 def main() -> int:
     files = sorted(glob.glob(KERNEL_GLOB, recursive=True))
     if not files:
@@ -246,11 +286,14 @@ def main() -> int:
     for where, msg in check_estimator_registry():
         print(f"{where}: {msg}")
         bad += 1
+    for where, msg in check_fault_registry():
+        print(f"{where}: {msg}")
+        bad += 1
     if bad:
         print(f"kernel check: {bad} error(s)")
         return 1
     print(f"kernel check: OK ({len(files)} kernel file(s), "
-          f"estimator registry complete)")
+          f"estimator registry complete, fault taxonomy covered)")
     return 0
 
 
