@@ -76,18 +76,44 @@ def _time_call(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def _append_bench_record(record: dict):
-    """Append one run record to BENCH_sampling.json (run history: quick
-    runs must not clobber committed --full baselines)."""
+# Fields every BENCH_sampling.json row must carry (each sweep includes
+# its sweep-specific payload beside them).
+_BENCH_REQUIRED_FIELDS = ("section", "timestamp", "mode")
+
+
+def record_run(record: dict, out_path: str = None):
+    """Append one validated run record to BENCH_sampling.json.
+
+    The one shared append helper (every sweep routes through here).
+    Rows are schema-checked first — ``section``/``timestamp``/``mode``
+    must be present — so a malformed row fails its own run instead of
+    poisoning the history.  An unreadable existing history file is
+    *preserved*: it is renamed to ``BENCH_sampling.json.bak`` (never
+    silently discarded — quick runs must not clobber committed --full
+    baselines, and a corrupt file is still evidence) and a fresh
+    history is started.
+    """
     import json
-    out_path = os.path.join(os.path.dirname(__file__), "..",
-                            "BENCH_sampling.json")
+    missing = [f for f in _BENCH_REQUIRED_FIELDS if f not in record]
+    if missing:
+        raise ValueError(
+            f"bench record (section={record.get('section')!r}) is missing "
+            f"required fields {missing}; every row carries "
+            f"{list(_BENCH_REQUIRED_FIELDS)}")
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_sampling.json")
     history = {"runs": []}
     if os.path.exists(out_path):
         try:
             with open(out_path) as f:
                 prev = json.load(f)
         except (json.JSONDecodeError, OSError):
+            bak = out_path + ".bak"
+            os.replace(out_path, bak)
+            print(f"  WARNING: unreadable {os.path.abspath(out_path)} "
+                  f"backed up to {os.path.abspath(bak)}; starting a "
+                  f"fresh history")
             prev = None
         if isinstance(prev, dict):
             # single-record legacy format (no "runs") is itself a run
@@ -99,6 +125,10 @@ def _append_bench_record(record: dict):
         json.dump(history, f, indent=1)
     print(f"  appended run #{len(history['runs'])} to "
           f"{os.path.abspath(out_path)}")
+
+
+# Backwards-compatible alias (pre-PR 9 name used by older scripts).
+_append_bench_record = record_run
 
 
 # ---------------------------------------------------------------------------
@@ -269,6 +299,7 @@ def bench_batch_sweep(full: bool):
                      "speedup_vs_b1": rate / base_rate})
     _append_bench_record({
         "section": "batch_sweep",
+        "mode": "xla",
         "instance": {"family": "rmat", "n_nodes": g.n_nodes,
                      "n_edges_undirected": g.n_edges_undirected,
                      "edge_factor": 8, "seed": 3},
@@ -366,6 +397,7 @@ def bench_node_blocked_sweep(full: bool, interpret: bool = True):
         rows.append(row)
     _append_bench_record({
         "section": "node_blocked_sweep",
+        "mode": mode,
         "instance": {"family": "grid"},
         "metric": "samples_per_s = B / t(one frontier expansion); "
                   "per-BFS-level throughput",
@@ -472,6 +504,7 @@ def run_csc_driver_sweep(scale: int = 15, batch: int = 8, reps: int = 1,
     print(f"  aggregate over probed levels: {overall:.2f}x from skipping")
     record = {
         "section": "csc_driver_sweep",
+        "mode": "interpret",
         "instance": {"family": "grid", "width": width, "height": height,
                      "n_nodes": g.n_nodes,
                      "n_edges_directed": int(g.n_edges)},
@@ -695,6 +728,7 @@ def run_partition_sweep(scales, n_dev: int = 8, batch: int = 8,
              f"samples_per_s={row['samples_per_s_sharded']:.1f}")
     record = {
         "section": "partition_sweep",
+        "mode": "interpret" if interpret else "compiled",
         "instance": {"families": ["erdos_renyi", "grid"],
                      "avg_degree_er": 4.0},
         "pallas_mode": "interpret" if interpret else "compiled",
@@ -818,6 +852,7 @@ def run_metric_sweep(scale: int = 9, n_samples: int = 256, reps: int = 3,
              f"rate={n / (solo_us[m] / 1e6):.0f}")
     record = {
         "section": "metric_sweep",
+        "mode": "xla",
         "instance": {"family": "rmat", "n_nodes": g.n_nodes,
                      "n_edges_undirected": g.n_edges_undirected,
                      "edge_factor": 8, "seed": 3},
@@ -861,7 +896,7 @@ from repro.core.adaptive import AdaptiveConfig
 from repro.core.engine import run_adaptive
 from repro.core.brandes import brandes_numpy
 from repro.runtime import (ResilientRunner, FaultSchedule, FaultSpec,
-                           RetryPolicy)
+                           RetryPolicy, read_jsonl)
 
 V = args["n_nodes"]
 n_dev = args["n_dev"]
@@ -890,10 +925,22 @@ def cell(name, lane, sched, expect, epoch_timeout=None):
     t0 = time.perf_counter()
     graph, m = (pg, mesh) if lane == "sharded" else (g, None)
     with tempfile.TemporaryDirectory() as d:
+        trace = os.path.join(d, "trace.jsonl")
         out = ResilientRunner(graph, mesh=m, config=cfg, key=key,
                               checkpoint_dir=d, schedule=sched,
-                              policy=policy,
+                              policy=policy, telemetry=trace,
                               epoch_timeout=epoch_timeout).run()
+        # JSONL round-trip: every line re-validates against the event
+        # taxonomy, the supervisor's RunEvents all made it onto the bus,
+        # and the trace alone reproduces the run outcome
+        evs = read_jsonl(trace, validate=True)
+        sup = [e.kind.split(".", 1)[1] for e in evs
+               if e.kind.startswith("supervisor.")]
+        assert sup == [e.kind for e in out.events], (name, sup)
+        ends = [e for e in evs if e.kind == "run.end"]
+        assert ends and ends[-1].fields["tau"] == out.result.tau, (name, "tau")
+        assert ends[-1].fields["n_epochs"] == out.result.n_epochs, \
+            (name, "epochs")
     rep = out.result.reports[0]
     base = baseline(lane)
     bit = bool(np.array_equal(np.asarray(rep.scores),
@@ -992,6 +1039,7 @@ def run_fault_matrix(n_dev: int = 8, smoke: bool = False,
              f"err={row['max_abs_err_vs_exact']:.5f}")
     record = {
         "section": "fault_matrix",
+        "mode": "xla",
         "n_dev": n_dev, "smoke": smoke, "full": full, "seed": seed,
         "metric": "per fault class: ResilientRunner completes the run; "
                   "same-mesh faults bit-identical to the uninterrupted "

@@ -57,6 +57,7 @@ import json
 import os
 import shutil
 import threading
+import time
 import zlib
 from typing import Any, Callable, Optional
 
@@ -162,7 +163,7 @@ def _crc(arr: np.ndarray) -> int:
 
 def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
          keep: int = 3, blocking: bool = True,
-         schema: Optional[str] = None):
+         schema: Optional[str] = None, telemetry=None):
     """Write one checkpoint; returns the publish thread (joined if
     ``blocking``).
 
@@ -179,6 +180,13 @@ def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
     When ``blocking`` is true, a publish failure raises here; when
     false, the exception is captured on the returned thread (``_exc``
     attribute) and re-raised by :meth:`CheckpointManager.wait`.
+
+    ``telemetry`` (a :class:`repro.runtime.Telemetry` or None) surfaces
+    the publish pipeline: the write runs under a ``checkpoint.publish``
+    span *on the background thread* (the span's ``tid`` distinguishes
+    it from the run loop's events) and a ``checkpoint.publish`` event
+    records the duration and outcome — the latency that was previously
+    invisible behind the async handoff.
     """
     if keep < 0:
         raise ValueError(f"keep must be >= 0 (0 = keep everything), "
@@ -220,10 +228,24 @@ def save(root: str, step: int, tree, *, metadata: Optional[dict] = None,
         _gc(root, keep)
 
     def run_publish():
+        t0 = time.monotonic()
         try:
-            publish()
+            if telemetry:
+                with telemetry.span("checkpoint.publish", step=step,
+                                    n_leaves=len(host_leaves)):
+                    publish()
+            else:
+                publish()
         except BaseException as e:      # noqa: BLE001 — surfaced by wait()
             t._exc = e
+            if telemetry:
+                telemetry.emit("checkpoint.publish", step=step,
+                               seconds=time.monotonic() - t0, ok=False,
+                               error=type(e).__name__)
+        else:
+            if telemetry:
+                telemetry.emit("checkpoint.publish", step=step,
+                               seconds=time.monotonic() - t0, ok=True)
 
     t = threading.Thread(target=run_publish, daemon=True)
     t._exc = None
@@ -383,8 +405,28 @@ def _restore_step(root: str, step: int, tree_like, shardings,
     return tree, step, manifest["metadata"]
 
 
+def _attempt_restore(telemetry, step: int, fn):
+    """Run one restore attempt under a ``checkpoint.restore`` span +
+    outcome event; with telemetry off this is just ``fn()``."""
+    if not telemetry:
+        return fn()
+    t0 = time.monotonic()
+    with telemetry.span("checkpoint.restore", step=step):
+        try:
+            out = fn()
+        except BaseException as e:
+            telemetry.emit("checkpoint.restore", step=step,
+                           seconds=time.monotonic() - t0, ok=False,
+                           error=type(e).__name__)
+            raise
+        telemetry.emit("checkpoint.restore", step=step,
+                       seconds=time.monotonic() - t0, ok=True)
+        return out
+
+
 def restore(root: str, tree_like, *, step: Optional[int] = None,
-            shardings=None, expect_schema: Optional[str] = None):
+            shardings=None, expect_schema: Optional[str] = None,
+            telemetry=None):
     """Restore into the structure of ``tree_like``.
 
     ``shardings``: optional pytree of Sharding objects — the elastic
@@ -407,23 +449,32 @@ def restore(root: str, tree_like, *, step: Optional[int] = None,
 
     Returns (tree, step, metadata); raises ``FileNotFoundError`` when no
     verifiable checkpoint exists under ``root``.
+
+    ``telemetry`` surfaces each attempt as a ``checkpoint.restore``
+    span/event and each quarantined step as ``checkpoint.quarantine``.
     """
     if step is not None:
-        return _restore_step(root, step, tree_like, shardings,
-                             expect_schema)
+        return _attempt_restore(
+            telemetry, step,
+            lambda: _restore_step(root, step, tree_like, shardings,
+                                  expect_schema))
     while True:
         s = latest_step(root)
         if s is None:
             raise FileNotFoundError(f"no checkpoint under {root}")
         try:
-            return _restore_step(root, s, tree_like, shardings,
-                                 expect_schema)
+            return _attempt_restore(
+                telemetry, s,
+                lambda: _restore_step(root, s, tree_like, shardings,
+                                      expect_schema))
         except CheckpointIntegrityError:
             _quarantine(root, s)        # fall back to the next-newest
+            if telemetry:
+                telemetry.emit("checkpoint.quarantine", step=s)
 
 
 def restore_arrays(root: str, *, step: Optional[int] = None,
-                   expect_schema: Optional[str] = None):
+                   expect_schema: Optional[str] = None, telemetry=None):
     """Verified RAW restore: the host leaf arrays of a step, without a
     template tree — (list of np arrays, step, metadata).
 
@@ -449,15 +500,17 @@ def restore_arrays(root: str, *, step: Optional[int] = None,
                     manifest["metadata"])
 
     if step is not None:
-        return load_one(step)
+        return _attempt_restore(telemetry, step, lambda: load_one(step))
     while True:
         s = latest_step(root)
         if s is None:
             raise FileNotFoundError(f"no checkpoint under {root}")
         try:
-            return load_one(s)
+            return _attempt_restore(telemetry, s, lambda: load_one(s))
         except CheckpointIntegrityError:
             _quarantine(root, s)
+            if telemetry:
+                telemetry.emit("checkpoint.quarantine", step=s)
 
 
 class CheckpointManager:
@@ -471,7 +524,7 @@ class CheckpointManager:
     """
 
     def __init__(self, root: str, keep: int = 3, save_every: int = 100,
-                 schema: Optional[str] = None):
+                 schema: Optional[str] = None, telemetry=None):
         if keep < 0:
             raise ValueError(f"keep must be >= 0 (0 = keep everything), "
                              f"got {keep}")
@@ -479,6 +532,7 @@ class CheckpointManager:
         self.keep = keep
         self.save_every = save_every
         self.schema = schema
+        self.telemetry = telemetry
         self._pending: Optional[threading.Thread] = None
 
     def maybe_save(self, step: int, tree, metadata=None):
@@ -487,7 +541,7 @@ class CheckpointManager:
         self.wait()                     # raises if the previous save died
         self._pending = save(self.root, step, tree, metadata=metadata,
                              keep=self.keep, blocking=False,
-                             schema=self.schema)
+                             schema=self.schema, telemetry=self.telemetry)
         return True
 
     def wait(self):
@@ -506,6 +560,7 @@ class CheckpointManager:
         # incompatible layout must be loud, never a silent fresh start.
         try:
             return restore(self.root, tree_like, shardings=shardings,
-                           expect_schema=self.schema)
+                           expect_schema=self.schema,
+                           telemetry=self.telemetry)
         except FileNotFoundError:
             return None

@@ -52,7 +52,7 @@ remains an exact integer count (used by the unit tests against networkx).
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -92,6 +92,10 @@ class BFSResult(NamedTuple):
     dist: jax.Array    # (rows, B) | (rows,) int32; -1 unreached, -3 sink/pad
     sigma: jax.Array   # (rows, B) | (rows,) float32; rescaled path counts
     levels: jax.Array  # (B,) | () int32; deepest settled distance (see above)
+    # (2,) int32 [levels_exchanged, levels_sparse] — the sharded drivers'
+    # per-search exchange-protocol tally (ExchangePlan.epoch_accounting
+    # prices it); None on the replicated lanes, which exchange nothing.
+    exchange: Optional[jax.Array] = None
 
 
 def _state_rows(graph: Graph) -> int:
@@ -221,6 +225,9 @@ class BidirResult(NamedTuple):
     sigma_t: jax.Array  # (V+1, B) | (V+1,) float32
     d: jax.Array        # (B,) | () int32
     split: jax.Array    # (B,) | () int32
+    # (2,) int32 [levels_exchanged, levels_sparse]; None off the sharded
+    # lane — same contract as BFSResult.exchange.
+    exchange: Optional[jax.Array] = None
 
 
 def bidirectional_bfs_batched(graph: Graph, s, t, *,
@@ -382,10 +389,15 @@ def _gather_frontier_sharded(pg: PartitionedGraph, dist, sigma, level,
                              active, axis):
     """The per-level frontier exchange (DESIGN.md §Frontier exchange).
 
-    Returns ``(fvals, src_bits)``: the (v_pad, B) masked frontier values
-    ``sigma * [dist == level][active]`` over the GLOBAL rows, and the
-    (n_global_chunks,) int32 source-chunk occupancy bits that scheduled
-    them.  Two protocols produce the identical ``fvals``:
+    Returns ``(fvals, src_bits, took_sparse)``: the (v_pad, B) masked
+    frontier values ``sigma * [dist == level][active]`` over the GLOBAL
+    rows, the (n_global_chunks,) int32 source-chunk occupancy bits that
+    scheduled them, and a replicated int32 flag — 1 when this level
+    went over the sparse protocol, 0 on dense (including the
+    dense-only degenerate below).  The flag is an observation of the
+    ``lax.cond`` predicate, feeds nothing, and exists so the drivers
+    can tally protocol choices for telemetry.  Two protocols produce
+    the identical ``fvals``:
 
     * **dense** — one tiled all_gather of the local (shard_rows, B)
       masked slice (the only protocol when ``pg.exchange_budget == 0``);
@@ -432,7 +444,7 @@ def _gather_frontier_sharded(pg: PartitionedGraph, dist, sigma, level,
     # at a loss
     if budget <= 0 or budget * (chunk * b + 1) >= cps * chunk * b:
         fvals = jax.lax.all_gather(fvals_local, axis, axis=0, tiled=True)
-        return fvals, src_bits
+        return fvals, src_bits, jnp.int32(0)
 
     n_gchunks = pg.n_shards * cps
     fits = jax.lax.pmax(jnp.sum(bits_local), axis) <= budget
@@ -464,7 +476,8 @@ def _gather_frontier_sharded(pg: PartitionedGraph, dist, sigma, level,
     def dense(_):
         return jax.lax.all_gather(fvals_local, axis, axis=0, tiled=True)
 
-    return jax.lax.cond(fits, sparse, dense, None), src_bits
+    return (jax.lax.cond(fits, sparse, dense, None), src_bits,
+            fits.astype(jnp.int32))
 
 
 def _expand_level_sharded(pg: PartitionedGraph, dist, sigma, level, active,
@@ -481,10 +494,11 @@ def _expand_level_sharded(pg: PartitionedGraph, dist, sigma, level, active,
     with the exchange schedule's source-block bits recycled as the
     kernel's edge-block skip bitmap.  The rescale guard and the
     new-vertex count are the only other cross-shard reductions.
-    Returns updated local (dist, sigma, n_new (B,) global).
+    Returns updated local (dist, sigma, n_new (B,) global,
+    took_sparse () replicated int32).
     """
-    fvals, src_bits = _gather_frontier_sharded(pg, dist, sigma, level,
-                                               active, axis)
+    fvals, src_bits, took = _gather_frontier_sharded(pg, dist, sigma, level,
+                                                     active, axis)
     # reached frontier vertices always carry sigma > 0, so fvals > 0 is
     # exactly the frontier mask — synthesize the dispatcher's contract
     fdist = jnp.where(fvals > 0.0, level[None, :], jnp.int32(-1))
@@ -503,7 +517,7 @@ def _expand_level_sharded(pg: PartitionedGraph, dist, sigma, level, active,
     scale = jnp.where(m > _RESCALE_THRESHOLD, 1.0 / m, 1.0)
     sigma = sigma * scale[None, :]
     n_new = jax.lax.psum(jnp.sum(new.astype(jnp.int32), axis=0), axis)
-    return dist, sigma, n_new
+    return dist, sigma, n_new, took
 
 
 def bfs_sssp_batched_sharded(pg: PartitionedGraph, sources, *, axis,
@@ -529,26 +543,31 @@ def bfs_sssp_batched_sharded(pg: PartitionedGraph, sources, *, axis,
         return (n_new > 0) & (level < pg.n_nodes) & stop_open
 
     def cond(state):
-        _dist, _sigma, level, n_new, stop_open = state
+        _dist, _sigma, level, n_new, stop_open, _xch = state
         return jnp.any(go_mask(level, n_new, stop_open))
 
     def body(state):
-        dist, sigma, level, n_new, stop_open = state
+        dist, sigma, level, n_new, stop_open, xch = state
         active = go_mask(level, n_new, stop_open)
-        dist, sigma, n_new2 = _expand_level_sharded(pg, dist, sigma, level,
-                                                    active, axis)
+        dist, sigma, n_new2, took = _expand_level_sharded(pg, dist, sigma,
+                                                          level, active, axis)
+        # every body iteration is exactly one frontier exchange; tally
+        # [levels, of which sparse] for ExchangePlan pricing (telemetry
+        # observation only — nothing downstream reads it)
+        xch = xch + jnp.stack([jnp.int32(1), took])
         level = jnp.where(active, level + 1, level)
         n_new = jnp.where(active, n_new2, n_new)
         if stop_nodes is not None:
             stop_open = _read_rows_sharded(pg, dist, stop_nodes, axis) < 0
-        return dist, sigma, level, n_new, stop_open
+        return dist, sigma, level, n_new, stop_open, xch
 
-    dist, sigma, _levels, _, _ = jax.lax.while_loop(
+    dist, sigma, _levels, _, _, xch = jax.lax.while_loop(
         cond, body, (dist0, sigma0, jnp.zeros((b,), jnp.int32),
-                     jnp.ones((b,), jnp.int32), stop_open0))
+                     jnp.ones((b,), jnp.int32), stop_open0,
+                     jnp.zeros((2,), jnp.int32)))
     settled = jax.lax.pmax(
         jnp.max(jnp.where(dist >= 0, dist, 0), axis=0), axis)
-    return BFSResult(dist, sigma, settled)
+    return BFSResult(dist, sigma, settled, xch)
 
 
 def bidirectional_bfs_batched_sharded(pg: PartitionedGraph, s, t, *, axis,
@@ -578,13 +597,14 @@ def bidirectional_bfs_batched_sharded(pg: PartitionedGraph, s, t, *, axis,
     def active_mask(rad_s, rad_t, alive, met):
         return (~met) & alive & (rad_s + rad_t < max_levels)
 
-    # state: dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive, met
+    # state: dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive, met,
+    # xch ((2,) exchange tally — see bfs_sssp_batched_sharded)
     def cond(st):
-        _, _, rad_s, _, _, rad_t, alive, met = st
+        _, _, rad_s, _, _, rad_t, alive, met, _xch = st
         return jnp.any(active_mask(rad_s, rad_t, alive, met))
 
     def body(st):
-        dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive, met = st
+        dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive, met, xch = st
         active = active_mask(rad_s, rad_t, alive, met)
         fs = jax.lax.psum(jnp.sum(
             (dist_s == rad_s[None, :]).astype(jnp.int32), axis=0), axis)
@@ -594,8 +614,9 @@ def bidirectional_bfs_batched_sharded(pg: PartitionedGraph, s, t, *, axis,
         exp_dist = jnp.where(pick_s[None, :], dist_s, dist_t)
         exp_sigma = jnp.where(pick_s[None, :], sigma_s, sigma_t)
         exp_level = jnp.where(pick_s, rad_s, rad_t)
-        nd, ns, n_new = _expand_level_sharded(pg, exp_dist, exp_sigma,
-                                              exp_level, active, axis)
+        nd, ns, n_new, took = _expand_level_sharded(pg, exp_dist, exp_sigma,
+                                                    exp_level, active, axis)
+        xch = xch + jnp.stack([jnp.int32(1), took])
         upd_s = pick_s & active
         upd_t = (~pick_s) & active
         dist_s = jnp.where(upd_s[None, :], nd, dist_s)
@@ -606,12 +627,14 @@ def bidirectional_bfs_batched_sharded(pg: PartitionedGraph, s, t, *, axis,
         rad_t = jnp.where(upd_t, rad_t + 1, rad_t)
         alive = jnp.where(active, n_new > 0, alive)
         met = met_of(dist_s, dist_t)
-        return dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive, met
+        return (dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, alive, met,
+                xch)
 
     zeros = jnp.zeros((b,), jnp.int32)
     init = (dist_s0, sigma_s0, zeros, dist_t0, sigma_t0, zeros,
-            jnp.ones((b,), jnp.bool_), met_of(dist_s0, dist_t0))
-    dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, _alive, _met = \
+            jnp.ones((b,), jnp.bool_), met_of(dist_s0, dist_t0),
+            jnp.zeros((2,), jnp.int32))
+    dist_s, sigma_s, rad_s, dist_t, sigma_t, rad_t, _alive, _met, xch = \
         jax.lax.while_loop(cond, body, init)
 
     both = (dist_s >= 0) & (dist_t >= 0)
@@ -621,4 +644,4 @@ def bidirectional_bfs_batched_sharded(pg: PartitionedGraph, s, t, *, axis,
     d = jnp.where(connected, d, -1)
     split = jnp.clip(d - rad_t, 0, rad_s)
     split = jnp.where(connected, split, 0)
-    return BidirResult(dist_s, dist_t, sigma_s, sigma_t, d, split)
+    return BidirResult(dist_s, dist_t, sigma_s, sigma_t, d, split, xch)

@@ -60,7 +60,7 @@ from .epoch import epoch_length, frame_schema_id
 from .estimators import get_estimator
 from .estimators.base import DrawBatch, Estimator, MetricReport, RunContext
 from .graph import Graph
-from .partition import PartitionedGraph
+from .partition import PartitionedGraph, exchange_plan
 from .sampler import (sample_path_batched, sample_path_batched_sharded,
                       sample_path_forward_batched,
                       sample_path_forward_batched_sharded)
@@ -134,6 +134,11 @@ class EngineEpochStats(NamedTuple):
     max_f: tuple
     max_g: tuple
     seconds: float
+    # samples drawn this epoch (mesh-wide; the tau delta the epoch
+    # contributed) and — sharded lane only — the priced exchange
+    # accounting dict from ExchangePlan.epoch_accounting (None off it)
+    samples: int = 0
+    exchange: Optional[dict] = None
 
 
 class AdaptiveRunResult(NamedTuple):
@@ -208,7 +213,8 @@ def _default_estimators(estimators) -> tuple:
 
 def draw_fold(graph, key, n_samples: int, *, estimators, ctx: RunContext,
               stream: str = "bidir", batch_size: int = 1, carry=None,
-              return_carry: bool = False, axis=None):
+              return_carry: bool = False, axis=None,
+              with_exchange: bool = False):
     """Take exactly ``n_samples`` new samples, folding ONE shared draw
     stream through every estimator's ``accumulate`` hook.
 
@@ -231,6 +237,14 @@ def draw_fold(graph, key, n_samples: int, *, estimators, ctx: RunContext,
 
     ``axis`` switches each round to the cooperative sharded samplers
     (call inside shard_map on a PartitionedGraph with a replicated key).
+
+    ``with_exchange`` (sharded stream only) additionally returns the
+    summed (2,) [levels_exchanged, levels_sparse] exchange tally of the
+    rounds' BFS runs, appended as the trailing element of the return
+    tuple.  The tally rides the scan's *outputs* — never the carry,
+    never the key stream — so the counts/tau computation is the same
+    program with or without it (the bit-parity contract above is
+    untouched; the counters are dead code until observed).
     """
     batch_size = max(1, min(int(batch_size), int(n_samples)))
     rounds = -(-n_samples // batch_size)
@@ -270,7 +284,10 @@ def draw_fold(graph, key, n_samples: int, *, estimators, ctx: RunContext,
             state = (counts, tau, sur_counts, sur_tau)
         else:
             state = (counts, tau)
-        return state, jnp.sum((ps.valid & keep).astype(jnp.int32))
+        out = jnp.sum((ps.valid & keep).astype(jnp.int32))
+        if with_exchange:
+            return state, (out, ps.exchange)
+        return state, out
 
     if carry is None:
         counts0, tau0 = jnp.zeros((C, v1), jnp.float32), jnp.int32(0)
@@ -282,11 +299,16 @@ def draw_fold(graph, key, n_samples: int, *, estimators, ctx: RunContext,
         init = init + (jnp.zeros((C, v1), jnp.float32), jnp.int32(0))
     keys = jax.random.split(key, rounds)
     offsets = jnp.arange(rounds, dtype=jnp.int32) * batch_size
-    state, _valids = jax.lax.scan(step, init, (keys, offsets))
+    state, outs = jax.lax.scan(step, init, (keys, offsets))
+    xch = jnp.sum(outs[1], axis=0) if with_exchange else None
     if return_carry:
         counts, tau, sur_counts, sur_tau = state
+        if with_exchange:
+            return (counts, tau), (sur_counts, sur_tau), xch
         return (counts, tau), (sur_counts, sur_tau)
     counts, tau = state
+    if with_exchange:
+        return counts, tau, xch
     return counts, tau
 
 
@@ -412,7 +434,8 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
 def make_epoch_step_sharded(mesh, n_nodes: int, v_pad: int, n0: int,
                             batch_size: int = 1, estimators=None,
                             stream: str = "bidir",
-                            vertex_diameter: int = 0):
+                            vertex_diameter: int = 0,
+                            with_exchange: bool = False):
     """One jit-able COOPERATIVE epoch on a :class:`PartitionedGraph`.
 
     The graph is sharded over the whole mesh, so the mesh advances one
@@ -433,6 +456,12 @@ def make_epoch_step_sharded(mesh, n_nodes: int, v_pad: int, n0: int,
       -> (agg_counts, agg_tau, new_frame, new_tau, new_sur_counts,
           new_sur_tau, done (E,), max_f (E,), max_g (E,))
 
+    ``with_exchange=True`` appends a 10th replicated output: the
+    epoch's summed (2,) [levels_exchanged, levels_sparse] frontier-
+    exchange tally (``ExchangePlan.epoch_accounting`` prices it into
+    telemetry).  The default 9-output signature is unchanged — the
+    dry-run's HLO accounting keeps lowering the exact production step.
+
     Exposed at module level so the multi-pod dry-run can
     .lower()/.compile() it on the production mesh and read the
     per-level frontier-exchange volume off its optimized HLO
@@ -452,7 +481,8 @@ def make_epoch_step_sharded(mesh, n_nodes: int, v_pad: int, n0: int,
 
         @partial(shard_map, mesh=mesh,
                  in_specs=(gspec, pspec, rep, rep, rep, rep, rep, rep, rep),
-                 out_specs=(rep,) * 9, check_vma=False)
+                 out_specs=(rep,) * (10 if with_exchange else 9),
+                 check_vma=False)
         def _step(g, params, agg_counts, agg_tau, frame_counts, frame_tau,
                   sur_counts, sur_tau, k):
             # 1. previous frame -> aggregate (replicated: no collective)
@@ -460,18 +490,23 @@ def make_epoch_step_sharded(mesh, n_nodes: int, v_pad: int, n0: int,
             agg_tau = agg_tau + frame_tau
             # 2. cooperatively sample the next frame over the sharded
             #    graph; the previous surplus tail seeds it
-            (c, t), (sc, st) = draw_fold(g, k, n0, estimators=estimators,
-                                         ctx=ctx, stream=stream,
-                                         batch_size=batch_size,
-                                         carry=(sur_counts, sur_tau),
-                                         return_carry=True, axis=all_axes)
+            df = draw_fold(g, k, n0, estimators=estimators,
+                           ctx=ctx, stream=stream,
+                           batch_size=batch_size,
+                           carry=(sur_counts, sur_tau),
+                           return_carry=True, axis=all_axes,
+                           with_exchange=with_exchange)
+            (c, t), (sc, st) = df[0], df[1]
             new_counts = jnp.zeros(
                 (C, v_pad), jnp.float32).at[:, : c.shape[1]].set(c)
             # 3. stop rules on the consistent snapshot
             done, mf, mg = _check_all(estimators, offsets, agg_counts,
                                       agg_tau, params, ctx)
-            return (agg_counts, agg_tau, new_counts, t, sc, st,
-                    done, mf, mg)
+            out = (agg_counts, agg_tau, new_counts, t, sc, st,
+                   done, mf, mg)
+            if with_exchange:
+                out = out + (df[2],)
+            return out
 
         return _step(g, params, agg_counts, agg_tau, frame_counts,
                      frame_tau, sur_counts, sur_tau, k)
@@ -504,14 +539,14 @@ class _EngineCheckpointer:
     """
 
     def __init__(self, checkpoint_dir, checkpoint_every: int, schema: str,
-                 shardings=None):
+                 shardings=None, telemetry=None):
         self.mgr = None
         self.shardings = shardings
         if checkpoint_dir:
             from repro.checkpoint.store import CheckpointManager
             self.mgr = CheckpointManager(checkpoint_dir, keep=3,
                                          save_every=max(1, checkpoint_every),
-                                         schema=schema)
+                                         schema=schema, telemetry=telemetry)
 
     def restore_state(self, state):
         """-> (state, epoch, done): the latest checkpoint when one
@@ -767,10 +802,13 @@ def _sharded_lane(pg: PartitionedGraph, mesh: Mesh, cfg: AdaptiveConfig,
         return jax.jit(calib_step)(pg, k_cal)
 
     def make_epoch(params, ctx, n0, bsz):
+        # the engine's own step carries the exchange tally (10th
+        # output) so run_adaptive can price it into telemetry; the
+        # dry-run keeps lowering the default 9-output step
         epoch_jit = jax.jit(make_epoch_step_sharded(
             mesh, pg.n_nodes, v_pad, n0, batch_size=bsz,
             estimators=estimators, stream=stream,
-            vertex_diameter=ctx.vertex_diameter))
+            vertex_diameter=ctx.vertex_diameter, with_exchange=True))
         return lambda state, ke: epoch_jit(pg, params, *state, ke)
 
     def make_flush(ctx):
@@ -804,7 +842,7 @@ def run_adaptive(graph, metrics=("betweenness",), *,
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 1,
                  stream: Optional[str] = None,
-                 on_epoch=None) -> AdaptiveRunResult:
+                 on_epoch=None, telemetry=None) -> AdaptiveRunResult:
     """Adaptive sampling for one or more centrality estimators.
 
     ``metrics`` names the estimator plugins (``repro.core.estimators``):
@@ -838,7 +876,22 @@ def run_adaptive(graph, metrics=("betweenness",), *,
     the current one) substitutes it for everything downstream.  If the
     hook raises, pending async checkpoint publishes of *earlier* good
     epochs are still flushed before the exception propagates.
+
+    ``telemetry`` accepts ``None`` (a true no-op), a
+    :class:`repro.runtime.Telemetry` bus, or a JSONL path
+    (``repro.runtime.telemetry.resolve_telemetry``).  Enabled, the run
+    emits ``run.start``/``run.end``, per-epoch ``epoch.stats`` (tau,
+    samples, wall time, stop-rule margins) — and on the sharded lane
+    ``exchange.epoch`` (the priced frontier-exchange accounting) —
+    and wraps the phase structure in spans.  Every counter published
+    host-side already rides the jitted state at the ``on_epoch``
+    boundary (the sharded step *always* carries its exchange tally),
+    so telemetry on is bit-identical to telemetry off on every lane:
+    the compiled programs and the key stream are the same; only
+    host-side observation differs.
     """
+    from repro.runtime.telemetry import resolve_telemetry
+    telemetry = resolve_telemetry(telemetry)
     cfg = config if config is not None else AdaptiveConfig()
     overrides = {}
     if eps is not None:
@@ -864,25 +917,42 @@ def run_adaptive(graph, metrics=("betweenness",), *,
             raise ValueError(
                 "a PartitionedGraph needs the mesh its shards map onto "
                 "(mesh=...); use a plain Graph for the single-device lane")
-        lane = _sharded_lane(graph, mesh, cfg, estimators, stream, C,
-                             offsets)
+        lane_name = "sharded"
     elif mesh is None or int(np.prod(mesh.devices.shape)) == 1:
-        lane = _single_lane(graph, cfg, estimators, stream, C, offsets)
+        lane_name = "single"
     else:
-        lane = _spmd_lane(graph, mesh, cfg, estimators, stream, C, offsets)
+        lane_name = "spmd"
+    telemetry.emit("run.start", lane=lane_name,
+                   metrics=[e.name for e in estimators],
+                   n_nodes=int(graph.n_nodes), eps=float(cfg.eps),
+                   delta=float(cfg.delta))
+    with telemetry.span("phase.diameter"):
+        if lane_name == "sharded":
+            lane = _sharded_lane(graph, mesh, cfg, estimators, stream, C,
+                                 offsets)
+        elif lane_name == "single":
+            lane = _single_lane(graph, cfg, estimators, stream, C, offsets)
+        else:
+            lane = _spmd_lane(graph, mesh, cfg, estimators, stream, C,
+                              offsets)
 
     ctx = RunContext(int(lane.graph.n_nodes), lane.vd)
     bsz = resolve_sample_batch_size(cfg.sample_batch_size, ctx.n_nodes,
                                     ctx.vertex_diameter)
+    # the static per-level price list for the sharded lane's exchange
+    # tally (host-side observation only)
+    xplan = (exchange_plan(lane.graph, bsz)
+             if isinstance(lane.graph, PartitionedGraph) else None)
 
     # ---- phase 2: calibration + per-estimator stop-rule params ---------
     t0 = time.perf_counter()
-    key, k_cal = jax.random.split(key)
-    counts0, tau0 = lane.calibrate(k_cal, bsz, ctx)
-    params = tuple(
-        est.make_params(lane.graph, ctx, cfg.eps, cfg.delta,
-                        counts0[off: off + est.n_channels], tau0)
-        for est, off in zip(estimators, offsets))
+    with telemetry.span("phase.calibration"):
+        key, k_cal = jax.random.split(key)
+        counts0, tau0 = lane.calibrate(k_cal, bsz, ctx)
+        params = tuple(
+            est.make_params(lane.graph, ctx, cfg.eps, cfg.delta,
+                            counts0[off: off + est.n_channels], tau0)
+            for est, off in zip(estimators, offsets))
     t_cal = time.perf_counter() - t0
 
     # ---- phase 3: the adaptive loop ------------------------------------
@@ -901,7 +971,8 @@ def run_adaptive(graph, metrics=("betweenness",), *,
     if checkpoint_dir:
         schema = frame_schema_id(est.schema for est in estimators)
         ckpt = _EngineCheckpointer(checkpoint_dir, checkpoint_every,
-                                   schema, shardings=lane.shardings)
+                                   schema, shardings=lane.shardings,
+                                   telemetry=telemetry)
         full, epoch, _done = ckpt.restore_state(
             state + (frozen_c, frozen_tau, stop_epoch, k))
         state = full[:6]
@@ -912,50 +983,66 @@ def run_adaptive(graph, metrics=("betweenness",), *,
     t0 = time.perf_counter()
     try:
         while not stopped.all() and epoch < cfg.max_epochs:
-            te = time.perf_counter()
-            k, ke = jax.random.split(k)
-            out = epoch_run(state, ke)
-            state, (done, mf, mg) = out[:6], out[6:]
-            epoch += 1
-            if on_epoch is not None:
-                # supervision point: runs before freeze + save so a
-                # refused (or replaced) epoch never reaches a snapshot
-                # or the checkpoint store.  Pending async publishes are
-                # flushed first: the hook (and any disk fault it
-                # injects) must observe a settled on-disk state, and a
-                # swallowed publish error surfaces at the epoch after
-                # its save, not at the end of the run
+            with telemetry.span("phase.epoch", epoch=epoch + 1):
+                te = time.perf_counter()
+                k, ke = jax.random.split(k)
+                out = epoch_run(state, ke)
+                state, (done, mf, mg) = out[:6], out[6:9]
+                xch = out[9] if len(out) > 9 else None
+                epoch += 1
+                if on_epoch is not None:
+                    # supervision point: runs before freeze + save so a
+                    # refused (or replaced) epoch never reaches a snapshot
+                    # or the checkpoint store.  Pending async publishes are
+                    # flushed first: the hook (and any disk fault it
+                    # injects) must observe a settled on-disk state, and a
+                    # swallowed publish error surfaces at the epoch after
+                    # its save, not at the end of the run
+                    if ckpt is not None:
+                        ckpt.wait()
+                    replacement = on_epoch(epoch, state)
+                    if replacement is not None:
+                        state = tuple(replacement)
+                newly = np.asarray(done) & ~stopped
+                if newly.any():
+                    # freeze the newly stopped metrics' deciding snapshot:
+                    # the flush of THIS epoch's state — identical to what
+                    # each metric's single-run result would be at the same
+                    # seed (f/g are non-monotone, so re-reading a later
+                    # snapshot would not reproduce the single-run decision)
+                    last_flush = flush(state)
+                    fl_c, fl_t = last_flush
+                    rows = jnp.asarray(
+                        np.isin(row_metric, np.nonzero(newly)[0]))
+                    newly_j = jnp.asarray(newly)
+                    frozen_c = jnp.where(rows[:, None], fl_c, frozen_c)
+                    frozen_tau = jnp.where(newly_j, fl_t, frozen_tau)
+                    stop_epoch = jnp.where(newly_j, jnp.int32(epoch),
+                                           stop_epoch)
+                    stopped = stopped | newly
+                # host-side publication of the epoch's counters, at the
+                # on_epoch boundary where the state is already materialized
+                n_samples_epoch = int(state[3]) * lane.n_samplers
+                xacct = (xplan.epoch_accounting(int(xch[0]), int(xch[1]))
+                         if xch is not None and xplan is not None else None)
+                e_seconds = time.perf_counter() - te
+                stats.append(EngineEpochStats(
+                    epoch, int(state[1]),
+                    tuple(float(x) for x in np.asarray(mf)),
+                    tuple(float(x) for x in np.asarray(mg)),
+                    e_seconds, n_samples_epoch, xacct))
+                if telemetry:
+                    telemetry.emit(
+                        "epoch.stats", epoch=epoch, tau=int(state[1]),
+                        samples=n_samples_epoch, seconds=e_seconds,
+                        max_f=[float(x) for x in np.asarray(mf)],
+                        max_g=[float(x) for x in np.asarray(mg)])
+                    if xacct is not None:
+                        telemetry.emit("exchange.epoch", epoch=epoch, **xacct)
                 if ckpt is not None:
-                    ckpt.wait()
-                replacement = on_epoch(epoch, state)
-                if replacement is not None:
-                    state = tuple(replacement)
-            newly = np.asarray(done) & ~stopped
-            if newly.any():
-                # freeze the newly stopped metrics' deciding snapshot:
-                # the flush of THIS epoch's state — identical to what
-                # each metric's single-run result would be at the same
-                # seed (f/g are non-monotone, so re-reading a later
-                # snapshot would not reproduce the single-run decision)
-                last_flush = flush(state)
-                fl_c, fl_t = last_flush
-                rows = jnp.asarray(
-                    np.isin(row_metric, np.nonzero(newly)[0]))
-                newly_j = jnp.asarray(newly)
-                frozen_c = jnp.where(rows[:, None], fl_c, frozen_c)
-                frozen_tau = jnp.where(newly_j, fl_t, frozen_tau)
-                stop_epoch = jnp.where(newly_j, jnp.int32(epoch),
-                                       stop_epoch)
-                stopped = stopped | newly
-            stats.append(EngineEpochStats(
-                epoch, int(state[1]),
-                tuple(float(x) for x in np.asarray(mf)),
-                tuple(float(x) for x in np.asarray(mg)),
-                time.perf_counter() - te))
-            if ckpt is not None:
-                ckpt.save_state(
-                    epoch, state + (frozen_c, frozen_tau, stop_epoch, k),
-                    done=bool(stopped.all()))
+                    ckpt.save_state(
+                        epoch, state + (frozen_c, frozen_tau, stop_epoch, k),
+                        done=bool(stopped.all()))
     finally:
         # flush pending async publishes even when the loop aborts (an
         # on_epoch supervisor raising) — earlier good epochs must land,
@@ -967,7 +1054,8 @@ def run_adaptive(graph, metrics=("betweenness",), *,
         # max_epochs freeze of whatever never converged (reported with
         # converged=False; NOT recorded in stop_epoch's checkpoint state,
         # so a resume with a higher max_epochs keeps sampling)
-        last_flush = flush(state)
+        with telemetry.span("phase.flush"):
+            last_flush = flush(state)
         fl_c, fl_t = last_flush
         remaining = ~stopped
         rows = jnp.asarray(np.isin(row_metric, np.nonzero(remaining)[0]))
@@ -992,6 +1080,8 @@ def run_adaptive(graph, metrics=("betweenness",), *,
             extras=est.extras(p, ctx)))
     tau_total = (int(last_flush[1]) if last_flush is not None
                  else int(ft_np.max(initial=0)))
+    telemetry.emit("run.end", tau=tau_total, n_epochs=epoch,
+                   converged=bool(converged.all()))
     return AdaptiveRunResult(
         tuple(reports), tau_total, epoch, bool(converged.all()),
         ctx.vertex_diameter, stats,

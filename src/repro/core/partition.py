@@ -434,6 +434,31 @@ class ExchangePlan:
             return self.sparse_bytes
         return self.dense_bytes
 
+    def epoch_accounting(self, levels_total: int, levels_sparse: int) -> dict:
+        """Price an epoch's exchange tally — the aggregated
+        ``[levels_exchanged, levels_sparse]`` counters the sharded BFS
+        drivers carry (``BFSResult.exchange``) — into the
+        ``exchange.epoch`` telemetry payload.
+
+        A dense level is a *fallback* (a level that overflowed the
+        budget) when the sparse protocol was reachable at this batch
+        width, and *dense-only* when it wasn't (budget 0 or past
+        break-even) — the distinction the adaptive-budget follow-up in
+        ROADMAP.md wants to read off a run.
+        """
+        levels_total = int(levels_total)
+        levels_sparse = int(levels_sparse)
+        dense = levels_total - levels_sparse
+        fallback = dense if self.sparse_available else 0
+        return {
+            "levels_total": levels_total,
+            "levels_sparse": levels_sparse,
+            "levels_dense_fallback": fallback,
+            "levels_dense_only": dense - fallback,
+            "bytes": (levels_sparse * self.sparse_bytes
+                      + dense * self.dense_bytes),
+        }
+
 
 def exchange_plan(pg: PartitionedGraph, batch: int) -> ExchangePlan:
     """The :class:`ExchangePlan` of ``pg`` at sample-batch width

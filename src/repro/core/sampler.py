@@ -36,7 +36,7 @@ independent of the (power-law) maximum degree.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +60,9 @@ class PathSample(NamedTuple):
     contrib: jax.Array   # (..., V+1) float32 — 1.0 on internal path vertices
     valid: jax.Array     # (...) bool — False when s,t were disconnected
     length: jax.Array    # (...) int32 — path length d (edges), -1 if invalid
+    # (2,) int32 [levels_exchanged, levels_sparse] from the sharded BFS
+    # (telemetry observation; None on the replicated lanes)
+    exchange: Optional[jax.Array] = None
 
 
 def sample_pairs(key, n_nodes: int, batch: int):
@@ -230,7 +233,8 @@ def sample_path_batched_sharded(pg: PartitionedGraph, key, batch: int, *,
     full = BidirResult(gather(res.dist_s), gather(res.dist_t),
                        gather(res.sigma_s), gather(res.sigma_t),
                        res.d, res.split)
-    return _finish_paths(pg, k_meet, k_s, k_t, full, batch)
+    out = _finish_paths(pg, k_meet, k_s, k_t, full, batch)
+    return out._replace(exchange=res.exchange)
 
 
 class ForwardSample(NamedTuple):
@@ -247,6 +251,8 @@ class ForwardSample(NamedTuple):
     length: jax.Array    # (B,) int32 — d(s,t), -1 if invalid
     dist: jax.Array      # (rows, B) int32 — dist from s (full SSSP)
     sources: jax.Array   # (B,) int32 — the drawn s
+    # (2,) int32 exchange tally from the sharded BFS; None otherwise
+    exchange: Optional[jax.Array] = None
 
 
 def _finish_forward_paths(graph, k_walk, s, t, dist, sigma,
@@ -315,8 +321,9 @@ def sample_path_forward_batched_sharded(pg: PartitionedGraph, key,
     def gather(x):
         return jax.lax.all_gather(x, axis, axis=0, tiled=True)
 
-    return _finish_forward_paths(pg, k_walk, s, t, gather(res.dist),
-                                 gather(res.sigma), batch)
+    out = _finish_forward_paths(pg, k_walk, s, t, gather(res.dist),
+                                gather(res.sigma), batch)
+    return out._replace(exchange=res.exchange)
 
 
 def sample_path(graph: Graph, key) -> PathSample:

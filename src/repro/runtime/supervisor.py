@@ -115,6 +115,7 @@ class RunEvent(NamedTuple):
     epoch: int      # engine epoch the event is attributed to (0 = outside)
     attempt: int    # failures seen at the current rung when it happened
     detail: str
+    t: float = 0.0  # time.monotonic() when recorded (0.0 = pre-PR 9 log)
 
 
 class ResilientRunResult(NamedTuple):
@@ -224,6 +225,12 @@ class ResilientRunner:
         successive epoch-hook arrivals; the first epoch of each attempt
         is exempt — it absorbs compilation), watchdog toggle, and the
         seed of the jitter/telemetry RNG.
+    ``telemetry``
+        optional bus / JSONL path (``resolve_telemetry``) threaded into
+        every ``run_adaptive`` attempt and the checkpoint store; each
+        :class:`RunEvent` is also re-emitted on it as
+        ``supervisor.<kind>``, so one stream tells the whole story of a
+        resilient run.
     """
 
     def __init__(self, graph, metrics=("betweenness",), *,
@@ -234,7 +241,7 @@ class ResilientRunner:
                  schedule: Optional[FaultSchedule] = None,
                  policy: Optional[RetryPolicy] = None,
                  epoch_timeout: Optional[float] = None,
-                 watchdog: bool = True, seed: int = 0):
+                 watchdog: bool = True, seed: int = 0, telemetry=None):
         if not checkpoint_dir:
             raise ValueError(
                 "ResilientRunner needs checkpoint_dir: recovery is "
@@ -251,6 +258,8 @@ class ResilientRunner:
         self.epoch_timeout = epoch_timeout
         self.watchdog = watchdog
         self._rng = np.random.default_rng(seed)
+        from repro.runtime.telemetry import resolve_telemetry
+        self.telemetry = resolve_telemetry(telemetry)
 
         # lane bookkeeping -------------------------------------------------
         self._graph = graph
@@ -296,7 +305,12 @@ class ResilientRunner:
         return self._base_graph
 
     def _record(self, kind: str, epoch: int, attempt: int, detail: str):
-        self._events.append(RunEvent(kind, epoch, attempt, detail))
+        self._events.append(RunEvent(kind, epoch, attempt, detail,
+                                     time.monotonic()))
+        # one stream tells the whole story: every RunEvent doubles as a
+        # supervisor.<kind> telemetry event (no-op when telemetry is off)
+        self.telemetry.emit("supervisor." + kind, epoch=epoch,
+                            attempt=attempt, detail=detail)
 
     # -- the per-epoch hook ----------------------------------------------
 
@@ -333,25 +347,29 @@ class ResilientRunner:
         old_dir = self._rung_dir()
         self._rung += 1
         new_dir = self._rung_dir()
-        try:
-            arrays, step, meta = restore_arrays(old_dir,
-                                                expect_schema=self._schema)
-        except (FileNotFoundError, CheckpointError):
-            arrays = None               # nothing trustworthy: fresh start
-        if arrays is not None:
-            migrated = elastic_migrate_state(
-                arrays, n_channels=self._C, v1=self._v1,
-                v_pad_new=self._v_pad(lane_new, n_dev_new),
-                lane_new=lane_new, n_dev_new=n_dev_new)
-            epoch = int(meta.get("epoch", step))
-            checkpoint_save(new_dir, epoch, tuple(migrated),
-                            metadata={"epoch": epoch, "done": False},
-                            keep=3, blocking=True, schema=self._schema)
-            self._record(
-                "migrate", epoch, self._attempt,
-                f"state re-entered on {lane_new}/{n_dev_new}dev at epoch "
-                f"{epoch} (agg tau {int(np.asarray(arrays[1]))} kept, "
-                f"in-flight frame discarded)")
+        with self.telemetry.span("supervisor.migrate", lane=lane_new,
+                                 n_devices=n_dev_new):
+            try:
+                arrays, step, meta = restore_arrays(
+                    old_dir, expect_schema=self._schema,
+                    telemetry=self.telemetry)
+            except (FileNotFoundError, CheckpointError):
+                arrays = None           # nothing trustworthy: fresh start
+            if arrays is not None:
+                migrated = elastic_migrate_state(
+                    arrays, n_channels=self._C, v1=self._v1,
+                    v_pad_new=self._v_pad(lane_new, n_dev_new),
+                    lane_new=lane_new, n_dev_new=n_dev_new)
+                epoch = int(meta.get("epoch", step))
+                checkpoint_save(new_dir, epoch, tuple(migrated),
+                                metadata={"epoch": epoch, "done": False},
+                                keep=3, blocking=True, schema=self._schema)
+                self._record(
+                    "migrate", epoch, self._attempt,
+                    f"state re-entered on {lane_new}/{n_dev_new}dev at "
+                    f"epoch {epoch} (agg tau "
+                    f"{int(np.asarray(arrays[1]))} kept, in-flight frame "
+                    f"discarded)")
         self._lane, self._n_dev = lane_new, n_dev_new
         self._graph, self._mesh = graph_new, mesh_new
         self._last_tau = None           # rollback may lower the aggregate
@@ -405,7 +423,8 @@ class ResilientRunner:
                     delta=self.delta, key=self.key, mesh=self._mesh,
                     config=self.config, checkpoint_dir=self._rung_dir(),
                     checkpoint_every=self.checkpoint_every,
-                    stream=self.stream, on_epoch=self._on_epoch)
+                    stream=self.stream, on_epoch=self._on_epoch,
+                    telemetry=self.telemetry)
                 return ResilientRunResult(
                     res, tuple(self._events), self._total_failures,
                     self._lane, self._n_dev)

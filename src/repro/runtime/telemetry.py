@@ -1,0 +1,314 @@
+"""The telemetry bus: spans, sinks, and the trace exporters.
+
+One :class:`Telemetry` instance is the run's event stream.  Producers
+(`repro.core.engine`, `repro.checkpoint.store`,
+`repro.runtime.supervisor`) call :meth:`Telemetry.emit` with a kind
+from the closed taxonomy of :mod:`repro.runtime.events` and wrap their
+phase structure in :meth:`Telemetry.span`; consumers attach *sinks* —
+an in-memory ring (:class:`RingSink`), a JSONL file
+(:class:`JSONLSink`), or anything with a ``write(event)`` method.
+
+Two contracts make it safe to leave on in production (pinned by
+tests/test_telemetry.py):
+
+* **off is a true no-op** — the disabled singleton
+  (:data:`NULL_TELEMETRY`, what ``telemetry=None`` resolves to) is
+  falsy, its ``emit`` returns before building any record, and its
+  ``span`` hands back one reusable null context manager: no
+  allocation, no lock, no clock read;
+* **on is bit-identical** — telemetry only *observes* host values the
+  engine already materializes at epoch boundaries (the per-epoch
+  counters ride the jitted state whether or not anyone reads them), so
+  enabling it changes neither the compiled computations nor the RNG
+  stream on any lane.
+
+Spans nest per thread (a thread-local stack supplies ``parent`` ids),
+and emission is thread-safe — the async checkpoint publisher emits
+from its background thread onto the same bus, distinguished by the
+event's ``tid``.
+
+Exporters: :func:`chrome_trace` turns a stream into the Chrome/Perfetto
+trace-event JSON (load at ``chrome://tracing`` or ui.perfetto.dev), and
+:func:`jax_profiler_trace` is the optional gate around a run that also
+captures a ``jax.profiler`` device trace into a log directory.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import threading
+import time
+from contextlib import contextmanager
+from typing import Optional
+
+from .events import Event, to_json, validate_event
+
+__all__ = ["Telemetry", "NULL_TELEMETRY", "RingSink", "JSONLSink",
+           "NullSink", "resolve_telemetry", "chrome_trace",
+           "write_chrome_trace", "jax_profiler_trace"]
+
+
+class NullSink:
+    """Swallows everything (the explicit no-op sink)."""
+
+    def write(self, ev: Event):
+        pass
+
+
+class RingSink:
+    """Keeps the newest ``capacity`` events in memory (0 = unbounded)."""
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = int(capacity)
+        self._events: list = []
+        self._lock = threading.Lock()
+
+    def write(self, ev: Event):
+        with self._lock:
+            self._events.append(ev)
+            if self.capacity and len(self._events) > self.capacity:
+                del self._events[: len(self._events) - self.capacity]
+
+    @property
+    def events(self) -> list:
+        with self._lock:
+            return list(self._events)
+
+
+class JSONLSink:
+    """Appends one JSON line per event to ``path`` (thread-safe; each
+    line is flushed so a crashed run leaves a readable prefix)."""
+
+    def __init__(self, path: str):
+        self.path = str(path)
+        self._lock = threading.Lock()
+        self._f = open(self.path, "a")
+
+    def write(self, ev: Event):
+        line = to_json(ev)
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def close(self):
+        with self._lock:
+            if not self._f.closed:
+                self._f.close()
+
+
+class _NullSpan:
+    """The reusable context manager disabled spans return."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _SpanCtx:
+    """One live span: emits begin on enter, end (with seconds, and an
+    ``error`` field when exiting on an exception) on exit."""
+
+    __slots__ = ("_tel", "name", "fields", "span_id", "_t0")
+
+    def __init__(self, tel: "Telemetry", name: str, fields: dict):
+        self._tel = tel
+        self.name = name
+        self.fields = fields
+        self.span_id = None
+        self._t0 = 0.0
+
+    def __enter__(self):
+        tel = self._tel
+        self.span_id = next(tel._span_ids)
+        stack = tel._span_stack()
+        parent = stack[-1] if stack else None
+        self._t0 = tel._clock()
+        tel._push(Event("span.begin", self._t0,
+                        {"name": self.name, **self.fields},
+                        span=self.span_id, parent=parent,
+                        tid=threading.get_ident()))
+        stack.append(self.span_id)
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        tel = self._tel
+        stack = tel._span_stack()
+        if stack and stack[-1] == self.span_id:
+            stack.pop()
+        t1 = tel._clock()
+        fields = {"name": self.name, "seconds": t1 - self._t0}
+        if exc_type is not None:
+            fields["error"] = exc_type.__name__
+        parent = stack[-1] if stack else None
+        tel._push(Event("span.end", t1, fields, span=self.span_id,
+                        parent=parent, tid=threading.get_ident()))
+        return False
+
+
+class Telemetry:
+    """The bus.  ``sinks`` is an iterable of objects with
+    ``write(event)``; ``validate=True`` checks every emitted event
+    against the taxonomy at the producer (tests and the CI smoke turn
+    it on; production leaves it off — the taxonomy audit is static).
+    """
+
+    def __init__(self, sinks=(), *, enabled: bool = True,
+                 validate: bool = False, clock=time.monotonic):
+        self.sinks = list(sinks)
+        self._enabled = bool(enabled)
+        self._validate = bool(validate)
+        self._clock = clock
+        self._span_ids = itertools.count(1)
+        self._local = threading.local()
+
+    def __bool__(self) -> bool:
+        return self._enabled
+
+    def add_sink(self, sink) -> "Telemetry":
+        self.sinks.append(sink)
+        return self
+
+    def _span_stack(self) -> list:
+        stack = getattr(self._local, "stack", None)
+        if stack is None:
+            stack = self._local.stack = []
+        return stack
+
+    def _push(self, ev: Event):
+        if self._validate:
+            validate_event(ev)
+        for s in self.sinks:
+            s.write(ev)
+
+    def emit(self, kind: str, **fields):
+        """Emit one instant event (kind from the registered taxonomy)."""
+        if not self._enabled:
+            return
+        stack = self._span_stack()
+        self._push(Event(kind, self._clock(), fields,
+                         parent=stack[-1] if stack else None,
+                         tid=threading.get_ident()))
+
+    def span(self, name: str, **fields):
+        """Context manager timing a named phase; spans nest per thread
+        (``parent`` ids), and the end event carries the duration."""
+        if not self._enabled:
+            return _NULL_SPAN
+        return _SpanCtx(self, name, fields)
+
+    def events(self) -> list:
+        """The events of the first RingSink (convenience for tests)."""
+        for s in self.sinks:
+            if isinstance(s, RingSink):
+                return s.events
+        return []
+
+    def close(self):
+        for s in self.sinks:
+            close = getattr(s, "close", None)
+            if close is not None:
+                close()
+
+
+# The disabled singleton every telemetry=None call site resolves to.
+NULL_TELEMETRY = Telemetry((), enabled=False)
+
+
+def resolve_telemetry(arg) -> Telemetry:
+    """Normalize a ``telemetry=`` argument: ``None`` -> the disabled
+    singleton, a :class:`Telemetry` -> itself, a path string -> a fresh
+    bus writing JSONL there, a sink object -> a bus wrapping it."""
+    if arg is None:
+        return NULL_TELEMETRY
+    if isinstance(arg, Telemetry):
+        return arg
+    if isinstance(arg, (str, bytes)) or hasattr(arg, "__fspath__"):
+        return Telemetry([JSONLSink(arg)])
+    if hasattr(arg, "write"):
+        return Telemetry([arg])
+    raise TypeError(
+        f"telemetry must be None, a Telemetry, a JSONL path or a sink "
+        f"object with .write(event); got {type(arg).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+def chrome_trace(events) -> dict:
+    """Render an event stream (Events or parsed JSONL dicts) as
+    Chrome/Perfetto trace-event JSON.
+
+    Matched ``span.begin``/``span.end`` pairs become ``"ph": "X"``
+    complete events (µs timestamps relative to the stream's first
+    event, one track per emitting thread); instant events become
+    ``"ph": "i"`` thread-scoped instants carrying their payload as
+    ``args``.  Unmatched begins are closed at the stream's end so a
+    truncated trace still loads.
+    """
+    from .events import from_json
+    evs = [e if isinstance(e, Event) else from_json(e) for e in events]
+    if not evs:
+        return {"traceEvents": [], "displayTimeUnit": "ms"}
+    t0 = min(e.t for e in evs)
+    t_end = max(e.t for e in evs)
+    us = lambda t: (t - t0) * 1e6  # noqa: E731
+    open_spans: dict = {}
+    rows = []
+    for e in evs:
+        if e.kind == "span.begin":
+            open_spans[e.span] = e
+        elif e.kind == "span.end":
+            b = open_spans.pop(e.span, None)
+            if b is None:
+                continue
+            rows.append({
+                "name": b.fields.get("name", f"span{e.span}"),
+                "ph": "X", "ts": us(b.t), "dur": max(0.0, us(e.t) - us(b.t)),
+                "pid": 0, "tid": b.tid,
+                "args": {k: v for k, v in {**b.fields, **e.fields}.items()
+                         if k != "name"}})
+        else:
+            rows.append({"name": e.kind, "ph": "i", "s": "t",
+                         "ts": us(e.t), "pid": 0, "tid": e.tid,
+                         "args": dict(e.fields)})
+    for b in open_spans.values():    # close truncated spans at stream end
+        rows.append({"name": b.fields.get("name", f"span{b.span}"),
+                     "ph": "X", "ts": us(b.t),
+                     "dur": max(0.0, us(t_end) - us(b.t)),
+                     "pid": 0, "tid": b.tid,
+                     "args": {k: v for k, v in b.fields.items()
+                              if k != "name"}})
+    rows.sort(key=lambda r: r["ts"])
+    return {"traceEvents": rows, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, events) -> str:
+    """Write :func:`chrome_trace` JSON to ``path``; returns the path."""
+    with open(path, "w") as f:
+        json.dump(chrome_trace(events), f)
+    return str(path)
+
+
+@contextmanager
+def jax_profiler_trace(logdir: Optional[str]):
+    """Optional ``jax.profiler`` gate: with a log directory, the wrapped
+    block runs under ``jax.profiler.start_trace``/``stop_trace`` (view
+    in TensorBoard or Perfetto); with ``None`` it is a no-op — so call
+    sites can thread a config value through unconditionally."""
+    if not logdir:
+        yield
+        return
+    import jax
+    jax.profiler.start_trace(str(logdir))
+    try:
+        yield
+    finally:
+        jax.profiler.stop_trace()

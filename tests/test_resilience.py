@@ -539,3 +539,94 @@ def test_degradation_ladder_8_devices(tmp_path):
     assert r.returncode == 0, r.stderr[-4000:]
     for marker in ("GATHER_OK", "SHRINK_OK", "LADDER_OK"):
         assert marker in r.stdout, r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Telemetry integration: RunEvent ordering/re-emission, checkpoint spans
+# ---------------------------------------------------------------------------
+
+def test_run_event_timestamps_and_bus_reemission(tmp_path):
+    """PR 9 regression: every RunEvent carries a monotonic timestamp, the
+    in-memory log is time-ordered, and each event is re-emitted on the
+    telemetry bus as supervisor.<kind> from the same _record call, so
+    the two views can never disagree on order."""
+    from repro.runtime import RingSink, Telemetry
+
+    ring = RingSink()
+    g = _small_graph(seed=3, v=80, e=300)
+    cfg = AdaptiveConfig(eps=0.08, delta=0.1, max_epochs=12)
+    sched = FaultSchedule([FaultSpec("kill", 1), FaultSpec("nan", 2)])
+    out = ResilientRunner(
+        g, config=cfg, key=jax.random.PRNGKey(4),
+        checkpoint_dir=str(tmp_path / "ck"), schedule=sched,
+        policy=RetryPolicy(max_retries=6, backoff_base=1e-3,
+                           backoff_cap=1e-3),
+        telemetry=Telemetry([ring], validate=True)).run()
+    assert out.events, "faulted run recorded no events"
+    ts = [e.t for e in out.events]
+    assert all(t > 0.0 for t in ts)         # stamped, not the 0.0 default
+    assert ts == sorted(ts)
+    bus = [e for e in ring.events if e.kind.startswith("supervisor.")]
+    assert [b.kind.split(".", 1)[1] for b in bus] == \
+        [e.kind for e in out.events]
+    for b, e in zip(bus, out.events):
+        assert b.fields["epoch"] == e.epoch
+        assert b.fields["attempt"] == e.attempt
+        assert b.fields["detail"] == e.detail
+
+
+def test_checkpoint_publish_restore_telemetry(tmp_path):
+    """The async publish and the restore path surface as spans + typed
+    events: a clean save/restore emits ok=True pairs, a corrupted step
+    emits a quarantine event plus an ok=False restore attempt before
+    the fallback succeeds."""
+    from repro.runtime import RingSink, Telemetry
+
+    ring = RingSink()
+    tel = Telemetry([ring], validate=True)
+    root = str(tmp_path / "ck")
+    tree = _tree()
+    save(root, 1, tree, telemetry=tel)
+    save(root, 2, jax.tree.map(lambda x: x + 1, tree), telemetry=tel)
+    pubs = [e for e in ring.events if e.kind == "checkpoint.publish"]
+    assert [p.fields["step"] for p in pubs] == [1, 2]
+    assert all(p.fields["ok"] and p.fields["seconds"] >= 0 for p in pubs)
+    spans = [e for e in ring.events
+             if e.kind == "span.end"
+             and e.fields["name"] == "checkpoint.publish"]
+    assert len(spans) == 2
+    corrupt_newest_step(root)
+    restored, step, _ = restore(root, tree, telemetry=tel)
+    assert step == 1
+    kinds = [e.kind for e in ring.events]
+    assert "checkpoint.quarantine" in kinds
+    rests = [e for e in ring.events if e.kind == "checkpoint.restore"]
+    # step 2 failed integrity, step 1 verified
+    assert [r.fields["ok"] for r in rests] == [False, True]
+    assert "error" in rests[0].fields
+    assert [r.fields["step"] for r in rests] == [2, 1]
+
+
+def test_checkpoint_publish_failure_emits_error_event(tmp_path):
+    """A publish that dies on the background thread still reports
+    through the bus: the checkpoint.publish event carries ok=False and
+    the error type (cross-thread emission is the JSONLSink/RingSink
+    lock's job)."""
+    from repro.runtime import RingSink, Telemetry
+
+    ring = RingSink()
+    tel = Telemetry([ring], validate=True)
+
+    def boom(kind, step, i):
+        raise OSError(28, "No space left on device")
+
+    install_publish_fault_hook(boom)
+    try:
+        with pytest.raises(OSError):
+            save(str(tmp_path / "ck"), 1, _tree(), telemetry=tel)
+    finally:
+        install_publish_fault_hook(None)
+    pubs = [e for e in ring.events if e.kind == "checkpoint.publish"]
+    assert len(pubs) == 1
+    assert pubs[0].fields["ok"] is False
+    assert pubs[0].fields["error"] == "OSError"

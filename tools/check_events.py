@@ -1,0 +1,237 @@
+#!/usr/bin/env python
+"""Event-taxonomy audit: the telemetry bus only carries registered kinds.
+
+The event taxonomy (``repro.runtime.events.EVENT_KINDS``) is *closed*:
+``validate_event`` rejects anything unregistered, and DESIGN.md
+§Observability documents every kind's required fields.  That contract
+rots silently — a new ``telemetry.emit("my.new.kind", ...)`` works fine
+at runtime with validation off and only explodes later when someone
+turns ``validate=True`` on, and a kind documented nowhere is a kind
+nobody's trace tooling knows about.  This check makes the drift a CI
+failure instead:
+
+* every string literal passed to ``.emit(...)`` / ``.span(...)`` on a
+  telemetry object under ``src/`` must be registered in ``EVENT_KINDS``
+  / ``SPAN_NAMES``; a *non*-literal kind is itself an error unless it is
+  the supervisor's ``"supervisor." + kind`` re-emission idiom (whose
+  dynamic part is pinned by the next rule);
+* every literal the supervisor passes to ``_record(...)`` must appear
+  in ``SUPERVISOR_EVENT_KINDS``, and ``SUPERVISOR_EVENT_KINDS`` must be
+  in lockstep with the ``supervisor.*`` entries of ``EVENT_KINDS``
+  (both directions), so every ``RunEvent`` kind has a registered bus
+  counterpart;
+* DESIGN.md §Observability must mention every event kind and span name
+  in backticks, and every backticked dotted token in that section that
+  uses one of the taxonomy's families (``run.``, ``epoch.``,
+  ``phase.`` ...) must be registered — documentation and registry can
+  only move together.
+
+``--smoke`` additionally runs a tiny telemetry-enabled adaptive run
+end-to-end and checks the whole toolchain on its trace: the JSONL
+re-validates line by line, the Chrome export is well-formed trace-event
+JSON, and ``tools/trace_report.py`` reproduces the run's final tau and
+epoch count exactly from the file alone.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+from repro.runtime.events import (EVENT_KINDS, SPAN_NAMES,           # noqa: E402
+                                  SUPERVISOR_EVENT_KINDS)
+
+DESIGN = os.path.join(REPO, "DESIGN.md")
+OBS_HEADER = "## §Observability"
+
+
+def _receiver(node):
+    """Dotted receiver of an attribute call: ``self.telemetry.emit(...)``
+    -> ``self.telemetry``."""
+    parts = []
+    node = node.func.value
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_telemetry(recv: str) -> bool:
+    last = recv.rsplit(".", 1)[-1]
+    return last in ("telemetry", "tel")
+
+
+def _supervisor_concat(arg) -> bool:
+    """The one sanctioned dynamic kind: ``"supervisor." + <expr>``."""
+    return (isinstance(arg, ast.BinOp) and isinstance(arg.op, ast.Add)
+            and isinstance(arg.left, ast.Constant)
+            and arg.left.value == "supervisor.")
+
+
+def check_file(path):
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        meth = node.func.attr
+        if meth in ("emit", "span") and _is_telemetry(_receiver(node)):
+            if not node.args:
+                yield node.lineno, f".{meth}() call with no kind argument"
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                registry = EVENT_KINDS if meth == "emit" else SPAN_NAMES
+                if arg.value not in registry:
+                    yield (node.lineno,
+                           f'.{meth}("{arg.value}") is not registered in '
+                           f"{'EVENT_KINDS' if meth == 'emit' else 'SPAN_NAMES'}"
+                           " (repro/runtime/events.py)")
+            elif not (meth == "emit" and _supervisor_concat(arg)):
+                yield (node.lineno,
+                       f".{meth}(...) kind is not a string literal — the "
+                       "taxonomy is closed, pass a registered literal")
+        elif meth == "_record" and node.args:
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                if arg.value not in SUPERVISOR_EVENT_KINDS:
+                    yield (node.lineno,
+                           f'_record("{arg.value}") is not in '
+                           "SUPERVISOR_EVENT_KINDS")
+            else:
+                yield (node.lineno,
+                       "_record(...) kind is not a string literal")
+
+
+def check_lockstep():
+    where = "src/repro/runtime/events.py"
+    bus = {k.split(".", 1)[1] for k in EVENT_KINDS
+           if k.startswith("supervisor.")}
+    for k in SUPERVISOR_EVENT_KINDS:
+        if k not in bus:
+            yield (where, f"SUPERVISOR_EVENT_KINDS has '{k}' but "
+                   f"'supervisor.{k}' is not in EVENT_KINDS")
+    for k in sorted(bus):
+        if k not in SUPERVISOR_EVENT_KINDS:
+            yield (where, f"EVENT_KINDS has 'supervisor.{k}' but '{k}' is "
+                   "not in SUPERVISOR_EVENT_KINDS")
+
+
+def check_design():
+    where = "DESIGN.md"
+    try:
+        with open(DESIGN) as f:
+            text = f.read()
+    except OSError:
+        yield where, "missing"
+        return
+    if OBS_HEADER not in text:
+        yield where, f"missing '{OBS_HEADER}' section"
+        return
+    section = text.split(OBS_HEADER, 1)[1]
+    nxt = section.find("\n## ")
+    if nxt >= 0:
+        section = section[:nxt]
+    documented = set(re.findall(r"`([a-z_]+\.[a-z_]+)`", section))
+    families = {k.split(".", 1)[0] for k in (*EVENT_KINDS, *SPAN_NAMES)}
+    registered = set(EVENT_KINDS) | set(SPAN_NAMES)
+    for k in sorted(registered):
+        if k not in documented:
+            yield (where, f"registered kind/span `{k}` is not documented "
+                   "in §Observability")
+    for k in sorted(documented):
+        if k.split(".", 1)[0] in families and k not in registered:
+            yield (where, f"§Observability documents `{k}` but it is not "
+                   "registered in EVENT_KINDS/SPAN_NAMES")
+
+
+def smoke():
+    """End-to-end: run -> JSONL -> validate -> Chrome trace -> report."""
+    import tempfile
+
+    import numpy as np
+    import jax
+
+    from repro.core.adaptive import AdaptiveConfig
+    from repro.core.engine import run_adaptive
+    from repro.core.graph import build_graph
+    from repro.runtime.events import read_jsonl
+    from repro.runtime.telemetry import write_chrome_trace
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import trace_report
+
+    rng = np.random.default_rng(0)
+    v = 100
+    src = rng.integers(0, v, 400)
+    dst = (src + 1 + rng.integers(0, v - 1, 400)) % v
+    g = build_graph(np.concatenate([src, dst]), np.concatenate([dst, src]), v)
+    cfg = AdaptiveConfig(eps=0.05, delta=0.1, max_epochs=8)
+    with tempfile.TemporaryDirectory() as d:
+        trace = os.path.join(d, "run.jsonl")
+        res = run_adaptive(g, ("betweenness",), config=cfg,
+                           key=jax.random.PRNGKey(0), telemetry=trace)
+        events = read_jsonl(trace, validate=True)   # schema holds per line
+        assert events, "smoke run emitted no events"
+        chrome = os.path.join(d, "trace.json")
+        write_chrome_trace(chrome, events)
+        with open(chrome) as f:
+            doc = json.load(f)
+        rows = doc["traceEvents"]
+        assert rows and all(r["ph"] in ("X", "i") and "ts" in r
+                            and "pid" in r and "tid" in r for r in rows), \
+            "chrome export is not valid trace-event JSON"
+        assert any(r["ph"] == "X" for r in rows), "no span rows in trace"
+        # the report reproduces the run outcome from the file alone
+        s = trace_report.summarize(events)
+        assert s["end"]["tau"] == res.tau, (s["end"]["tau"], res.tau)
+        assert s["end"]["n_epochs"] == res.n_epochs
+        assert len(s["epochs"]) == res.n_epochs
+        text = trace_report.render(events)
+        assert f"tau={res.tau}" in text
+    print(f"event smoke: OK ({len(events)} events, {len(rows)} trace rows, "
+          f"report reproduces tau={res.tau} epochs={res.n_epochs})")
+    return 0
+
+
+def main(argv=None):
+    if argv is None:
+        argv = sys.argv[1:]
+    if "--smoke" in argv:
+        return smoke()
+    bad = 0
+    n_files = 0
+    for root, _dirs, names in os.walk(SRC):
+        for name in sorted(names):
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(root, name)
+            n_files += 1
+            rel = os.path.relpath(path, REPO)
+            for lineno, msg in check_file(path):
+                print(f"{rel}:{lineno}: {msg}")
+                bad += 1
+    for where, msg in check_lockstep():
+        print(f"{where}: {msg}")
+        bad += 1
+    for where, msg in check_design():
+        print(f"{where}: {msg}")
+        bad += 1
+    if bad:
+        print(f"event check: {bad} error(s)")
+        return 1
+    print(f"event check: OK ({n_files} file(s), {len(EVENT_KINDS)} event "
+          f"kind(s), {len(SPAN_NAMES)} span name(s), taxonomy documented)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,191 @@
+#!/usr/bin/env python
+"""Render a run report from a telemetry JSONL trace.
+
+The adaptive engine (``run_adaptive(..., telemetry="run.jsonl")``, or a
+``ResilientRunner`` given the same argument) streams its typed event
+taxonomy — see DESIGN.md §Observability — into a JSONL file.  This tool
+turns that file back into the numbers a run log would have shown, *from
+the trace alone*:
+
+* the run header and final outcome (``run.start`` / last ``run.end`` —
+  the reported tau and epoch count are exactly the run's own);
+* the tau-vs-epoch convergence curve with per-epoch samples/s
+  (``epoch.stats``);
+* wall time and throughput per phase, aggregated over span timers
+  (``span.end``);
+* the sharded lane's exchange-volume table: per epoch, how many BFS
+  levels went over the sparse bitmap-scheduled protocol vs the dense
+  fallback, and the bytes the :class:`ExchangePlan` accounts to them
+  (``exchange.epoch``);
+* the resilience timeline: supervisor fault/retry/degrade/migrate
+  events and checkpoint publish/restore/quarantine outcomes, in bus
+  order (``supervisor.*`` / ``checkpoint.*``).
+
+Usage::
+
+    PYTHONPATH=src python tools/trace_report.py RUN.jsonl
+    PYTHONPATH=src python tools/trace_report.py RUN.jsonl --chrome t.json
+
+``--chrome`` additionally exports the Chrome/Perfetto trace-event JSON
+(load it at chrome://tracing or ui.perfetto.dev).  ``--validate``
+re-checks every line against the event taxonomy while reading.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+try:
+    from repro.runtime.events import read_jsonl
+except ImportError:  # direct invocation without PYTHONPATH=src
+    sys.path.insert(0, _SRC)
+    from repro.runtime.events import read_jsonl
+from repro.runtime.telemetry import write_chrome_trace
+
+
+def summarize(events):
+    """Fold a JSONL event stream into the report's data model.
+
+    Returns a dict with keys ``start`` (first ``run.start`` fields or
+    None), ``end`` (last ``run.end`` fields or None — ``end["tau"]`` and
+    ``end["n_epochs"]`` are the run's exact final tau and epoch count),
+    ``epochs`` (``epoch.stats`` rows of the last attempt, in order),
+    ``exchange`` (``exchange.epoch`` rows of the last attempt),
+    ``phases`` (span name -> {"count", "seconds"}), and ``timeline``
+    (supervisor.* / checkpoint.* events, bus order).
+
+    A resilient run retries ``run_adaptive`` after faults, so one trace
+    can hold several ``run.start``..``run.end`` stretches; the per-epoch
+    curves come from the stretch after the *last* ``run.start`` (the
+    attempt that actually finished), while phase totals and the timeline
+    aggregate the whole trace — retries cost real wall time.
+    """
+    out = {"start": None, "end": None, "epochs": [], "exchange": [],
+           "phases": {}, "timeline": []}
+    for ev in events:
+        if not isinstance(ev, dict):  # Event namedtuple -> flat row
+            ev = {"kind": ev.kind, "t": ev.t, **ev.fields}
+        kind = ev["kind"]
+        if kind == "run.start":
+            out["start"] = ev
+            out["epochs"] = []
+            out["exchange"] = []
+        elif kind == "run.end":
+            out["end"] = ev
+        elif kind == "epoch.stats":
+            out["epochs"].append(ev)
+        elif kind == "exchange.epoch":
+            out["exchange"].append(ev)
+        elif kind == "span.end":
+            ph = out["phases"].setdefault(ev["name"],
+                                          {"count": 0, "seconds": 0.0})
+            ph["count"] += 1
+            ph["seconds"] += float(ev["seconds"])
+        if kind.startswith("supervisor.") or kind.startswith("checkpoint."):
+            out["timeline"].append(ev)
+    return out
+
+
+def _bar(value, vmax, width=32):
+    n = 0 if vmax <= 0 else int(round(width * value / vmax))
+    return "#" * n
+
+
+def render(events):
+    """Format the report as text (one string, trailing newline)."""
+    s = summarize(events)
+    lines = []
+    start, end = s["start"], s["end"]
+    lines.append("== run ==")
+    if start is not None:
+        lines.append(
+            f"  lane={start['lane']}  metrics={','.join(start['metrics'])}  "
+            f"n_nodes={start['n_nodes']}  eps={start['eps']}  "
+            f"delta={start['delta']}")
+    if end is not None:
+        lines.append(f"  final tau={end['tau']}  epochs={end['n_epochs']}  "
+                     f"converged={end['converged']}")
+    else:
+        lines.append("  (no run.end in trace: run did not finish)")
+
+    if s["epochs"]:
+        lines.append("")
+        lines.append("== tau vs epoch ==")
+        tau_max = max(e["tau"] for e in s["epochs"])
+        for e in s["epochs"]:
+            rate = e["samples"] / e["seconds"] if e["seconds"] > 0 else 0.0
+            lines.append(
+                f"  epoch {e['epoch']:>3}  tau={e['tau']:>10,}  "
+                f"samples={e['samples']:>8,}  {e['seconds']:>8.3f}s  "
+                f"{rate:>12,.0f} samples/s  |{_bar(e['tau'], tau_max)}")
+
+    if s["phases"]:
+        lines.append("")
+        lines.append("== wall time per phase ==")
+        n_samples = sum(e["samples"] for e in s["epochs"])
+        for name in sorted(s["phases"]):
+            ph = s["phases"][name]
+            row = (f"  {name:<22} x{ph['count']:<4} "
+                   f"{ph['seconds']:>10.3f}s total")
+            if name == "phase.epoch" and ph["seconds"] > 0 and n_samples:
+                row += (f"  ({n_samples / ph['seconds']:,.0f} samples/s "
+                        f"over {n_samples:,} samples)")
+            lines.append(row)
+
+    if s["exchange"]:
+        lines.append("")
+        lines.append("== exchange volume (sharded lane) ==")
+        lines.append("  epoch  levels  sparse  dense_fallback  dense_only"
+                     "        bytes")
+        tot = {k: 0 for k in ("levels_total", "levels_sparse",
+                              "levels_dense_fallback", "levels_dense_only",
+                              "bytes")}
+        for e in s["exchange"]:
+            for k in tot:
+                tot[k] += e[k]
+            lines.append(
+                f"  {e['epoch']:>5}  {e['levels_total']:>6}  "
+                f"{e['levels_sparse']:>6}  {e['levels_dense_fallback']:>14}  "
+                f"{e['levels_dense_only']:>10}  {e['bytes']:>11,}")
+        lines.append(
+            f"  total  {tot['levels_total']:>6}  {tot['levels_sparse']:>6}  "
+            f"{tot['levels_dense_fallback']:>14}  "
+            f"{tot['levels_dense_only']:>10}  {tot['bytes']:>11,}")
+
+    if s["timeline"]:
+        lines.append("")
+        lines.append("== resilience timeline ==")
+        t0 = s["timeline"][0]["t"]
+        for ev in s["timeline"]:
+            detail = []
+            for k in ("epoch", "attempt", "step", "seconds", "ok", "detail",
+                      "error"):
+                if k in ev:
+                    v = f"{ev[k]:.3f}" if k == "seconds" else ev[k]
+                    detail.append(f"{k}={v}")
+            lines.append(f"  +{ev['t'] - t0:>8.3f}s  {ev['kind']:<24} "
+                         + "  ".join(detail))
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Render a run report from a telemetry JSONL trace.")
+    ap.add_argument("trace", help="path to the JSONL trace")
+    ap.add_argument("--chrome", metavar="OUT.json", default=None,
+                    help="also export Chrome/Perfetto trace-event JSON")
+    ap.add_argument("--validate", action="store_true",
+                    help="re-validate every line against the taxonomy")
+    args = ap.parse_args(argv)
+    events = read_jsonl(args.trace, validate=args.validate)
+    sys.stdout.write(render(events))
+    if args.chrome:
+        write_chrome_trace(args.chrome, events)
+        print(f"\nchrome trace -> {os.path.abspath(args.chrome)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
