@@ -879,6 +879,113 @@ def bench_metric_sweep(full: bool, smoke: bool = False):
 
 
 # ---------------------------------------------------------------------------
+# Weighted sweep: delta-stepping bucket structure vs BFS levels
+# ---------------------------------------------------------------------------
+
+def run_weighted_sweep(smoke: bool = False, write_json: bool = True,
+                       full: bool = False, reps: int = 2):
+    """Round structure and throughput of the weighted lane vs BFS.
+
+    Delta-stepping's work-efficiency story is its ROUND structure: on a
+    road-like grid (bounded degree, weights clustered around the mean)
+    the average-weight delta heuristic settles each source in a handful
+    of bucket advances, while a hop-synchronous traversal pays one round
+    per BFS level; on a skewed (heavy-tailed, R-MAT) weight profile the
+    windows fragment and the bucket count grows toward the weighted
+    depth.  Both regimes are recorded side by side: per-source mean
+    bucket advances and weighted DAG depth from
+    :class:`repro.core.bfs.SSSPResult` against the BFS level count of
+    the SAME topology, plus us/source for each driver.  ``--smoke`` is
+    the seconds-scale CI gate (tiny instances, no BENCH row); the
+    reachability cross-check — weighted and unweighted traversals reach
+    the same vertex set — runs in every mode.
+    """
+    from repro.core import (grid_graph, rmat_graph,
+                            symmetric_dyadic_weights, with_weights)
+    from repro.core.bfs import bfs_sssp_batched, delta_sssp_batched
+
+    rng = np.random.default_rng(23)
+
+    def skewed_weights(g, seed):
+        # heavy-tailed power-of-two dyadic weights 2^k/16, k in [0, 8),
+        # symmetric per undirected pair, exactly representable in f32
+        wrng = np.random.default_rng(seed)
+        srcs = np.asarray(g.src[: g.n_edges])
+        dsts = np.asarray(g.dst[: g.n_edges])
+        pairs = np.unique(np.stack([np.minimum(srcs, dsts),
+                                    np.maximum(srcs, dsts)], 1), axis=0)
+        draws = wrng.integers(0, 8, len(pairs))
+        wmap = {tuple(p): float(2 ** k) / 16.0
+                for p, k in zip(pairs, draws)}
+        return np.array([wmap[(min(a, b), max(a, b))]
+                         for a, b in zip(srcs, dsts)], np.float32)
+
+    if smoke:
+        B = 8
+        grid = grid_graph(16, 12)
+        rmat = rmat_graph(7, 8, seed=3)
+    else:
+        B = 32
+        grid = grid_graph(96, 64) if full else grid_graph(48, 32)
+        rmat = rmat_graph(12 if full else 10, 8, seed=3)
+    cases = [
+        ("grid_uniform", grid,
+         with_weights(grid, symmetric_dyadic_weights(grid, seed=5))),
+        ("rmat_skewed", rmat, with_weights(rmat, skewed_weights(rmat, 7))),
+    ]
+    print("\n== weighted sweep: delta-stepping buckets vs BFS levels =="
+          + ("  [smoke]" if smoke else ""))
+    rows = []
+    for name, base, g in cases:
+        sources = jnp.asarray(rng.integers(0, g.n_nodes, B), jnp.int32)
+        wfn = jax.jit(delta_sssp_batched)
+        bfn = jax.jit(bfs_sssp_batched)
+        wres = wfn(g, sources)
+        bres = bfn(base, sources)
+        # same topology => same reachable set, float vs int sentinels
+        wreach = np.asarray(wres.dist) >= 0.0
+        breach = np.asarray(bres.dist) >= 0
+        assert (wreach == breach).all(), name
+        us_w = _time_call(wfn, g, sources, reps=reps)
+        us_b = _time_call(bfn, base, sources, reps=reps)
+        buckets = float(np.asarray(wres.buckets).mean())
+        wdepth = float(np.asarray(wres.levels).mean())
+        blevels = float(np.asarray(bres.levels).mean())
+        print(f"  {name:<14} |V|={g.n_nodes:>6} buckets/src={buckets:7.1f} "
+              f"wdepth/src={wdepth:7.1f} bfs_levels/src={blevels:7.1f} "
+              f"us/src w={us_w / B:9.1f} bfs={us_b / B:9.1f}")
+        emit(f"weighted_sweep.{name}", us_w / B,
+             f"buckets={buckets:.1f};bfs_levels={blevels:.1f}")
+        rows.append({
+            "family": name, "n_nodes": g.n_nodes,
+            "n_edges_undirected": g.n_edges_undirected, "batch": B,
+            "mean_buckets_per_source": buckets,
+            "mean_weighted_depth_per_source": wdepth,
+            "mean_bfs_levels_per_source": blevels,
+            "us_per_source_weighted": us_w / B,
+            "us_per_source_bfs": us_b / B,
+        })
+    record = {
+        "section": "weighted_sweep",
+        "mode": "xla",
+        "metric": "per-source bucket advances (delta-stepping, "
+                  "average-weight delta) and weighted DAG depth vs BFS "
+                  "level count of the same topology; us/source for both "
+                  "drivers",
+        "results": rows, "smoke": smoke, "full": full,
+        "timestamp": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "device": jax.devices()[0].platform,
+    }
+    if write_json and not smoke:
+        _append_bench_record(record)
+    return record
+
+
+def bench_weighted_sweep(full: bool, smoke: bool = False):
+    run_weighted_sweep(smoke=smoke, full=full, reps=3 if full else 2)
+
+
+# ---------------------------------------------------------------------------
 # Fault matrix: resilience sweep over the injected-failure taxonomy
 # ---------------------------------------------------------------------------
 
@@ -1100,7 +1207,7 @@ def main():
     ap.add_argument("--full", action="store_true")
     sections = ["table2", "fig2", "fig3", "fig4", "batch_sweep",
                 "node_blocked_sweep", "csc_driver_sweep", "partition_sweep",
-                "metric_sweep", "fault_matrix", "kernels"]
+                "metric_sweep", "weighted_sweep", "fault_matrix", "kernels"]
     ap.add_argument("section", nargs="?", default=None, choices=sections,
                     help="run a single section (same as --only)")
     ap.add_argument("--only", default=None, choices=sections)
@@ -1114,7 +1221,8 @@ def main():
                            "real TPU hardware) — recorded per "
                            "BENCH_sampling.json row as pallas_mode")
     ap.add_argument("--smoke", action="store_true",
-                    help="metric_sweep / fault_matrix: seconds-scale CI "
+                    help="metric_sweep / weighted_sweep / fault_matrix: "
+                         "seconds-scale CI "
                          "gate (tiny instance, fewer cells, no BENCH "
                          "row, no >=1.5x assertion)")
     args = ap.parse_args()
@@ -1130,11 +1238,12 @@ def main():
         "csc_driver_sweep": bench_csc_driver_sweep,
         "partition_sweep": bench_partition_sweep,
         "metric_sweep": bench_metric_sweep,
+        "weighted_sweep": bench_weighted_sweep,
         "fault_matrix": bench_fault_matrix,
         "kernels": bench_kernels,
     }
     takes_mode = {"node_blocked_sweep", "partition_sweep"}
-    takes_smoke = {"metric_sweep", "fault_matrix"}
+    takes_smoke = {"metric_sweep", "weighted_sweep", "fault_matrix"}
     for name, fn in jobs.items():
         if args.only and name != args.only:
             continue

@@ -3,25 +3,31 @@
 from .graph import (CSCLayout, Graph, bucket_layout, build_csc_layout,
                     build_graph, erdos_renyi_graph, from_edge_list,
                     grid_graph, hyperbolic_graph, rmat_graph,
-                    with_csc_layout)
+                    symmetric_dyadic_weights, with_csc_layout,
+                    with_weights)
 from .partition import (ExchangePlan, PartitionedGraph, ShardedCSCLayout,
                         default_exchange_budget, exchange_plan, global_row,
                         max_active_source_chunks, partition_graph,
                         shard_vertex_range, vertex_owner)
-from .bfs import (BFSResult, BidirResult, bfs_sssp, bfs_sssp_batched,
-                  bfs_sssp_batched_sharded, bidirectional_bfs,
-                  bidirectional_bfs_batched,
-                  bidirectional_bfs_batched_sharded)
+from .bfs import (BFSResult, BidirResult, SSSPResult, bfs_sssp,
+                  bfs_sssp_batched, bfs_sssp_batched_sharded,
+                  bidirectional_bfs, bidirectional_bfs_batched,
+                  bidirectional_bfs_batched_sharded, delta_sssp_batched,
+                  delta_sssp_batched_sharded)
 from .brandes import brandes_jax, brandes_numpy
-from .diameter import (DiameterEstimate, estimate_diameter,
-                       estimate_diameter_sharded)
+from .diameter import (DiameterEstimate, WeightedDiameterEstimate,
+                       estimate_diameter, estimate_diameter_sharded,
+                       estimate_diameter_weighted,
+                       estimate_diameter_weighted_sharded)
 from .kadabra import (KadabraParams, calibrate_deltas, check_stop,
                       compute_omega, f_term, g_term)
 from .sampler import (ForwardSample, PathSample, sample_batch, sample_pair,
                       sample_pairs, sample_path, sample_path_batched,
                       sample_path_batched_sharded,
                       sample_path_forward_batched,
-                      sample_path_forward_batched_sharded)
+                      sample_path_forward_batched_sharded,
+                      sample_path_weighted_batched,
+                      sample_path_weighted_batched_sharded)
 from .epoch import StateFrame, epoch_length, frame_schema_id, zero_frame
 from .estimators import (Estimator, MetricReport, available_metrics,
                          get_estimator)
@@ -35,20 +41,25 @@ __all__ = [
     "Graph", "CSCLayout", "bucket_layout", "build_graph",
     "build_csc_layout", "with_csc_layout", "from_edge_list", "rmat_graph",
     "hyperbolic_graph", "grid_graph", "erdos_renyi_graph",
+    "with_weights", "symmetric_dyadic_weights",
     "PartitionedGraph", "ShardedCSCLayout", "ExchangePlan",
     "partition_graph", "vertex_owner", "global_row", "shard_vertex_range",
     "default_exchange_budget", "exchange_plan", "max_active_source_chunks",
-    "BFSResult", "BidirResult", "bfs_sssp", "bfs_sssp_batched",
-    "bfs_sssp_batched_sharded", "bidirectional_bfs",
+    "BFSResult", "BidirResult", "SSSPResult", "bfs_sssp",
+    "bfs_sssp_batched", "bfs_sssp_batched_sharded", "bidirectional_bfs",
     "bidirectional_bfs_batched", "bidirectional_bfs_batched_sharded",
+    "delta_sssp_batched", "delta_sssp_batched_sharded",
     "brandes_jax", "brandes_numpy",
-    "DiameterEstimate", "estimate_diameter", "estimate_diameter_sharded",
+    "DiameterEstimate", "WeightedDiameterEstimate", "estimate_diameter",
+    "estimate_diameter_sharded", "estimate_diameter_weighted",
+    "estimate_diameter_weighted_sharded",
     "KadabraParams", "calibrate_deltas", "check_stop", "compute_omega",
     "f_term", "g_term",
     "ForwardSample", "PathSample", "sample_batch", "sample_pair",
     "sample_pairs", "sample_path", "sample_path_batched",
     "sample_path_batched_sharded", "sample_path_forward_batched",
-    "sample_path_forward_batched_sharded",
+    "sample_path_forward_batched_sharded", "sample_path_weighted_batched",
+    "sample_path_weighted_batched_sharded",
     "StateFrame", "epoch_length", "frame_schema_id", "zero_frame",
     "Estimator", "MetricReport", "available_metrics", "get_estimator",
     "AdaptiveRunResult", "EngineEpochStats", "run_adaptive", "run_fixed",

@@ -59,14 +59,17 @@ import jax.numpy as jnp
 
 from .graph import Graph
 from .partition import PartitionedGraph, axis_tuple
-from repro.kernels.frontier import (edge_bitmap_from_source_bits,
-                                    frontier_expand,
+from repro.kernels.frontier import (dag_sigma_batched_ref,
+                                    dag_sigma_sharded_ref,
+                                    edge_bitmap_from_source_bits,
+                                    frontier_expand, frontier_relax,
                                     frontier_source_block_bitmap)
 
 __all__ = [
     "BFSResult", "bfs_sssp", "bfs_sssp_batched", "bfs_sssp_batched_sharded",
     "BidirResult", "bidirectional_bfs", "bidirectional_bfs_batched",
     "bidirectional_bfs_batched_sharded",
+    "SSSPResult", "delta_sssp_batched", "delta_sssp_batched_sharded",
 ]
 
 _RESCALE_THRESHOLD = 1e30
@@ -321,6 +324,202 @@ def bidirectional_bfs(graph: Graph, s, t, *,
 
 
 # ---------------------------------------------------------------------------
+# Weighted lane: bucketed delta-stepping + shortest-path-DAG counting
+# ---------------------------------------------------------------------------
+#
+# delta-stepping (Meyer & Sanders 2003) adapted to the same vertex-major
+# batched discipline as the BFS above: where BFS advances one exact
+# level per relaxation, delta-stepping advances one *distance window*
+# [ws, ws + delta) per sample — every "fresh" vertex (tentative
+# distance improved since it last served as a relax source) inside the
+# window relaxes its out-edges through the min-plus dispatcher
+# ``repro.kernels.frontier.frontier_relax``, and the window only slides
+# forward (by whole delta multiples, to the bucket holding the closest
+# fresh vertex) once no fresh vertex remains inside it.  Bucket
+# membership is exactly the BFS frontier mask generalized to a float
+# window test, so the sharded twin ships it through the SAME
+# chunk-occupancy exchange protocol (``_exchange_masked_values``) —
+# buckets instead of levels on the wire.
+#
+# Two degeneracies pin the lane against the BFS drivers bit-for-bit
+# (tests/test_weighted.py):
+#   * delta = +inf     -> the window never constrains: every fresh
+#                         vertex relaxes every round (batched
+#                         Bellman-Ford);
+#   * integer weights, delta = 1 -> each round's relax set IS the BFS
+#                         frontier at that depth, tent is the float
+#                         image of BFS dist, and the DAG sigma below
+#                         reproduces the BFS segment sums bitwise (same
+#                         COO edge order, same masked addends).
+#
+# sigma is computed post hoc instead of on the fly: once tent has
+# converged, edge (u, v) is on the shortest-path DAG iff
+# tent[u] + w(u,v) == tent[v] (exact float equality — the drivers are
+# meant for exactly representable weights, see graph.with_weights), and
+# path counts are the fixed point of one segment-sum sweep per DAG hop
+# depth.  This costs extra sweeps but keeps the relaxation loop free of
+# the settled-order bookkeeping a fused Brandes forward phase needs,
+# and the sweep count it returns is the weighted analogue of
+# BFSResult.levels (a vertex-diameter observable for the engine).
+
+
+class SSSPResult(NamedTuple):
+    """Result of (batched) delta-stepping SSSP with path counting.
+
+    Same layout contract as :class:`BFSResult` with float distances:
+    ``dist``/``sigma`` are vertex-major (rows, B) — rows = V+1 or
+    csc.v_pad replicated, shard_rows on the sharded lane.  ``dist`` is
+    the true shortest-path distance, with the BFS sentinels carried
+    over as *negative floats* so estimator reachability tests
+    (``d >= 0``) work unchanged: -1.0 unreached, -3.0 sink/pad rows
+    (the source itself is 0.0 — nonnegative weights keep every real
+    distance >= 0).  ``levels`` is the shortest-path DAG hop depth per
+    sample (max edge count over all shortest paths — the quantity that
+    bounds a weighted path-sampler walk, and the drop-in replacement
+    for BFS ``levels`` in vertex-diameter arithmetic).  ``buckets`` is
+    the number of window advances the relaxation loop took — the
+    delta-stepping cost observable the weighted_sweep benchmark
+    compares against BFS level counts (0 when delta = +inf: the
+    Bellman-Ford degeneracy never slides the window).
+    """
+    dist: jax.Array     # (rows, B) float32; -1.0 unreached, -3.0 sink/pad
+    sigma: jax.Array    # (rows, B) float32; rescaled DAG path counts
+    levels: jax.Array   # (B,) int32; shortest-path DAG hop depth
+    buckets: jax.Array  # (B,) int32; window advances taken
+    exchange: Optional[jax.Array] = None   # (2,) [rounds, sparse] | None
+
+
+def _default_delta(weight, n_edges: int):
+    """Paper-standard bucket width heuristic: the mean positive edge
+    weight (padded weight slots are 0.0, so the padded sum is the real
+    sum).  Matches delta = Theta(1/avg-degree * avg-weight) up to the
+    constant on the graphs the benchmark sweeps."""
+    return jnp.sum(weight) / jnp.float32(max(int(n_edges), 1))
+
+
+def _finalize_weighted_dist(tent, n_nodes: int):
+    """Map internal +inf tentative distances to the public sentinel
+    encoding (-1.0 unreached, -3.0 sink/pad rows)."""
+    dist = jnp.where(jnp.isfinite(tent), tent, jnp.float32(-1.0))
+    rows = tent.shape[0]
+    grow = jnp.arange(rows)
+    return jnp.where((grow >= n_nodes)[:, None], jnp.float32(-3.0), dist)
+
+
+def delta_sssp_batched(graph: Graph, sources, *, delta=None) -> SSSPResult:
+    """B concurrent weighted SSSP (bucketed delta-stepping) with
+    shortest-path counting.
+
+    Requires ``graph.weight`` (attach via :func:`repro.core.graph.
+    with_weights`); ``delta`` is the bucket width (default: mean edge
+    weight; ``jnp.inf`` degrades to batched Bellman-Ford).  One shared
+    while_loop relaxes all B samples per round; a sample's window only
+    advances when none of its fresh vertices sit inside it, so settled
+    vertices (strictly positive weights) never relax again and the
+    round count is bounded by buckets + DAG depth per sample.
+    """
+    if graph.weight is None:
+        raise ValueError(
+            "delta_sssp_batched needs per-edge weights; attach them with "
+            "repro.core.graph.with_weights(graph, w)")
+    sources = jnp.asarray(sources, jnp.int32)
+    b = sources.shape[0]
+    rows = _state_rows(graph)
+    cols = jnp.arange(b)
+    inf = jnp.float32(jnp.inf)
+    if delta is None:
+        delta = _default_delta(graph.weight, graph.n_edges)
+    delta = jnp.asarray(delta, jnp.float32)
+    tent0 = jnp.full((rows, b), inf, jnp.float32).at[sources, cols].set(0.0)
+    fresh0 = jnp.zeros((rows, b), jnp.bool_).at[sources, cols].set(True)
+    # generous static cap: every round either empties a window or
+    # improves some tentative distance; 4V + 8 covers both phases with
+    # slack (the tests never get near it)
+    max_rounds = 4 * graph.n_nodes + 8
+
+    # state: tent, fresh, ws (per-sample window start), nbuckets, round,
+    # anyfresh (carried so cond reads no reduction over big state)
+    def cond(st):
+        _t, _f, _w, _n, it, anyfresh = st
+        return jnp.any(anyfresh) & (it < max_rounds)
+
+    def body(st):
+        tent, fresh, ws, nbuckets, it, _any = st
+        relax_src = fresh & (tent < ws[None, :] + delta)
+        cand = frontier_relax(graph.src, graph.dst, graph.weight, tent,
+                              relax_src, csc=graph.csc)
+        improved = cand < tent
+        tent = jnp.where(improved, cand, tent)
+        # a relaxed vertex stops being fresh unless this very round
+        # improved it again (possible: same-window predecessors)
+        fresh = (fresh & ~relax_src) | improved
+        in_win = fresh & (tent < ws[None, :] + delta)
+        settled = ~jnp.any(in_win, axis=0)
+        m = jnp.min(jnp.where(fresh, tent, inf), axis=0)
+        # slide to the bucket of the closest fresh vertex (skipping
+        # empty buckets); with delta = inf the floor would be nan —
+        # Bellman-Ford never slides, so pin ws to m (any finite value
+        # keeps the window all-covering)
+        ws_next = jnp.where(jnp.isinf(delta), m,
+                            delta * jnp.floor(m / delta))
+        adv = settled & jnp.isfinite(m)
+        ws = jnp.where(adv, ws_next, ws)
+        nbuckets = jnp.where(adv & ~jnp.isinf(delta), nbuckets + 1, nbuckets)
+        anyfresh = jnp.any(fresh, axis=0)
+        return tent, fresh, ws, nbuckets, it + 1, anyfresh
+
+    init = (tent0, fresh0, jnp.zeros((b,), jnp.float32),
+            jnp.zeros((b,), jnp.int32), jnp.int32(0),
+            jnp.ones((b,), jnp.bool_))
+    tent, _f, _w, nbuckets, _it, _a = jax.lax.while_loop(cond, body, init)
+    sigma, depth = _dag_sigma_fixed_point(graph, tent, sources)
+    return SSSPResult(_finalize_weighted_dist(tent, graph.n_nodes), sigma,
+                      depth, nbuckets)
+
+
+def _dag_sigma_fixed_point(graph: Graph, tent, sources):
+    """Shortest-path counts on the converged distance state: iterate
+    the DAG segment-sum sweep (``dag_sigma_batched_ref``) with source
+    rows pinned to 1 until nothing changes.  A vertex at DAG hop depth
+    h is final after sweep h (all its predecessors are), and the last
+    sweep recomputes every count from final predecessor values in COO
+    edge order — exactly the BFS lane's per-level segment sums, which
+    is the bitwise hinge of the integer-weight degeneracy tests.
+    Returns (sigma, depth) with depth (B,) = the last sweep that
+    changed each column = the DAG hop depth.  The BFS rescale guard is
+    applied per sweep (uniform column scale — ratio consumers only); a
+    column that rescales keeps "changing" and exits on the V+1 cap,
+    which is the correct conservative depth for such graphs.
+    """
+    b = tent.shape[1]
+    cols = jnp.arange(b)
+    sources = jnp.asarray(sources, jnp.int32)
+    sigma0 = jnp.zeros(tent.shape, jnp.float32).at[sources, cols].set(1.0)
+    max_sweeps = graph.n_nodes + 1
+
+    def cond(st):
+        _s, it, changed, _d = st
+        return jnp.any(changed) & (it < max_sweeps)
+
+    def body(st):
+        sigma, it, _c, depth = st
+        new = dag_sigma_batched_ref(graph.src, graph.dst, graph.weight,
+                                    tent, sigma)
+        new = new.at[sources, cols].set(1.0)
+        m = jnp.max(new, axis=0, keepdims=True)
+        scale = jnp.where(m > _RESCALE_THRESHOLD, 1.0 / m, 1.0)
+        new = new * scale
+        col_changed = jnp.any(new != sigma, axis=0)
+        depth = jnp.where(col_changed, it + 1, depth)
+        return new, it + 1, col_changed, depth
+
+    sigma, _it, _c, depth = jax.lax.while_loop(
+        cond, body, (sigma0, jnp.int32(0), jnp.ones((b,), jnp.bool_),
+                     jnp.zeros((b,), jnp.int32)))
+    return sigma, depth
+
+
+# ---------------------------------------------------------------------------
 # Sharded lane (vertex-partitioned graphs, inside shard_map)
 # ---------------------------------------------------------------------------
 #
@@ -429,13 +628,32 @@ def _gather_frontier_sharded(pg: PartitionedGraph, dist, sigma, level,
     :class:`repro.core.partition.ExchangePlan`.
     """
     chunk = pg.exchange_chunk_rows
-    cps = pg.exchange_chunks_per_shard
-    b = dist.shape[1]
-    budget = pg.exchange_budget
     fmask = (dist == level[None, :]) & active[None, :]
     fvals_local = jnp.where(fmask, sigma, 0.0)
     bits_local = frontier_source_block_bitmap(dist, level, chunk,
                                               active)     # (cps,)
+    return _exchange_masked_values(pg, fvals_local, bits_local, axis)
+
+
+def _exchange_masked_values(pg: PartitionedGraph, fvals_local, bits_local,
+                            axis):
+    """The wire half of the frontier exchange, payload-agnostic.
+
+    ``fvals_local`` is this shard's (shard_rows, B) masked value slice —
+    zero everywhere outside the rows its ``bits_local`` occupancy bits
+    (one per ``exchange_chunk_rows`` chunk) mark as occupied; that
+    invariant is what makes the sparse reconstruction bit-for-bit equal
+    to the dense gather.  Both the BFS level exchange (values = masked
+    sigma) and the delta-stepping bucket exchange (values = tent + 1 of
+    this round's relax set) ship through here, so the two drivers share
+    one protocol, one break-even guard and one accounting convention.
+    Returns ``(fvals, src_bits, took_sparse)`` exactly as documented on
+    :func:`_gather_frontier_sharded`.
+    """
+    chunk = pg.exchange_chunk_rows
+    cps = pg.exchange_chunks_per_shard
+    b = fvals_local.shape[1]
+    budget = pg.exchange_budget
     src_bits = jax.lax.all_gather(bits_local, axis, axis=0, tiled=True)
     # break-even guard at the ACTUAL batch width (ExchangePlan
     # .sparse_available, same arithmetic): a budget whose padded sparse
@@ -645,3 +863,139 @@ def bidirectional_bfs_batched_sharded(pg: PartitionedGraph, s, t, *, axis,
     split = jnp.clip(d - rad_t, 0, rad_s)
     split = jnp.where(connected, split, 0)
     return BidirResult(dist_s, dist_t, sigma_s, sigma_t, d, split, xch)
+
+
+def _relax_round_sharded(pg: PartitionedGraph, tent, relax_mask, axis):
+    """One sharded min-plus relaxation round: ship this round's bucket
+    (the ``relax_mask`` rows of ``tent``) through the frontier exchange
+    and relax the local destination rows.
+
+    The wire payload must satisfy the exchange invariant (zero outside
+    occupied chunks) and survive the zero-masking, but a relax-active
+    source can legitimately sit at tent 0.0 (the source vertex), so the
+    bucket ships as ``tent + 1`` where active / 0 elsewhere — exact in
+    float32 for every tentative distance below 2**23, far beyond the
+    quantized-weight graphs this lane targets — and is decoded back on
+    arrival.  The occupancy bits are the BFS chunk bitmap generalized
+    to the bucket mask (any sample active in the chunk), so protocol
+    choice, budget arithmetic and the ``took`` tally mean exactly what
+    they mean on the BFS lane.  Returns (cand (shard_rows, B), took).
+    """
+    chunk = pg.exchange_chunk_rows
+    fvals_local = jnp.where(relax_mask, tent + 1.0, 0.0)
+    occ = jnp.any(relax_mask, axis=1)
+    bits_local = jnp.max(occ.reshape(-1, chunk).astype(jnp.int32), axis=1)
+    fvals, _src_bits, took = _exchange_masked_values(pg, fvals_local,
+                                                     bits_local, axis)
+    active_g = fvals > 0.0
+    tent_g = jnp.where(active_g, fvals - 1.0, jnp.inf)
+    lcsc = pg.shards.local()
+    cand = frontier_relax(lcsc.src, lcsc.dst, lcsc.weight, tent_g, active_g,
+                          shard=lcsc)
+    return cand, took
+
+
+def delta_sssp_batched_sharded(pg: PartitionedGraph, sources, *, axis,
+                               delta=None) -> SSSPResult:
+    """Sharded twin of :func:`delta_sssp_batched` — call inside
+    shard_map.  ``tent``/``fresh`` stay sharded vertex-major; per round
+    only the bucket slice crosses the wire (through the same
+    bitmap-scheduled exchange as the BFS levels — buckets instead of
+    levels on the wire), and the window-advance decision is made on
+    replicated scalars (one psum for the in-window count, one pmin for
+    the closest fresh tent), so every shard slides in lockstep and the
+    loop conditions stay collective-free.  ``dist``/``sigma`` come back
+    as this device's (shard_rows, B) slices; ``levels``/``buckets``/
+    ``exchange`` replicated.  The sigma phase all-gathers the converged
+    tent once, then runs the DAG fixed point with one dense sigma
+    all_gather per sweep (DAG sweeps don't have a sparse frontier — on
+    a converged state every reached row is "active").
+    """
+    if pg.weight is None:
+        raise ValueError(
+            "delta_sssp_batched_sharded needs per-edge weights; partition "
+            "a graph built with repro.core.graph.with_weights")
+    axis = axis_tuple(axis)
+    sources = jnp.asarray(sources, jnp.int32)
+    b = sources.shape[0]
+    rows = pg.shard_rows
+    cols = jnp.arange(b)
+    inf = jnp.float32(jnp.inf)
+    if delta is None:
+        delta = _default_delta(pg.weight, pg.n_edges)
+    delta = jnp.asarray(delta, jnp.float32)
+    offset = jax.lax.axis_index(axis) * rows
+    loc = jnp.clip(sources - offset, 0, rows - 1)
+    own = (sources >= offset) & (sources < offset + rows)
+    tent0 = jnp.full((rows, b), inf, jnp.float32)
+    tent0 = tent0.at[loc, cols].set(jnp.where(own, 0.0, tent0[loc, cols]))
+    fresh0 = jnp.zeros((rows, b), jnp.bool_)
+    fresh0 = fresh0.at[loc, cols].set(own)
+    max_rounds = 4 * pg.n_nodes + 8
+
+    # state mirrors the replicated driver + the (2,) exchange tally;
+    # anyfresh/ws/nbuckets are replicated by construction (psum / pmin
+    # inputs only), so cond stays collective-free
+    def cond(st):
+        _t, _f, _w, _n, it, anyfresh, _x = st
+        return jnp.any(anyfresh) & (it < max_rounds)
+
+    def body(st):
+        tent, fresh, ws, nbuckets, it, _any, xch = st
+        relax_mask = fresh & (tent < ws[None, :] + delta)
+        cand, took = _relax_round_sharded(pg, tent, relax_mask, axis)
+        xch = xch + jnp.stack([jnp.int32(1), took])
+        improved = cand < tent
+        tent = jnp.where(improved, cand, tent)
+        fresh = (fresh & ~relax_mask) | improved
+        in_win = fresh & (tent < ws[None, :] + delta)
+        unsettled = jax.lax.psum(
+            jnp.sum(in_win.astype(jnp.int32), axis=0), axis)
+        m = jax.lax.pmin(jnp.min(jnp.where(fresh, tent, inf), axis=0), axis)
+        ws_next = jnp.where(jnp.isinf(delta), m,
+                            delta * jnp.floor(m / delta))
+        adv = (unsettled == 0) & jnp.isfinite(m)
+        ws = jnp.where(adv, ws_next, ws)
+        nbuckets = jnp.where(adv & ~jnp.isinf(delta), nbuckets + 1, nbuckets)
+        anyfresh = jax.lax.psum(
+            jnp.sum(fresh.astype(jnp.int32), axis=0), axis) > 0
+        return tent, fresh, ws, nbuckets, it + 1, anyfresh, xch
+
+    init = (tent0, fresh0, jnp.zeros((b,), jnp.float32),
+            jnp.zeros((b,), jnp.int32), jnp.int32(0),
+            jnp.ones((b,), jnp.bool_), jnp.zeros((2,), jnp.int32))
+    tent, _f, _w, nbuckets, _it, _a, xch = jax.lax.while_loop(cond, body,
+                                                              init)
+
+    # --- sigma phase: DAG fixed point over the gathered distance state
+    tent_g = jax.lax.all_gather(tent, axis, axis=0, tiled=True)
+    sigma0 = jnp.zeros((rows, b), jnp.float32)
+    sigma0 = sigma0.at[loc, cols].set(jnp.where(own, 1.0, 0.0))
+    lcsc = pg.shards.local()
+    max_sweeps = pg.n_nodes + 1
+
+    def scond(st):
+        _s, it, changed, _d = st
+        return jnp.any(changed) & (it < max_sweeps)
+
+    def sbody(st):
+        sigma, it, _c, depth = st
+        sigma_g = jax.lax.all_gather(sigma, axis, axis=0, tiled=True)
+        new = dag_sigma_sharded_ref(lcsc, tent_g, sigma_g, tent)
+        new = new.at[loc, cols].set(jnp.where(own, 1.0, new[loc, cols]))
+        m = jax.lax.pmax(jnp.max(new, axis=0), axis)
+        scale = jnp.where(m > _RESCALE_THRESHOLD, 1.0 / m, 1.0)
+        new = new * scale[None, :]
+        col_changed = jax.lax.psum(
+            jnp.sum((new != sigma).astype(jnp.int32), axis=0), axis) > 0
+        depth = jnp.where(col_changed, it + 1, depth)
+        return new, it + 1, col_changed, depth
+
+    sigma, _it, _c, depth = jax.lax.while_loop(
+        scond, sbody, (sigma0, jnp.int32(0), jnp.ones((b,), jnp.bool_),
+                       jnp.zeros((b,), jnp.int32)))
+
+    grow = offset + jnp.arange(rows)
+    dist = jnp.where(jnp.isfinite(tent), tent, jnp.float32(-1.0))
+    dist = jnp.where((grow >= pg.n_nodes)[:, None], jnp.float32(-3.0), dist)
+    return SSSPResult(dist, sigma, depth, nbuckets, xch)

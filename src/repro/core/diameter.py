@@ -33,12 +33,15 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .bfs import bfs_sssp_batched, bfs_sssp_batched_sharded
+from .bfs import (bfs_sssp_batched, bfs_sssp_batched_sharded,
+                  delta_sssp_batched, delta_sssp_batched_sharded)
 from .graph import Graph
 from .partition import PartitionedGraph, axis_tuple
 
-__all__ = ["DiameterEstimate", "estimate_diameter",
-           "estimate_diameter_sharded"]
+__all__ = ["DiameterEstimate", "WeightedDiameterEstimate",
+           "estimate_diameter", "estimate_diameter_sharded",
+           "estimate_diameter_weighted",
+           "estimate_diameter_weighted_sharded"]
 
 
 class DiameterEstimate(NamedTuple):
@@ -74,6 +77,68 @@ def estimate_diameter(graph: Graph, key=None, n_sweeps: int = 2) -> DiameterEsti
     lower = jnp.max(lowers)
     upper = jnp.maximum(jnp.min(uppers), lower)
     return DiameterEstimate(lower, upper, upper + 1)
+
+
+# ---------------------------------------------------------------------------
+# Weighted lane (delta-stepping double sweep)
+# ---------------------------------------------------------------------------
+
+class WeightedDiameterEstimate(NamedTuple):
+    """Double-sweep bounds on the WEIGHTED diameter plus a hop-count
+    vertex-diameter bound for omega.
+
+    ``lower``/``upper`` bound the weighted diameter (float distances —
+    ``upper`` is what closeness uses as its distance cap on the
+    weighted stream).  ``vertex_diameter`` bounds the number of
+    vertices on any weighted shortest path, derived from the sweeps'
+    shortest-path-DAG hop depths by the same 2*min(ecc) arithmetic as
+    the unweighted bound; on weighted graphs concatenating two shortest
+    paths need not be shortest, so this is the double-sweep *estimate*
+    the same way the unweighted one is exact only up to the scheme —
+    omega uses it as a cap, never as a guarantee.
+    """
+    lower: jax.Array            # () float32 — realized weighted distance
+    upper: jax.Array            # () float32 — weighted-diameter bound
+    vertex_diameter: jax.Array  # () int32 — hop VD bound (feeds omega)
+
+
+def _sweep_weighted(graph: Graph, seeds, delta):
+    """One batched weighted sweep: K seeds -> (weighted ecc (K,), DAG
+    hop depth (K,), farthest vertex (K,))."""
+    res = delta_sssp_batched(graph, seeds, delta=delta)
+    masked = jnp.where(res.dist >= 0, res.dist, -1.0)[: graph.n_nodes, :]
+    wecc = jnp.max(jnp.maximum(masked, 0.0), axis=0)
+    far = jnp.argmax(masked, axis=0).astype(jnp.int32)
+    return wecc, res.levels, far
+
+
+def _fold_weighted_sweeps(wecc0, h0, wecc1, h1):
+    """Shared bound arithmetic of the weighted double sweep."""
+    lowers = wecc1
+    uppers = jnp.maximum(2.0 * jnp.minimum(wecc0, wecc1), lowers)
+    lower = jnp.max(lowers)
+    upper = jnp.maximum(jnp.min(uppers), lower)
+    vds = jnp.maximum(2 * jnp.minimum(h0, h1), h1)
+    vd = jnp.maximum(jnp.min(vds), jnp.max(h1)) + 1
+    return WeightedDiameterEstimate(lower, upper, vd)
+
+
+def estimate_diameter_weighted(graph: Graph, key=None, n_sweeps: int = 2, *,
+                               delta=None) -> WeightedDiameterEstimate:
+    """Weighted double-sweep bounds on a graph with per-edge weights.
+
+    Identical chain structure (and seed draw — same key, same seeds) as
+    :func:`estimate_diameter`, with each sweep a batched delta-stepping
+    SSSP instead of a BFS: the farthest-vertex hop runs on weighted
+    distances, the distance bounds on weighted eccentricities, and the
+    vertex-diameter bound on the sweeps' DAG hop depths.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    seeds = jax.random.randint(key, (max(1, n_sweeps - 1),), 0, graph.n_nodes)
+    wecc0, h0, far0 = _sweep_weighted(graph, seeds, delta)
+    wecc1, h1, _far1 = _sweep_weighted(graph, far0, delta)
+    return _fold_weighted_sweeps(wecc0, h0, wecc1, h1)
 
 
 # ---------------------------------------------------------------------------
@@ -136,3 +201,40 @@ def estimate_diameter_sharded(pg: PartitionedGraph, key=None,
     upper = jnp.maximum(jnp.min(uppers), lower)
     est = DiameterEstimate(lower, upper, upper + 1)
     return (est, dist1) if return_dist else est
+
+
+def _sweep_weighted_sharded(pg: PartitionedGraph, seeds, delta, axis):
+    """Sharded weighted sweep: the same two-level argmax (with the same
+    lower-global-id tie-break) as :func:`_sweep_batched_sharded`, on the
+    delta-stepping distance state."""
+    res = delta_sssp_batched_sharded(pg, seeds, axis=axis, delta=delta)
+    masked = jnp.where(res.dist >= 0, res.dist, -1.0)  # pad rows stay -1
+    loc_val = jnp.max(masked, axis=0)
+    loc_far = jnp.argmax(masked, axis=0)
+    offset = jax.lax.axis_index(axis) * pg.shard_rows
+    vals = jax.lax.all_gather(loc_val, axis, axis=0)
+    fars = jax.lax.all_gather(offset + loc_far, axis, axis=0)
+    best = jnp.argmax(vals, axis=0)
+    far = fars[best, jnp.arange(seeds.shape[0])].astype(jnp.int32)
+    wecc = jax.lax.pmax(jnp.max(jnp.maximum(masked, 0.0), axis=0), axis)
+    return wecc, res.levels, far
+
+
+def estimate_diameter_weighted_sharded(pg: PartitionedGraph, key=None,
+                                       n_sweeps: int = 2, *, axis=None,
+                                       delta=None
+                                       ) -> WeightedDiameterEstimate:
+    """Sharded twin of :func:`estimate_diameter_weighted` — call inside
+    shard_map.  Seed draw and bound arithmetic match the replicated
+    weighted estimator key-for-key; each sweep is a cooperative
+    delta-stepping SSSP (bucket exchange per round)."""
+    if axis is None:
+        raise ValueError("estimate_diameter_weighted_sharded requires the "
+                         "shard axis name(s) (axis=...)")
+    axis = axis_tuple(axis)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    seeds = jax.random.randint(key, (max(1, n_sweeps - 1),), 0, pg.n_nodes)
+    wecc0, h0, far0 = _sweep_weighted_sharded(pg, seeds, delta, axis)
+    wecc1, h1, _far1 = _sweep_weighted_sharded(pg, far0, delta, axis)
+    return _fold_weighted_sweeps(wecc0, h0, wecc1, h1)

@@ -55,7 +55,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from . import distributed as dist
-from .diameter import estimate_diameter, estimate_diameter_sharded
+from .diameter import (estimate_diameter, estimate_diameter_sharded,
+                       estimate_diameter_weighted,
+                       estimate_diameter_weighted_sharded)
 from .epoch import epoch_length, frame_schema_id
 from .estimators import get_estimator
 from .estimators.base import DrawBatch, Estimator, MetricReport, RunContext
@@ -63,7 +65,9 @@ from .graph import Graph
 from .partition import PartitionedGraph, exchange_plan
 from .sampler import (sample_path_batched, sample_path_batched_sharded,
                       sample_path_forward_batched,
-                      sample_path_forward_batched_sharded)
+                      sample_path_forward_batched_sharded,
+                      sample_path_weighted_batched,
+                      sample_path_weighted_batched_sharded)
 
 __all__ = ["DEFAULT_SAMPLE_BATCH_SIZE", "AdaptiveConfig",
            "AdaptiveRunResult", "EngineEpochStats", "MetricReport",
@@ -176,13 +180,17 @@ def resolve_estimators(metrics) -> tuple:
 def resolve_stream(estimators, stream: Optional[str] = None) -> str:
     """Pick the draw stream: 'bidir' (KADABRA's bidirectional search,
     the run_kadabra bit-compatibility stream) unless some estimator
-    needs the forward full-SSSP stream's distance columns."""
+    needs the forward full-SSSP stream's distance columns.  'weighted'
+    (delta-stepping SSSP, graphs with per-edge weights) is opt-in only
+    — it satisfies forward-stream needs (full float distance columns)
+    but is never auto-selected."""
     need_fwd = [e.name for e in estimators if e.needs_forward]
     if stream is None:
         return "forward" if need_fwd else "bidir"
-    if stream not in ("bidir", "forward"):
+    if stream not in ("bidir", "forward", "weighted"):
         raise ValueError(
-            f"unknown stream {stream!r} (expected 'bidir' or 'forward')")
+            f"unknown stream {stream!r} (expected 'bidir', 'forward' or "
+            "'weighted')")
     if stream == "bidir" and need_fwd:
         raise ValueError(
             f"estimators {need_fwd} need the forward (full-SSSP) stream; "
@@ -254,12 +262,16 @@ def draw_fold(graph, key, n_samples: int, *, estimators, ctx: RunContext,
     if stream == "forward":
         draw = (partial(sample_path_forward_batched_sharded, axis=axis)
                 if axis is not None else sample_path_forward_batched)
+    elif stream == "weighted":
+        draw = (partial(sample_path_weighted_batched_sharded, axis=axis)
+                if axis is not None else sample_path_weighted_batched)
     elif stream == "bidir":
         draw = (partial(sample_path_batched_sharded, axis=axis)
                 if axis is not None else sample_path_batched)
     else:
         raise ValueError(
-            f"unknown stream {stream!r} (expected 'bidir' or 'forward')")
+            f"unknown stream {stream!r} (expected 'bidir', 'forward' or "
+            "'weighted')")
 
     def fold_all(ps, keep):
         batch = DrawBatch(ps.contrib, ps.valid, ps.length,
@@ -353,7 +365,8 @@ def _agg_channels(agg_fn, x):
 
 def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
                          n0: int, batch_size: int = 1, estimators=None,
-                         stream: str = "bidir", vertex_diameter: int = 0):
+                         stream: str = "bidir", vertex_diameter: int = 0,
+                         distance_cap: float = 0.0):
     """One jit-able SPMD epoch (paper Alg. 2): aggregate the previous
     frame (collectives) while sampling the next one — ceil(n0 /
     batch_size) batched BFS rounds per device — then evaluate every
@@ -366,7 +379,9 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
     masked surplus tail is carried into its next epoch's frame instead
     of dropped.  ``vertex_diameter`` feeds RunContext for estimators
     whose accumulate reads the diameter cap (closeness); betweenness /
-    harmonic ignore it.
+    harmonic ignore it.  ``distance_cap`` (weighted stream only) is the
+    phase-1 weighted-diameter bound those estimators prefer over the
+    hop-count vertex diameter.
 
     Signature of the returned fn:
       (graph, params: tuple (one per estimator),
@@ -379,7 +394,7 @@ def make_epoch_step_spmd(mesh, aggregation: str, n_nodes: int, v_pad: int,
     estimators = _default_estimators(estimators)
     offsets = _channel_offsets(estimators)
     C = total_channels(estimators)
-    ctx = RunContext(int(n_nodes), int(vertex_diameter))
+    ctx = RunContext(int(n_nodes), int(vertex_diameter), float(distance_cap))
     all_axes = tuple(mesh.axis_names)
     agg_fn = make_agg_fn(mesh, aggregation)
     rep = P()
@@ -435,6 +450,7 @@ def make_epoch_step_sharded(mesh, n_nodes: int, v_pad: int, n0: int,
                             batch_size: int = 1, estimators=None,
                             stream: str = "bidir",
                             vertex_diameter: int = 0,
+                            distance_cap: float = 0.0,
                             with_exchange: bool = False):
     """One jit-able COOPERATIVE epoch on a :class:`PartitionedGraph`.
 
@@ -470,7 +486,7 @@ def make_epoch_step_sharded(mesh, n_nodes: int, v_pad: int, n0: int,
     estimators = _default_estimators(estimators)
     offsets = _channel_offsets(estimators)
     C = total_channels(estimators)
-    ctx = RunContext(int(n_nodes), int(vertex_diameter))
+    ctx = RunContext(int(n_nodes), int(vertex_diameter), float(distance_cap))
     all_axes = tuple(mesh.axis_names)
     rep = P()
 
@@ -622,9 +638,19 @@ def _single_lane(graph: Graph, cfg: AdaptiveConfig, estimators,
     v_pad = _pad_len(graph.n_nodes, 1)
     v1 = graph.n_nodes + 1
     t0 = time.perf_counter()
-    diam = jax.jit(partial(estimate_diameter,
-                           n_sweeps=cfg.diameter_sweeps))(graph)
-    ns.vd = int(diam.vertex_diameter)
+    if stream == "weighted":
+        # weighted phase 1: hop-based VD bound for omega PLUS the
+        # weighted-diameter bound distance-normalizing estimators use
+        # as their cap (RunContext.distance_cap)
+        wdiam = jax.jit(partial(estimate_diameter_weighted,
+                                n_sweeps=cfg.diameter_sweeps))(graph)
+        ns.vd = int(wdiam.vertex_diameter)
+        ns.dist_cap = float(wdiam.upper)
+    else:
+        diam = jax.jit(partial(estimate_diameter,
+                               n_sweeps=cfg.diameter_sweeps))(graph)
+        ns.vd = int(diam.vertex_diameter)
+        ns.dist_cap = 0.0
     ns.t_diam = time.perf_counter() - t0
     ns.graph, ns.v_pad, ns.n_samplers, ns.shardings = graph, v_pad, 1, None
 
@@ -689,9 +715,16 @@ def _spmd_lane(graph: Graph, mesh: Mesh, cfg: AdaptiveConfig, estimators,
     gspec = jax.tree.map(lambda _: rep, graph)
 
     t0 = time.perf_counter()
-    diam = jax.jit(partial(estimate_diameter,
-                           n_sweeps=cfg.diameter_sweeps))(graph)
-    ns.vd = int(diam.vertex_diameter)
+    if stream == "weighted":
+        wdiam = jax.jit(partial(estimate_diameter_weighted,
+                                n_sweeps=cfg.diameter_sweeps))(graph)
+        ns.vd = int(wdiam.vertex_diameter)
+        ns.dist_cap = float(wdiam.upper)
+    else:
+        diam = jax.jit(partial(estimate_diameter,
+                               n_sweeps=cfg.diameter_sweeps))(graph)
+        ns.vd = int(diam.vertex_diameter)
+        ns.dist_cap = 0.0
     ns.t_diam = time.perf_counter() - t0
     ns.graph, ns.v_pad, ns.n_samplers = graph, v_pad, n_dev
     # shardings follow the 10-leaf checkpoint tuple: frames sharded over
@@ -719,7 +752,8 @@ def _spmd_lane(graph: Graph, mesh: Mesh, cfg: AdaptiveConfig, estimators,
         epoch_jit = jax.jit(make_epoch_step_spmd(
             mesh, cfg.aggregation, graph.n_nodes, v_pad, n0,
             batch_size=bsz, estimators=estimators, stream=stream,
-            vertex_diameter=ctx.vertex_diameter))
+            vertex_diameter=ctx.vertex_diameter,
+            distance_cap=ctx.distance_cap))
 
         def run(state, ke):
             dev_keys = jax.device_put(jax.random.split(ke, n_dev),
@@ -777,7 +811,21 @@ def _sharded_lane(pg: PartitionedGraph, mesh: Mesh, cfg: AdaptiveConfig,
     v1 = pg.n_nodes + 1
 
     t0 = time.perf_counter()
+    # the BFS double sweep always runs first: with exchange_budget="auto"
+    # it doubles as the budget's occupancy sample, and the weighted lane
+    # compiles against the resolved static budget like every other phase
     ns.vd, pg = _sharded_diameter(pg, mesh, cfg.diameter_sweeps)
+    ns.dist_cap = 0.0
+    if stream == "weighted":
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(pg.partition_spec(all_axes),),
+                 out_specs=(rep, rep), check_vma=False)
+        def wdiam_step(g):
+            est = estimate_diameter_weighted_sharded(
+                g, n_sweeps=cfg.diameter_sweeps, axis=all_axes)
+            return est.vertex_diameter, est.upper
+        vd_w, cap_w = jax.jit(wdiam_step)(pg)
+        ns.vd, ns.dist_cap = int(vd_w), float(cap_w)
     ns.t_diam = time.perf_counter() - t0
     gspec = pg.partition_spec(all_axes)
     # the cooperative mesh is ONE fast sampler: paper's shared-memory
@@ -808,7 +856,8 @@ def _sharded_lane(pg: PartitionedGraph, mesh: Mesh, cfg: AdaptiveConfig,
         epoch_jit = jax.jit(make_epoch_step_sharded(
             mesh, pg.n_nodes, v_pad, n0, batch_size=bsz,
             estimators=estimators, stream=stream,
-            vertex_diameter=ctx.vertex_diameter, with_exchange=True))
+            vertex_diameter=ctx.vertex_diameter,
+            distance_cap=ctx.distance_cap, with_exchange=True))
         return lambda state, ke: epoch_jit(pg, params, *state, ke)
 
     def make_flush(ctx):
@@ -936,7 +985,7 @@ def run_adaptive(graph, metrics=("betweenness",), *,
             lane = _spmd_lane(graph, mesh, cfg, estimators, stream, C,
                               offsets)
 
-    ctx = RunContext(int(lane.graph.n_nodes), lane.vd)
+    ctx = RunContext(int(lane.graph.n_nodes), lane.vd, lane.dist_cap)
     bsz = resolve_sample_batch_size(cfg.sample_batch_size, ctx.n_nodes,
                                     ctx.vertex_diameter)
     # the static per-level price list for the sharded lane's exchange
@@ -1119,7 +1168,7 @@ def run_fixed(graph, n_samples: int, *, metrics=("betweenness",),
     # the diameter only feeds accumulate-side normalization (closeness's
     # cap); pure path-count / inverse-distance runs skip phase 1 — the
     # PR 1-6 fixed baseline's exact behavior (and bit-stream)
-    needs_vd = (stream == "forward"
+    needs_vd = (stream in ("forward", "weighted")
                 and any(e.needs_diameter for e in estimators))
 
     if isinstance(graph, PartitionedGraph):
@@ -1129,9 +1178,20 @@ def run_fixed(graph, n_samples: int, *, metrics=("betweenness",),
                 "(mesh=...); use a plain Graph for the single-device lane")
         all_axes = tuple(mesh.axis_names)
         vd, graph = _sharded_diameter(graph, mesh, 2)
-        ctx = RunContext(int(graph.n_nodes), vd if needs_vd else 0)
-        gspec = graph.partition_spec(all_axes)
         rep = P()
+        dcap = 0.0
+        if stream == "weighted" and needs_vd:
+            @partial(shard_map, mesh=mesh,
+                     in_specs=(graph.partition_spec(all_axes),),
+                     out_specs=(rep, rep), check_vma=False)
+            def wdiam_step(g):
+                est = estimate_diameter_weighted_sharded(g, n_sweeps=2,
+                                                         axis=all_axes)
+                return est.vertex_diameter, est.upper
+            vd_w, cap_w = jax.jit(wdiam_step)(graph)
+            vd, dcap = int(vd_w), float(cap_w)
+        ctx = RunContext(int(graph.n_nodes), vd if needs_vd else 0, dcap)
+        gspec = graph.partition_spec(all_axes)
 
         @partial(shard_map, mesh=mesh, in_specs=(gspec, rep),
                  out_specs=(rep, rep), check_vma=False)
@@ -1142,9 +1202,17 @@ def run_fixed(graph, n_samples: int, *, metrics=("betweenness",),
 
         counts, tau = jax.jit(fixed_step)(graph, key)
     else:
-        vd = (int(jax.jit(partial(estimate_diameter, n_sweeps=2))(
-            graph).vertex_diameter) if needs_vd else 0)
-        ctx = RunContext(int(graph.n_nodes), vd)
+        dcap = 0.0
+        if needs_vd and stream == "weighted":
+            wdiam = jax.jit(partial(estimate_diameter_weighted,
+                                    n_sweeps=2))(graph)
+            vd, dcap = int(wdiam.vertex_diameter), float(wdiam.upper)
+        elif needs_vd:
+            vd = int(jax.jit(partial(estimate_diameter, n_sweeps=2))(
+                graph).vertex_diameter)
+        else:
+            vd = 0
+        ctx = RunContext(int(graph.n_nodes), vd, dcap)
         n_dev = 1 if mesh is None else int(np.prod(mesh.devices.shape))
         if n_dev == 1:
             counts, tau = jax.jit(partial(

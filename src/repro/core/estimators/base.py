@@ -47,10 +47,16 @@ __all__ = ["DrawBatch", "FrameSchema", "RunContext", "Estimator",
 
 
 class RunContext(NamedTuple):
-    """Static per-run facts every hook may close over (python ints, so
-    they are trace-time constants inside the jitted epoch step)."""
+    """Static per-run facts every hook may close over (python ints /
+    floats, so they are trace-time constants inside the jitted epoch
+    step).  ``distance_cap`` is only nonzero on the WEIGHTED stream: the
+    phase-1 weighted-diameter upper bound, which distance-normalizing
+    estimators (closeness) prefer over the hop-count
+    ``vertex_diameter`` — float distances are not bounded by hop counts
+    once weights exceed 1."""
     n_nodes: int
     vertex_diameter: int
+    distance_cap: float = 0.0
 
 
 class FrameSchema(NamedTuple):
@@ -80,11 +86,17 @@ class DrawBatch(NamedTuple):
         paths, so ``contrib`` is distributed exactly as in the bidir
         stream).  ``dist`` holds the exhausted per-source distance
         columns that closeness/harmonic consume.
+
+    A third, opt-in stream ``weighted`` (``stream="weighted"`` on a
+    graph carrying per-edge weights) has the forward stream's shape
+    with FLOAT32 ``dist`` columns (true weighted distances; the
+    -1.0/-3.0 sentinels keep every ``d >= 0`` reachability test valid
+    on both dtypes) and ``length`` counting the drawn path's edges.
     """
     contrib: jax.Array          # (B, V+1) float32 — internal-vertex marks
     valid: jax.Array            # (B,) bool — s,t connected
-    length: jax.Array           # (B,) int32 — d(s,t), -1 if invalid
-    dist: Optional[jax.Array]   # (rows>=V+1, B) int32 dist from s, or None
+    length: jax.Array           # (B,) int32 — path edge count, -1 invalid
+    dist: Optional[jax.Array]   # (rows>=V+1, B) i32|f32 dist from s, or None
     sources: Optional[jax.Array]  # (B,) int32 — the drawn s, or None
 
 

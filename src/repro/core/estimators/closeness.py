@@ -108,6 +108,13 @@ class ClosenessEstimator(DistanceEstimator):
     needs_diameter = True   # the [0,1] normalization cap
 
     def _cap(self, ctx: RunContext):
+        # weighted stream: the phase-1 weighted-diameter bound (float
+        # distances are not bounded by the hop-count vertex diameter
+        # once weights exceed 1); unweighted runs leave distance_cap 0
+        # and keep the PR-8 hop cap bit-for-bit
+        dcap = float(getattr(ctx, "distance_cap", 0.0))
+        if dcap > 0.0:
+            return jnp.float32(dcap)
         return jnp.float32(max(int(ctx.vertex_diameter), 1))
 
     def _obs(self, batch: DrawBatch, ctx: RunContext):

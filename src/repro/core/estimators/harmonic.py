@@ -36,6 +36,12 @@ class HarmonicEstimator(DistanceEstimator):
 
     def _obs(self, batch: DrawBatch, ctx: RunContext):
         d = self._dist(batch, ctx)
+        # the maximum(d, 1) floor is a no-op on hop distances (d >= 1
+        # when reached) and, on the weighted stream, clamps d < 1 so the
+        # observation stays in [0, 1] — the Bernstein machinery's only
+        # requirement.  Weighted harmonic scores are therefore computed
+        # with 1/max(d, 1), the truncated-harmonic convention; rescale
+        # weights so shortest distances are >= 1 to avoid the clamp.
         x = jnp.where(d > 0.0, 1.0 / jnp.maximum(d, 1.0), 0.0)
         x = x.at[ctx.n_nodes, :].set(0.0)             # padding sink row
         return x[None, :, :]

@@ -55,6 +55,8 @@ __all__ = [
     "build_graph",
     "build_csc_layout",
     "with_csc_layout",
+    "with_weights",
+    "symmetric_dyadic_weights",
     "from_edge_list",
     "rmat_graph",
     "hyperbolic_graph",
@@ -87,21 +89,27 @@ class Graph:
     # csc.v_pad rows and run the frontier dispatcher's CSC lane
     # end-to-end with zero per-call pads/slices of dist/sigma.
     csc: "CSCLayout | None" = None
+    # Optional per-directed-edge weights in CSR/COO order (strictly
+    # positive float32, padded slots 0.0).  ``indices`` and ``src``/``dst``
+    # share one edge order by construction, so this single column serves
+    # both the COO min-plus relaxation and the CSR predecessor walk.
+    # Attach with :func:`with_weights`; ``None`` means unweighted.
+    weight: "jax.Array | None" = None
 
     # -- pytree plumbing (static ints live in aux data; the optional CSC
     # layout is a child pytree — None flattens to nothing) ----------------
     def tree_flatten(self):
         leaves = (self.indptr, self.indices, self.src, self.dst, self.degree,
-                  self.csc)
+                  self.csc, self.weight)
         aux = (self.n_nodes, self.n_edges, self.max_degree)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        indptr, indices, src, dst, degree, csc = leaves
+        indptr, indices, src, dst, degree, csc, weight = leaves
         n_nodes, n_edges, max_degree = aux
         return cls(indptr, indices, src, dst, degree, n_nodes, n_edges,
-                   max_degree, csc)
+                   max_degree, csc, weight)
 
     @property
     def n_edges_undirected(self) -> int:
@@ -138,12 +146,26 @@ def from_edge_list(edges: np.ndarray, n_nodes: int | None = None, *,
 
 
 def build_graph(src: np.ndarray, dst: np.ndarray, n_nodes: int, *,
-                pad_to: int = 128) -> Graph:
-    """Build from a *directed* (already symmetrized) edge list."""
+                pad_to: int = 128,
+                weight: np.ndarray | None = None) -> Graph:
+    """Build from a *directed* (already symmetrized) edge list.
+
+    ``weight`` (optional, one entry per directed edge, strictly positive)
+    rides the same stable-by-source sort as the edge list, so the stored
+    column stays aligned with both ``indices`` and ``src``/``dst``.
+    """
     order = np.argsort(src, kind="stable")
     src = np.asarray(src)[order].astype(np.int32)
     dst = np.asarray(dst)[order].astype(np.int32)
     n_edges = int(src.shape[0])
+    if weight is not None:
+        weight = np.asarray(weight, np.float32).reshape(-1)[order]
+        if weight.shape[0] != n_edges:
+            raise ValueError(
+                f"weight must have one entry per directed edge: "
+                f"got {weight.shape[0]}, expected {n_edges}")
+        if n_edges and not np.all(weight > 0.0):
+            raise ValueError("edge weights must be strictly positive")
     degree = np.bincount(src, minlength=n_nodes).astype(np.int32)
     indptr = np.zeros(n_nodes + 1, dtype=np.int32)
     np.cumsum(degree, out=indptr[1:])
@@ -155,6 +177,10 @@ def build_graph(src: np.ndarray, dst: np.ndarray, n_nodes: int, *,
     src_p = np.concatenate([src, np.full(pad, n_nodes, np.int32)])
     dst_p = np.concatenate([dst, np.full(pad, n_nodes, np.int32)])
     idx_p = np.concatenate([dst, np.full(pad, n_nodes, np.int32)])
+    w_p = None
+    if weight is not None:
+        w_p = jnp.asarray(np.concatenate([weight,
+                                          np.zeros(pad, np.float32)]))
     max_degree = int(degree.max()) if n_nodes else 0
     return Graph(
         indptr=jnp.asarray(indptr),
@@ -165,6 +191,7 @@ def build_graph(src: np.ndarray, dst: np.ndarray, n_nodes: int, *,
         n_nodes=int(n_nodes),
         n_edges=n_edges,
         max_degree=max_degree,
+        weight=w_p,
     )
 
 
@@ -175,7 +202,7 @@ def build_graph(src: np.ndarray, dst: np.ndarray, n_nodes: int, *,
 def bucket_layout(src: np.ndarray, dst: np.ndarray, nb: np.ndarray,
                   n_buckets: int, block_e: int, *, sink_src: int,
                   sink_dst: int, src_block: np.ndarray,
-                  sink_src_block: int):
+                  sink_src_block: int, payload: np.ndarray | None = None):
     """Bucket an edge list by ``(nb, src_block)`` pairs, block-padded.
 
     The shared numpy core of :func:`build_csc_layout` (one destination
@@ -191,11 +218,14 @@ def bucket_layout(src: np.ndarray, dst: np.ndarray, nb: np.ndarray,
     edges to a multiple of ``block_e``.  Destination buckets with no
     edges still get one all-pad block (pair ``(bucket,
     sink_src_block)``) so every contrib tile is initialized.  Returns
-    ``(out_src, out_dst, block_nb, block_sb, block_first)`` — the
-    flattened (bucket, source block, edge block) arrays of the
+    ``(out_src, out_dst, block_nb, block_sb, block_first, out_payload)``
+    — the flattened (bucket, source block, edge block) arrays of the
     two-level grid; ``block_first`` flags the first edge block of each
     *destination* bucket (contrib-tile zeroing is per bucket, not per
-    pair).
+    pair).  ``payload`` (optional per-edge float column, e.g. weights)
+    rides the same permutation into the bucketed slots; pad slots hold
+    0.0, which is inert because padded sink edges never carry an active
+    source.  ``out_payload`` is ``None`` when no payload is given.
     """
     nb = np.asarray(nb, dtype=np.int64)
     sb = np.asarray(src_block, dtype=np.int64)
@@ -231,6 +261,10 @@ def bucket_layout(src: np.ndarray, dst: np.ndarray, nb: np.ndarray,
            - first_edge[p])
     out_src[pos] = src[order]
     out_dst[pos] = dst[order]
+    out_payload = None
+    if payload is not None:
+        out_payload = np.zeros(total, np.float32)
+        out_payload[pos] = np.asarray(payload, np.float32)[order]
     eblocks = (slots // block_e).astype(np.int64)
     block_nb = np.repeat((upairs // mult).astype(np.int32), eblocks)
     block_sb = np.repeat((upairs % mult).astype(np.int32), eblocks)
@@ -239,7 +273,7 @@ def bucket_layout(src: np.ndarray, dst: np.ndarray, nb: np.ndarray,
         is_new_bucket[1:] = (upairs[1:] // mult) != (upairs[:-1] // mult)
     block_first = np.zeros(block_nb.shape[0], np.int32)
     block_first[slot_starts[:-1][is_new_bucket] // block_e] = 1
-    return out_src, out_dst, block_nb, block_sb, block_first
+    return out_src, out_dst, block_nb, block_sb, block_first, out_payload
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -287,17 +321,22 @@ class CSCLayout:
     n_edge_blocks: int    # static
     n_nodes: int          # static: logical vertex count (sink row = this)
     n_src_blocks: int     # static: source-tile count of the gathered rows
+    weight: "jax.Array | None" = None
+                          # (n_edge_blocks * block_e,) float32 — per-edge
+                          #   weights in bucketed order (pad slots 0.0);
+                          #   None on unweighted graphs
 
     def tree_flatten(self):
         leaves = (self.src, self.dst, self.block_nb, self.block_sb,
-                  self.block_first)
+                  self.block_first, self.weight)
         aux = (self.block_v, self.block_e, self.n_node_blocks,
                self.n_edge_blocks, self.n_nodes, self.n_src_blocks)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves, *aux)
+        *arrs, weight = leaves
+        return cls(*arrs, *aux, weight)
 
     @property
     def v_pad(self) -> int:
@@ -336,11 +375,14 @@ def build_csc_layout(graph: Graph, *, block_v: int | None = None,
     src = np.asarray(graph.src[: graph.n_edges], dtype=np.int64)
     dst = np.asarray(graph.dst[: graph.n_edges], dtype=np.int64)
     nb = dst // block_v
-    out_src, out_dst, block_nb, block_sb, block_first = bucket_layout(
+    payload = (None if graph.weight is None
+               else np.asarray(graph.weight[: graph.n_edges], np.float32))
+    out_src, out_dst, block_nb, block_sb, block_first, out_w = bucket_layout(
         src, dst, nb, n_nb, block_e,
         sink_src=graph.n_nodes, sink_dst=graph.n_nodes,
         src_block=src // block_v,
-        sink_src_block=graph.n_nodes // block_v)
+        sink_src_block=graph.n_nodes // block_v,
+        payload=payload)
     return CSCLayout(
         src=jnp.asarray(out_src),
         dst=jnp.asarray(out_dst),
@@ -353,6 +395,7 @@ def build_csc_layout(graph: Graph, *, block_v: int | None = None,
         n_edge_blocks=int(block_nb.shape[0]),
         n_nodes=int(graph.n_nodes),
         n_src_blocks=int(n_nb),
+        weight=None if out_w is None else jnp.asarray(out_w),
     )
 
 
@@ -371,6 +414,65 @@ def with_csc_layout(graph: Graph, *, block_v: int | None = None,
     csc = build_csc_layout(graph, block_v=block_v, block_e=block_e,
                            batch=batch)
     return dataclasses.replace(graph, csc=csc)
+
+
+def with_weights(graph: Graph, weights: np.ndarray) -> Graph:
+    """Return ``graph`` with per-directed-edge ``weights`` attached.
+
+    ``weights`` has one strictly positive entry per *directed* edge, in
+    the graph's stored edge order (``graph.src[:n_edges]`` /
+    ``graph.dst[:n_edges]``; use :func:`symmetric_dyadic_weights` to get
+    a symmetric assignment in that order).  The column is padded with
+    zeros to ``e_pad`` and, when the graph carries a persisted CSC
+    layout, re-bucketed through :func:`bucket_layout` so the node-blocked
+    lane sees the same weights in its own edge order.
+
+    Exactness note: the weighted lane relaxes in float32.  Weights whose
+    values and path sums are exactly representable (e.g. dyadic rationals
+    — multiples of 1/2^k with bounded sums) make the min-plus recursion
+    exact, which is what the Dijkstra-oracle bit-parity tests rely on.
+    """
+    w = np.asarray(weights, np.float32).reshape(-1)
+    if w.shape[0] != graph.n_edges:
+        raise ValueError(
+            f"weights must have one entry per directed edge: "
+            f"got {w.shape[0]}, expected {graph.n_edges}")
+    if graph.n_edges and not np.all(w > 0.0):
+        raise ValueError("edge weights must be strictly positive")
+    pad = graph.e_pad - graph.n_edges
+    w_p = jnp.asarray(np.concatenate([w, np.zeros(pad, np.float32)]))
+    out = dataclasses.replace(graph, weight=w_p)
+    if graph.csc is not None:
+        # rebuild the persisted layout so csc.weight is populated
+        out = with_csc_layout(
+            dataclasses.replace(out, csc=None),
+            block_v=graph.csc.block_v, block_e=graph.csc.block_e)
+    return out
+
+
+def symmetric_dyadic_weights(graph: Graph, *, seed: int = 0,
+                             denom: int = 16, lo: int = 1,
+                             hi: int = 32) -> np.ndarray:
+    """Random symmetric edge weights, exactly representable in float32.
+
+    Each undirected edge {u, v} draws one weight in ``[lo/denom,
+    hi/denom]`` that is a multiple of ``1/denom`` (dyadic for power-of-two
+    ``denom``), and both directed copies share it.  With the defaults the
+    weights are multiples of 1/16 in [1/16, 2], so shortest-path sums on
+    test-sized graphs stay far below 2^24/denom and float32 min-plus is
+    exact — the scipy float64 Dijkstra oracle then matches bit for bit
+    after a float32 cast.  Returns a (n_edges,) float32 array in the
+    graph's stored edge order (feed straight to :func:`with_weights`).
+    """
+    src = np.asarray(graph.src[: graph.n_edges], np.int64)
+    dst = np.asarray(graph.dst[: graph.n_edges], np.int64)
+    u = np.minimum(src, dst)
+    v = np.maximum(src, dst)
+    pair = u * np.int64(graph.n_nodes) + v
+    uniq, inv = np.unique(pair, return_inverse=True)
+    rng = np.random.default_rng(seed)
+    per_pair = rng.integers(lo, hi + 1, size=uniq.shape[0])
+    return (per_pair.astype(np.float32) / np.float32(denom))[inv]
 
 
 # ---------------------------------------------------------------------------

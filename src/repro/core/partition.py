@@ -148,17 +148,22 @@ class ShardedCSCLayout:
     n_edge_blocks: int      # static: edge blocks per shard (uniform, padded)
     n_shards: int           # static
     n_nodes: int            # static: logical GLOBAL vertex count
+    weight: "jax.Array | None" = None
+                            # (S, n_edge_blocks * block_e) float32 — per-
+                            #   edge weights in each shard's bucketed
+                            #   order (pad slots 0.0); None = unweighted
 
     def tree_flatten(self):
         leaves = (self.src, self.dst, self.block_nb, self.block_sb,
-                  self.block_first)
+                  self.block_first, self.weight)
         aux = (self.block_v, self.block_e, self.blocks_per_shard,
                self.n_edge_blocks, self.n_shards, self.n_nodes)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(*leaves, *aux)
+        *arrs, weight = leaves
+        return cls(*arrs, *aux, weight)
 
     @property
     def shard_rows(self) -> int:
@@ -192,7 +197,8 @@ class ShardedCSCLayout:
             block_v=self.block_v, block_e=self.block_e,
             n_node_blocks=self.blocks_per_shard,
             n_edge_blocks=self.n_edge_blocks, n_nodes=self.n_nodes,
-            n_src_blocks=self.n_shards * self.blocks_per_shard)
+            n_src_blocks=self.n_shards * self.blocks_per_shard,
+            weight=None if self.weight is None else self.weight[s])
 
     def local(self) -> CSCLayout:
         """THIS device's shard, inside shard_map (leading axis sliced to
@@ -233,17 +239,23 @@ class PartitionedGraph:
     # it in before calibration.  exchange_budget above holds the default
     # policy until then, so the graph is runnable as-is.
     exchange_budget_auto: bool = False
+    # Replicated per-directed-edge weights in CSR order (same column the
+    # source Graph carried) — the weighted backward walk reads arbitrary
+    # neighbor rows exactly like indices/degree, so the weights stay
+    # replicated alongside them.  None = unweighted.
+    weight: "jax.Array | None" = None
 
     def tree_flatten(self):
-        leaves = (self.indptr, self.indices, self.degree, self.shards)
+        leaves = (self.indptr, self.indices, self.degree, self.shards,
+                  self.weight)
         aux = (self.n_nodes, self.n_edges, self.max_degree,
                self.exchange_budget, self.exchange_budget_auto)
         return leaves, aux
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        indptr, indices, degree, shards = leaves
-        return cls(indptr, indices, degree, shards, *aux)
+        indptr, indices, degree, shards, weight = leaves
+        return cls(indptr, indices, degree, shards, *aux, weight)
 
     @property
     def n_shards(self) -> int:
@@ -540,6 +552,9 @@ def partition_graph(graph: Graph, n_shards: int, *,
     # [bounds[s], bounds[s+1]), still in CSR order within
     order = np.argsort(owner, kind="stable")
     src_o, dst_o = src[order], dst[order]
+    weighted = graph.weight is not None
+    w_o = (np.asarray(graph.weight[: graph.n_edges], np.float32)[order]
+           if weighted else None)
     bounds = np.searchsorted(owner[order], np.arange(n_shards + 1))
     sink_sb = graph.n_nodes // block_v             # global source block
     per_shard = []
@@ -551,7 +566,8 @@ def partition_graph(graph: Graph, n_shards: int, *,
             src_o[lo:hi], s_dst, nb_local, bps, block_e,
             sink_src=graph.n_nodes, sink_dst=shard_rows,
             src_block=src_o[lo:hi] // block_v,     # GLOBAL source block
-            sink_src_block=sink_sb))
+            sink_src_block=sink_sb,
+            payload=w_o[lo:hi] if weighted else None))
     eb_max = max(p[2].shape[0] for p in per_shard)
     out_src = np.full((n_shards, eb_max * block_e), graph.n_nodes, np.int32)
     out_dst = np.full((n_shards, eb_max * block_e), shard_rows, np.int32)
@@ -559,26 +575,32 @@ def partition_graph(graph: Graph, n_shards: int, *,
     out_nb = np.full((n_shards, eb_max), bps - 1, np.int32)
     out_sb = np.full((n_shards, eb_max), sink_sb, np.int32)
     out_first = np.zeros((n_shards, eb_max), np.int32)
-    for s, (a_src, a_dst, a_nb, a_sb, a_first) in enumerate(per_shard):
+    out_w = (np.zeros((n_shards, eb_max * block_e), np.float32)
+             if weighted else None)
+    for s, (a_src, a_dst, a_nb, a_sb, a_first, a_w) in enumerate(per_shard):
         out_src[s, : a_src.shape[0]] = a_src
         out_dst[s, : a_dst.shape[0]] = a_dst
         out_nb[s, : a_nb.shape[0]] = a_nb
         out_sb[s, : a_sb.shape[0]] = a_sb
         out_first[s, : a_first.shape[0]] = a_first
+        if weighted:
+            out_w[s, : a_w.shape[0]] = a_w
     shards = ShardedCSCLayout(
         src=jnp.asarray(out_src), dst=jnp.asarray(out_dst),
         block_nb=jnp.asarray(out_nb), block_sb=jnp.asarray(out_sb),
         block_first=jnp.asarray(out_first),
         block_v=int(block_v), block_e=int(block_e),
         blocks_per_shard=int(bps), n_edge_blocks=int(eb_max),
-        n_shards=int(n_shards), n_nodes=int(graph.n_nodes))
+        n_shards=int(n_shards), n_nodes=int(graph.n_nodes),
+        weight=jnp.asarray(out_w) if weighted else None)
     return PartitionedGraph(
         indptr=graph.indptr, indices=graph.indices, degree=graph.degree,
         shards=shards, n_nodes=graph.n_nodes, n_edges=graph.n_edges,
         max_degree=graph.max_degree,
         exchange_budget=_resolve_exchange_budget(
             shard_rows, block_v, exchange_budget),
-        exchange_budget_auto=budget_auto)
+        exchange_budget_auto=budget_auto,
+        weight=graph.weight if weighted else None)
 
 
 def gather_graph(pg: PartitionedGraph) -> Graph:
@@ -599,7 +621,9 @@ def gather_graph(pg: PartitionedGraph) -> Graph:
     counts = np.diff(indptr)[: pg.n_nodes]
     src = np.repeat(np.arange(pg.n_nodes, dtype=np.int64), counts)
     dst = np.asarray(pg.indices, dtype=np.int64)[: pg.n_edges]
-    return build_graph(src, dst, pg.n_nodes)
+    weight = (None if pg.weight is None
+              else np.asarray(pg.weight, np.float32)[: pg.n_edges])
+    return build_graph(src, dst, pg.n_nodes, weight=weight)
 
 
 def repartition(pg: PartitionedGraph, n_shards: int, *,

@@ -43,14 +43,17 @@ import jax.numpy as jnp
 
 from .bfs import (BidirResult, bfs_sssp_batched, bfs_sssp_batched_sharded,
                   bidirectional_bfs_batched,
-                  bidirectional_bfs_batched_sharded)
+                  bidirectional_bfs_batched_sharded, delta_sssp_batched,
+                  delta_sssp_batched_sharded)
 from .graph import Graph
 from .partition import PartitionedGraph, axis_tuple
 
 __all__ = ["PathSample", "ForwardSample", "sample_pair", "sample_pairs",
            "sample_path", "sample_path_batched",
            "sample_path_batched_sharded", "sample_path_forward_batched",
-           "sample_path_forward_batched_sharded", "sample_batch"]
+           "sample_path_forward_batched_sharded",
+           "sample_path_weighted_batched",
+           "sample_path_weighted_batched_sharded", "sample_batch"]
 
 _NEG_INF = -1e30
 _CHUNK = 128  # matches Graph pad_to; guarantees in-bounds dynamic slices
@@ -244,12 +247,16 @@ class ForwardSample(NamedTuple):
     columns and the drawn sources — the extra state that closeness /
     harmonic estimators consume (``repro.core.estimators``).  ``dist``
     rides at the BFS state's native row count (csc.v_pad when a CSC
-    layout is persisted, V+1 otherwise); consumers slice to V+1.
+    layout is persisted, V+1 otherwise); consumers slice to V+1.  On
+    the WEIGHTED stream (``sample_path_weighted_batched``) ``dist`` is
+    float32 (true weighted distances, sentinels -1.0/-3.0 — the
+    estimators' ``d >= 0`` reachability tests hold for both dtypes) and
+    ``length`` is the drawn path's EDGE count (hops), not its weight.
     """
     contrib: jax.Array   # (B, V+1) float32 — internal path-vertex marks
     valid: jax.Array     # (B,) bool — s,t connected
-    length: jax.Array    # (B,) int32 — d(s,t), -1 if invalid
-    dist: jax.Array      # (rows, B) int32 — dist from s (full SSSP)
+    length: jax.Array    # (B,) int32 — path edge count, -1 if invalid
+    dist: jax.Array      # (rows, B) int32|float32 — dist from s (full SSSP)
     sources: jax.Array   # (B,) int32 — the drawn s
     # (2,) int32 exchange tally from the sharded BFS; None otherwise
     exchange: Optional[jax.Array] = None
@@ -323,6 +330,145 @@ def sample_path_forward_batched_sharded(pg: PartitionedGraph, key,
 
     out = _finish_forward_paths(pg, k_walk, s, t, gather(res.dist),
                                 gather(res.sigma), batch)
+    return out._replace(exchange=res.exchange)
+
+
+def _sample_predecessor_weighted(graph, key, v, tv, dist, sigma):
+    """Draw u ~ sigma[u] * [dist[u] + w(u,v) == tv] among neighbors of v.
+
+    The weighted twin of :func:`_sample_predecessor`: the DAG-membership
+    test is the exact float equality of the delta-stepping lane (the
+    same predicate ``dag_sigma_batched_ref`` counted paths with, so the
+    draw weights are consistent with sigma by construction).  ``dist``
+    is the PUBLIC float encoding — the ``dn >= 0`` guard keeps the
+    -1.0/-3.0 sentinel rows out of the arithmetic.  The CSR neighbor
+    chunks slice ``graph.weight`` alongside ``graph.indices``: CSR
+    order IS the COO/weight order (build_graph's stable sort), so slot
+    j of a chunk pairs neighbor ``indices[start+j]`` with its edge's
+    weight.  Returns -1 when v has no predecessor (only possible on
+    corrupt state; the walk guards on it).
+    """
+    start = graph.indptr[v]
+    deg = graph.degree[v]
+    n_chunks = (deg + _CHUNK - 1) // _CHUNK
+
+    def body(i, carry):
+        wsum, chosen, key = carry
+        key, k_in, k_acc = jax.random.split(key, 3)
+        nbr = jax.lax.dynamic_slice(graph.indices, (start + i * _CHUNK,),
+                                    (_CHUNK,))
+        ew = jax.lax.dynamic_slice(graph.weight, (start + i * _CHUNK,),
+                                   (_CHUNK,))
+        valid = jnp.arange(_CHUNK) < (deg - i * _CHUNK)
+        dn = dist[nbr]
+        w = jnp.where(valid & (dn >= 0.0) & (dn + ew == tv), sigma[nbr], 0.0)
+        wc = jnp.sum(w)
+        logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), _NEG_INF)
+        cand = nbr[_gumbel_argmax(k_in, logw)]
+        accept_p = jnp.where(wc > 0, wc / jnp.maximum(wsum + wc, 1e-30), 0.0)
+        take = jax.random.uniform(k_acc) < accept_p
+        chosen = jnp.where(take, cand, chosen)
+        return wsum + wc, chosen, key
+
+    _, chosen, _ = jax.lax.fori_loop(
+        0, n_chunks, body, (jnp.float32(0.0), jnp.int32(-1), key))
+    return chosen
+
+
+def _walk_to_source_weighted(graph, key, start_node, dist, sigma, contrib):
+    """Walk from ``start_node`` down the shortest-path DAG to the
+    source (dist 0.0), marking the strictly internal vertices (every
+    stop except the start node and the source).  Levels are gone — the
+    loop walks on distances (``tv`` strictly decreases every step:
+    positive weights) and counts hops; the V+1 step cap only bites on
+    corrupt state (so does the ``u >= 0`` no-predecessor guard, which
+    aborts the walk instead of looping).  Returns (contrib, hops).
+    """
+    tv0 = jnp.maximum(dist[start_node], 0.0)
+
+    def cond(carry):
+        _v, tv, steps, _key, _contrib = carry
+        return (tv > 0.0) & (steps <= graph.n_nodes)
+
+    def body(carry):
+        v, tv, steps, key, contrib = carry
+        key, k = jax.random.split(key)
+        u = _sample_predecessor_weighted(graph, k, v, tv, dist, sigma)
+        u_ok = u >= 0
+        u_c = jnp.maximum(u, 0)
+        du = jnp.where(u_ok, dist[u_c], 0.0)
+        contrib = contrib.at[u_c].add(
+            jnp.where(u_ok & (du > 0.0), 1.0, 0.0))
+        return (jnp.where(u_ok, u_c, v), jnp.where(u_ok, du, 0.0),
+                steps + 1, key, contrib)
+
+    _, _, steps, _, contrib = jax.lax.while_loop(
+        cond, body, (start_node, tv0, jnp.int32(0), key, contrib))
+    return contrib, steps
+
+
+def _finish_weighted_paths(graph, k_walk, s, t, dist, sigma,
+                           batch: int) -> ForwardSample:
+    """Backward DAG walk from t over a completed weighted SSSP state —
+    the weighted twin of :func:`_finish_forward_paths` (same telescoping
+    argument: predecessor draws proportional to sigma select each
+    weighted shortest s-t path with probability 1 / sigma(t))."""
+    v1 = graph.n_nodes + 1
+    d = dist[t, jnp.arange(batch)]                              # (B,) f32
+    valid = d > 0.0
+    contrib = jnp.zeros((batch, v1), jnp.float32)
+    walk = jax.vmap(_walk_to_source_weighted, in_axes=(None, 0, 0, 1, 1, 0))
+    contrib, steps = walk(graph, jax.random.split(k_walk, batch), t,
+                          dist, sigma, contrib)
+    contrib = contrib.at[:, graph.n_nodes].set(0.0)
+    return ForwardSample(contrib, valid, jnp.where(valid, steps, -1),
+                         dist, s)
+
+
+def sample_path_weighted_batched(graph: Graph, key,
+                                 batch: int) -> ForwardSample:
+    """Take ``batch`` samples through the WEIGHTED forward stream.
+
+    One batched delta-stepping SSSP per round (``delta_sssp_batched``,
+    default bucket width), then one backward DAG walk per sample —
+    uniform over each pair's weighted shortest paths.  The key layout
+    matches the unweighted forward stream exactly, and the pair draw
+    never touches the weights: the same key draws the same (s, t)
+    sequence whatever the weights are (the seed-contract invariance
+    the property suite pins).
+    """
+    if graph.weight is None:
+        raise ValueError(
+            "sample_path_weighted_batched needs per-edge weights; attach "
+            "them with repro.core.graph.with_weights(graph, w)")
+    k_pair, k_walk = jax.random.split(key)
+    s, t = sample_pairs(k_pair, graph.n_nodes, batch)
+    res = delta_sssp_batched(graph, s)
+    return _finish_weighted_paths(graph, k_walk, s, t, res.dist, res.sigma,
+                                  batch)
+
+
+def sample_path_weighted_batched_sharded(pg: PartitionedGraph, key,
+                                         batch: int, *, axis
+                                         ) -> ForwardSample:
+    """Sharded twin of :func:`sample_path_weighted_batched` — call
+    inside shard_map with the key replicated across the shard axis.
+    The delta-stepping SSSP runs with sharded state end-to-end (bucket
+    exchange per round); dist/sigma are all-gathered once after it
+    converges and the walks read the partition's replicated CSR view
+    (``pg.indptr``/``indices``/``degree``/``weight``) exactly like the
+    unweighted forward lane — stream-identical draws on the same key.
+    """
+    axis = axis_tuple(axis)
+    k_pair, k_walk = jax.random.split(key)
+    s, t = sample_pairs(k_pair, pg.n_nodes, batch)
+    res = delta_sssp_batched_sharded(pg, s, axis=axis)
+
+    def gather(x):
+        return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+
+    out = _finish_weighted_paths(pg, k_walk, s, t, gather(res.dist),
+                                 gather(res.sigma), batch)
     return out._replace(exchange=res.exchange)
 
 

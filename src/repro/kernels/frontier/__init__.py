@@ -3,18 +3,25 @@ from .kernel import (edge_bitmap_from_source_bits, frontier_block_bitmap,
                      frontier_expand_node_blocked_pallas,
                      frontier_expand_pallas, frontier_row_mask,
                      frontier_source_block_bitmap)
-from .ops import (choose_csc_blocks, frontier_expand, node_blocked_supported,
-                  pallas_supported, select_route, sharded_supported)
-from .ref import (frontier_expand_batched_ref,
+from .ops import (choose_csc_blocks, frontier_expand, frontier_relax,
+                  node_blocked_supported, pallas_supported, select_route,
+                  sharded_supported)
+from .ref import (dag_sigma_batched_ref, dag_sigma_sharded_ref,
+                  frontier_expand_batched_ref,
                   frontier_expand_node_blocked_ref, frontier_expand_ref,
-                  frontier_expand_sharded_ref)
+                  frontier_expand_sharded_ref, frontier_relax_batched_ref,
+                  frontier_relax_node_blocked_ref,
+                  frontier_relax_sharded_ref)
 
-__all__ = ["choose_csc_blocks", "edge_bitmap_from_source_bits",
+__all__ = ["choose_csc_blocks", "dag_sigma_batched_ref",
+           "dag_sigma_sharded_ref", "edge_bitmap_from_source_bits",
            "frontier_block_bitmap", "frontier_expand",
            "frontier_expand_batched_pallas", "frontier_expand_batched_ref",
            "frontier_expand_node_blocked_pallas",
            "frontier_expand_node_blocked_ref", "frontier_expand_pallas",
            "frontier_expand_ref", "frontier_expand_sharded_ref",
+           "frontier_relax", "frontier_relax_batched_ref",
+           "frontier_relax_node_blocked_ref", "frontier_relax_sharded_ref",
            "frontier_row_mask", "frontier_source_block_bitmap",
            "node_blocked_supported", "pallas_supported", "select_route",
            "sharded_supported"]

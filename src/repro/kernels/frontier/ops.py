@@ -90,7 +90,8 @@ from .kernel import (DEFAULT_BLOCK_E, frontier_block_bitmap,
                      frontier_expand_pallas)
 from .ref import (frontier_expand_batched_ref,
                   frontier_expand_node_blocked_ref, frontier_expand_ref,
-                  frontier_expand_sharded_ref)
+                  frontier_expand_sharded_ref, frontier_relax_batched_ref,
+                  frontier_relax_sharded_ref)
 
 # dist(4B) + sigma(4B) + contrib(4B) per (vertex, sample) cell, 16 MiB
 # VMEM, ~25% headroom
@@ -190,7 +191,8 @@ def choose_csc_blocks(n_nodes: int, batch: int = 16, *,
 
 def select_route(n_nodes: int, e_pad: int, batch: int, *, csc=None,
                  shard=None, use_pallas=None, interpret: bool = True,
-                 block_e: int = DEFAULT_BLOCK_E) -> str:
+                 block_e: int = DEFAULT_BLOCK_E,
+                 weighted: bool = False) -> str:
     """The dispatch decision of :func:`frontier_expand`, as a pure
     function of static shapes/flags: one of "flat", "node_blocked",
     "ref", "sharded_nb", "sharded_ref".  Raises ``ValueError`` when a
@@ -206,7 +208,24 @@ def select_route(n_nodes: int, e_pad: int, batch: int, *, csc=None,
     automatic dispatch picks the kernel exactly like the replicated
     routes: on compiled TPU backends when :func:`sharded_supported`
     accepts the shard's blocking, the XLA ref otherwise/interpreted.
+
+    ``weighted`` selects the min-plus relaxation workload
+    (:func:`frontier_relax`) instead of the one-hot expansion.  The
+    Pallas kernels implement only the first-touch expansion semantics,
+    so the weighted workload is XLA-only for now: the automatic
+    dispatch and ``use_pallas=False`` return the reference lanes
+    ("ref" / "sharded_ref"), and FORCING a Pallas lane
+    (``use_pallas=True`` or ``'node_blocked'``) raises the loud
+    forced-lane error — pinned route by route in
+    tests/test_weighted.py.
     """
+    if weighted:
+        if use_pallas in (True, "node_blocked"):
+            raise ValueError(
+                "the weighted min-plus relaxation has no Pallas lane: "
+                f"use_pallas={use_pallas!r} cannot be honored; use "
+                "use_pallas=None or False (XLA segment-min reference)")
+        return "sharded_ref" if shard is not None else "ref"
     if shard is not None:
         sh_ok = sharded_supported(shard, batch)
         if use_pallas is None:
@@ -322,3 +341,32 @@ def frontier_expand(src, dst, dist, sigma, level, *, csc=None, shard=None,
     if batched:
         return frontier_expand_batched_ref(src, dst, dist, sigma, level)
     return frontier_expand_ref(src, dst, dist, sigma, level)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def frontier_relax(src, dst, weight, tent, active, *, csc=None, shard=None,
+                   use_pallas=None, interpret=None):
+    """Route one batched min-plus relaxation round (the weighted-lane
+    sibling of :func:`frontier_expand`).
+
+    ``tent`` is the (rows, B) float32 tentative-distance state (+inf
+    unreached), ``active`` the (rows, B) bool relax mask — this
+    delta-stepping round's bucket membership.  Returns per-destination
+    candidate distances (empty minimum = +inf); the caller folds
+    ``min(tent, cand)``.  With ``shard=`` the sharded route relaxes one
+    shard's local rows from the all-gathered state, reading the shard's
+    own bucketed weight column (``src``/``dst``/``weight`` operands are
+    ignored there, matching :func:`frontier_expand`'s shard contract).
+    Routing is :func:`select_route` with ``weighted=True``: XLA lanes
+    only — forcing a Pallas lane raises the loud forced-lane error at
+    trace time.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    batch = tent.shape[1]
+    route = select_route(tent.shape[0] - 1, src.shape[0], batch, csc=csc,
+                         shard=shard, use_pallas=use_pallas,
+                         interpret=interpret, weighted=True)
+    if route == "sharded_ref":
+        return frontier_relax_sharded_ref(shard, tent, active)
+    return frontier_relax_batched_ref(src, dst, weight, tent, active)

@@ -79,3 +79,94 @@ def frontier_expand_node_blocked_ref(csc, dist, sigma, levels):
     out = jax.ops.segment_sum(vals, csc.dst,
                               num_segments=max(csc.v_pad, rows))
     return out if rows >= csc.v_pad else out[:rows]
+
+
+# ---------------------------------------------------------------------------
+# Weighted lane oracles: min-plus relaxation + shortest-path-DAG sigma
+# ---------------------------------------------------------------------------
+#
+# Contract (one delta-stepping relaxation round, batched over B samples,
+# vertex-major float32 tentative distances with +inf for unreached):
+#
+#     cand[v, b] = min_{e: dst[e] == v, active[src[e], b]}
+#                      tent[src[e], b] + weight[e]
+#
+# (empty minimum = +inf — the caller folds ``min(tent, cand)``).  The
+# min is exactly commutative/associative in floating point, so unlike
+# the segment-SUM expansion the result is independent of edge order:
+# every lane (COO / node-blocked / sharded) is bitwise identical by
+# construction, which is what makes the cross-lane and Dijkstra-oracle
+# parity in tests/test_weighted.py a bit-for-bit assertion.
+#
+# The sigma oracles compute one fixed-point sweep of shortest-path-DAG
+# path counts: edge e is on the DAG iff ``tent[src[e]] + weight[e] ==
+# tent[dst[e]]`` with ``tent[src[e]]`` finite (exact float equality —
+# meaningful because the weighted drivers quantize to exactly
+# representable weights; see graph.with_weights).  This IS a segment
+# sum, in the same edge order as the BFS expansion refs, which is what
+# the integer-weight delta=1 degeneracy tests pin bitwise against the
+# BFS lane.
+
+def frontier_relax_batched_ref(src, dst, weight, tent, active):
+    """COO min-plus relaxation: (E,) edges against (rows, B) state.
+
+    ``active`` is the (rows, B) bool relax mask (this round's bucket
+    membership); inactive or sink sources contribute +inf.
+    """
+    vals = jnp.where(active[src, :], tent[src, :] + weight[:, None],
+                     jnp.inf)
+    return jax.ops.segment_min(vals, dst, num_segments=tent.shape[0])
+
+
+def frontier_relax_node_blocked_ref(csc, tent, active):
+    """Node-blocked min-plus relaxation over the CSC edge order.
+
+    Reads the layout's own bucketed ``csc.weight`` column (pad slots
+    0.0 — inert because padded sink edges never have an active source).
+    Padded in -> padded out, same shape contract as the expansion ref.
+    """
+    rows = tent.shape[0]
+    vals = jnp.where(active[csc.src, :],
+                     tent[csc.src, :] + csc.weight[:, None], jnp.inf)
+    out = jax.ops.segment_min(vals, csc.dst,
+                              num_segments=max(csc.v_pad, rows))
+    return out if rows >= csc.v_pad else out[:rows]
+
+
+def frontier_relax_sharded_ref(shard, tent, active):
+    """Sharded min-plus relaxation: one shard's destination rows from
+    the all-gathered (v_pad, B) tentative distances + relax mask.
+    ``shard`` is a ``ShardedCSCLayout.local()`` view carrying its own
+    bucketed weight column; returns the (shard_rows, B) local
+    candidate tile."""
+    vals = jnp.where(active[shard.src, :],
+                     tent[shard.src, :] + shard.weight[:, None], jnp.inf)
+    return jax.ops.segment_min(vals, shard.dst, num_segments=shard.v_pad)
+
+
+def dag_sigma_batched_ref(src, dst, weight, tent, sigma):
+    """One sweep of shortest-path-DAG path counting over the COO edges.
+
+    ``tent`` is the converged (rows, B) float32 distance state (+inf
+    unreached); returns the per-destination sum of predecessor sigma
+    over on-DAG edges.  The caller pins source rows to 1 and iterates
+    to the fixed point.
+    """
+    on_dag = ((tent[src, :] + weight[:, None] == tent[dst, :])
+              & jnp.isfinite(tent[src, :]))
+    vals = jnp.where(on_dag, sigma[src, :], 0.0)
+    return jax.ops.segment_sum(vals, dst, num_segments=tent.shape[0])
+
+
+def dag_sigma_sharded_ref(shard, tent_global, sigma_global, tent_local):
+    """Sharded DAG-sigma sweep: local destination rows from the
+    all-gathered distance/sigma state.  ``tent_local`` is this shard's
+    (shard_rows, B) slice (the destination side of the DAG-membership
+    test); padded slots (``dst == shard_rows``) are clamped for the
+    gather and then dropped by the segment sum."""
+    dst_c = jnp.clip(shard.dst, 0, tent_local.shape[0] - 1)
+    t_u = tent_global[shard.src, :]
+    on_dag = ((t_u + shard.weight[:, None] == tent_local[dst_c, :])
+              & jnp.isfinite(t_u))
+    vals = jnp.where(on_dag, sigma_global[shard.src, :], 0.0)
+    return jax.ops.segment_sum(vals, shard.dst, num_segments=shard.v_pad)

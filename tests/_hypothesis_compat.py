@@ -5,12 +5,27 @@ When ``hypothesis`` is installed this re-exports the real ``given`` /
 property tests are individually skipped at collection time instead of
 erroring the whole module — the deterministic shape-sweep tests in the
 same files keep running.
+
+The silent skip is only acceptable on environments that genuinely lack
+the package.  Jobs that are SUPPOSED to run the property suites set
+``REPRO_REQUIRE_HYPOTHESIS=1`` (see ci.yml's property step): with that
+flag an ImportError becomes a hard failure instead of a quiet all-skip,
+so a broken install can never rot into "the properties passed" when
+they never executed.
 """
+import os
+
 try:
     from hypothesis import given, settings, strategies as st  # noqa: F401
 
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - exercised only without hypothesis
+    if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+        raise ImportError(
+            "REPRO_REQUIRE_HYPOTHESIS is set but hypothesis is not "
+            "importable — this job requires the property suites to "
+            "actually execute, not skip") from None
+
     import pytest
 
     HAVE_HYPOTHESIS = False

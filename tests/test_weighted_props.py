@@ -1,0 +1,172 @@
+"""Property-based invariants of the weighted (delta-stepping) lane.
+
+Three families, each a structural fact the oracle battery in
+tests/test_weighted.py cannot pin by example alone:
+
+  * TRIANGLE INEQUALITY — for every directed edge (u, v, w) and every
+    source, d(v) <= d(u) + w, asserted EXACTLY: dyadic weights make
+    every f32 path sum exact, so a single ULP of slack would be a bug,
+    not noise.
+  * DELTA INVARIANCE — the window width is a scheduling knob, never a
+    semantics knob: distances and path counts are bit-identical across
+    deltas (including inf = Bellman-Ford), while the bucket count
+    equals the number of distinct occupied windows minus one — the
+    driver's window ladder jumps to exactly the occupied windows of
+    the final distance profile, no more.
+  * SEED CONTRACT — the weighted sampler's (s, t) pair draw consumes
+    the same key stream as the unweighted forward draw and is weight-
+    independent: re-weighting a graph permutes path shapes but never
+    which sources a key selects (the engine's reproducibility contract
+    across weightings).
+
+The module uses the shared optional-hypothesis shim: without
+``hypothesis`` the property tests skip individually (and hard-fail
+instead when ``REPRO_REQUIRE_HYPOTHESIS`` is set, as in ci.yml's
+property step); the deterministic spot checks at the bottom always run.
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import (build_graph, sample_path_weighted_batched,
+                        symmetric_dyadic_weights, with_weights)
+from repro.core.bfs import delta_sssp_batched
+
+
+def _random_connected_weighted(n, m, seed, *, wseed=None):
+    """Deduped symmetric graph with a ring backbone (always connected)
+    and dyadic k/16 weights — the exact-f32 regime of the oracle suite."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, n, 3 * m)
+    b = rng.integers(0, n, 3 * m)
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    keep = lo != hi
+    rnd = np.unique(np.stack([lo[keep], hi[keep]], axis=1), axis=0)[:m]
+    ring = np.stack([np.arange(n), (np.arange(n) + 1) % n], axis=1)
+    allp = np.concatenate([rnd, np.sort(ring, axis=1)])
+    pairs = np.unique(allp, axis=0)
+    src = np.concatenate([pairs[:, 0], pairs[:, 1]])
+    dst = np.concatenate([pairs[:, 1], pairs[:, 0]])
+    g = build_graph(src, dst, n)
+    return with_weights(g, symmetric_dyadic_weights(
+        g, seed=seed if wseed is None else wseed))
+
+
+def _finite_dist(res, n):
+    """(n, B) float64 with +inf at the -1 unreached sentinel."""
+    d = np.asarray(res.dist[:n], np.float64)
+    return np.where(d < 0.0, np.inf, d)
+
+
+# ---------------------------------------------------------------------------
+# triangle inequality
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(5, 24), m=st.integers(4, 40), seed=st.integers(0, 999))
+def test_prop_triangle_inequality(n, m, seed):
+    g = _random_connected_weighted(n, m, seed)
+    sources = jnp.asarray([0, n // 2, n - 1], jnp.int32)
+    res = jax.jit(delta_sssp_batched)(g, sources)
+    d = _finite_dist(res, n)                              # (n, B)
+    srcs = np.asarray(g.src[: g.n_edges])
+    dsts = np.asarray(g.dst[: g.n_edges])
+    ws = np.asarray(g.weight[: g.n_edges], np.float64)
+    # exact: dyadic weights, path sums exact in f32, no tolerance
+    assert np.all(d[dsts] <= d[srcs] + ws[:, None])
+
+
+# ---------------------------------------------------------------------------
+# delta invariance + bucket/window accounting
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(6, 20), m=st.integers(4, 30), seed=st.integers(0, 999),
+       delta_num=st.integers(1, 64))
+def test_prop_delta_invariance(n, m, seed, delta_num):
+    """Any window width yields the same bits; bucket advances count the
+    distinct occupied windows of the final distance profile."""
+    g = _random_connected_weighted(n, m, seed)
+    sources = jnp.asarray([0, n - 1], jnp.int32)
+    delta = float(delta_num) / 16.0                       # dyadic widths
+    base = jax.jit(delta_sssp_batched)(g, sources)
+    alt = jax.jit(partial(delta_sssp_batched, delta=delta))(g, sources)
+    inf = jax.jit(partial(delta_sssp_batched,
+                          delta=float("inf")))(g, sources)
+    for other in (alt, inf):
+        np.testing.assert_array_equal(np.asarray(other.dist),
+                                      np.asarray(base.dist))
+        np.testing.assert_array_equal(np.asarray(other.sigma),
+                                      np.asarray(base.sigma))
+        np.testing.assert_array_equal(np.asarray(other.levels),
+                                      np.asarray(base.levels))
+
+    d = _finite_dist(alt, n)
+    for j in range(d.shape[1]):
+        fin = d[:, j][np.isfinite(d[:, j])]
+        occupied = np.unique(np.floor(fin / delta))
+        assert int(np.asarray(alt.buckets)[j]) == len(occupied) - 1
+    np.testing.assert_array_equal(np.asarray(inf.buckets),
+                                  np.zeros(2, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# seed contract: the pair draw is weight-independent
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 24), m=st.integers(6, 30), seed=st.integers(0, 999),
+       wseed_a=st.integers(0, 99), wseed_b=st.integers(100, 199))
+def test_prop_weight_permutation_seed_contract(n, m, seed, wseed_a, wseed_b):
+    ga = _random_connected_weighted(n, m, seed, wseed=wseed_a)
+    gb = _random_connected_weighted(n, m, seed, wseed=wseed_b)
+    key = jax.random.PRNGKey(seed)
+    sa = jax.jit(partial(sample_path_weighted_batched, batch=6))(ga, key)
+    sb = jax.jit(partial(sample_path_weighted_batched, batch=6))(gb, key)
+    # same key, same topology, different weights: identical (s, t) draws
+    np.testing.assert_array_equal(np.asarray(sa.sources),
+                                  np.asarray(sb.sources))
+    # and the walks are still well-formed under both weightings
+    for s in (sa, sb):
+        length = np.asarray(s.length)
+        assert np.all(length[np.asarray(s.valid)] >= 1)
+
+
+# ---------------------------------------------------------------------------
+# deterministic spot checks (always run, hypothesis or not)
+# ---------------------------------------------------------------------------
+
+def test_triangle_inequality_spot():
+    g = _random_connected_weighted(18, 25, seed=4)
+    res = jax.jit(delta_sssp_batched)(g, jnp.asarray([0, 9], jnp.int32))
+    d = _finite_dist(res, 18)
+    srcs = np.asarray(g.src[: g.n_edges])
+    dsts = np.asarray(g.dst[: g.n_edges])
+    ws = np.asarray(g.weight[: g.n_edges], np.float64)
+    assert np.all(d[dsts] <= d[srcs] + ws[:, None])
+
+
+def test_delta_invariance_spot():
+    g = _random_connected_weighted(14, 20, seed=8)
+    sources = jnp.asarray([0, 13], jnp.int32)
+    base = jax.jit(delta_sssp_batched)(g, sources)
+    alt = jax.jit(partial(delta_sssp_batched, delta=0.75))(g, sources)
+    np.testing.assert_array_equal(np.asarray(alt.dist),
+                                  np.asarray(base.dist))
+    np.testing.assert_array_equal(np.asarray(alt.sigma),
+                                  np.asarray(base.sigma))
+
+
+def test_shim_exports_consistent():
+    """The shim's flag matches what it handed us (guards the strict-mode
+    wiring: a job that sets REPRO_REQUIRE_HYPOTHESIS can never reach
+    here with the stub decorators)."""
+    if HAVE_HYPOTHESIS:
+        import hypothesis
+        assert given is hypothesis.given
+    else:
+        import os
+        assert not os.environ.get("REPRO_REQUIRE_HYPOTHESIS")
